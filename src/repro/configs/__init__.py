@@ -1,0 +1,28 @@
+"""Config registry: assigned architecture ids -> ModelConfig."""
+from repro.configs import (
+    tinyllama_1_1b, whisper_tiny, qwen2_5_14b, kimi_k2_1t_a32b,
+    llava_next_mistral_7b, xlstm_125m, qwen2_moe_a2_7b, zamba2_2_7b,
+    granite_8b, phi3_mini_3_8b, llama3_8b,
+)
+
+_MODULES = {
+    "tinyllama-1.1b": tinyllama_1_1b,
+    "whisper-tiny": whisper_tiny,
+    "qwen2.5-14b": qwen2_5_14b,
+    "kimi-k2-1t-a32b": kimi_k2_1t_a32b,
+    "llava-next-mistral-7b": llava_next_mistral_7b,
+    "xlstm-125m": xlstm_125m,
+    "qwen2-moe-a2.7b": qwen2_moe_a2_7b,
+    "zamba2-2.7b": zamba2_2_7b,
+    "granite-8b": granite_8b,
+    "phi3-mini-3.8b": phi3_mini_3_8b,
+    "llama3-8b": llama3_8b,
+}
+
+ASSIGNED = [k for k in _MODULES if k != "llama3-8b"]
+ALL = list(_MODULES)
+
+
+def get_config(name: str, reduced: bool = False):
+    mod = _MODULES[name]
+    return mod.REDUCED if reduced else mod.CONFIG

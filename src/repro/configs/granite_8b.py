@@ -1,0 +1,15 @@
+"""granite-8b [dense] — llama-arch, code [arXiv:2405.04324]."""
+from repro.models.base import ModelConfig, FastForwardConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b", arch="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=49152, rope_theta=10000.0,
+    ff=FastForwardConfig(enabled=True),
+    param_dtype="bfloat16", source="arXiv:2405.04324",
+)
+
+REDUCED = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    vocab=512, param_dtype="float32", remat=False,
+).with_ff(block_size=32, tile=64)

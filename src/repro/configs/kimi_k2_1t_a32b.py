@@ -1,0 +1,20 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE, 384e top-8
+[arXiv:2501.kimi2]. Experts shard over the data axis (DESIGN.md §5);
+trains with Adafactor (Adam moments for 1T params would not fit)."""
+from repro.models.base import ModelConfig, FastForwardConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b", arch="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=0, vocab=163840,
+    n_experts=384, top_k=8, n_shared_experts=1, d_ff_expert=2048,
+    optimizer="adafactor",
+    ff=FastForwardConfig(enabled=True),
+    param_dtype="bfloat16", source="arXiv:2501.kimi2",
+)
+
+REDUCED = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=0,
+    vocab=512, n_experts=4, top_k=2, n_shared_experts=1, d_ff_expert=128,
+    param_dtype="float32", remat=False, optimizer="adamw",
+).with_ff(block_size=32, tile=64)

@@ -1,0 +1,17 @@
+"""llama3-8b — the paper's own evaluation model (Llama-3.1-8B-Instruct
+geometry, Grattafiori et al. 2024). Not part of the assigned pool; used
+by the paper-claim benchmarks (FLOPs crossover at ~28K, Fig. 7)."""
+from repro.models.base import ModelConfig, FastForwardConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b", arch="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=128256, rope_theta=500000.0,
+    ff=FastForwardConfig(enabled=True),
+    param_dtype="bfloat16", source="arXiv:2407.21783",
+)
+
+REDUCED = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    vocab=512, param_dtype="float32", remat=False,
+).with_ff(block_size=32, tile=64)

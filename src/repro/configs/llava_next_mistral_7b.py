@@ -1,0 +1,19 @@
+"""llava-next-mistral-7b [vlm] — anyres tiling, vision tower stubbed
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]. Mistral backbone keeps its
+native sliding window (4096)."""
+from repro.models.base import ModelConfig, FastForwardConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b", arch="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=32000, sliding_window=4096,
+    n_patches=2880,  # anyres: 576 base + 4 tiles x 576
+    ff=FastForwardConfig(enabled=True),
+    param_dtype="bfloat16", source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)
+
+REDUCED = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    vocab=512, sliding_window=64, n_patches=32,
+    param_dtype="float32", remat=False,
+).with_ff(block_size=32, tile=64)

@@ -1,0 +1,15 @@
+"""qwen2.5-14b [dense] — GQA, QKV bias [hf:Qwen/Qwen2.5-0.5B]."""
+from repro.models.base import ModelConfig, FastForwardConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b", arch="dense",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=13824, vocab=152064, qkv_bias=True, rope_theta=1000000.0,
+    ff=FastForwardConfig(enabled=True),
+    param_dtype="bfloat16", source="hf:Qwen/Qwen2.5-0.5B",
+)
+
+REDUCED = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    vocab=512, param_dtype="float32", remat=False,
+).with_ff(block_size=32, tile=64)

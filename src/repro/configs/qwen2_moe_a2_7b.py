@@ -1,0 +1,18 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B]."""
+from repro.models.base import ModelConfig, FastForwardConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b", arch="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=0, vocab=151936, qkv_bias=True,
+    n_experts=60, top_k=4, n_shared_experts=4, d_ff_expert=1408,
+    ff=FastForwardConfig(enabled=True),
+    param_dtype="bfloat16", source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+)
+
+REDUCED = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, vocab=512,
+    n_experts=4, top_k=2, n_shared_experts=2, d_ff_expert=128,
+    param_dtype="float32", remat=False,
+).with_ff(block_size=32, tile=64)

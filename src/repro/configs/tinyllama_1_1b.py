@@ -1,0 +1,15 @@
+"""tinyllama-1.1b [dense] — llama2-arch small [arXiv:2401.02385]."""
+from repro.models.base import ModelConfig, FastForwardConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b", arch="dense",
+    n_layers=22, d_model=2048, n_heads=32, n_kv_heads=4,
+    d_ff=5632, vocab=32000, rope_theta=10000.0,
+    ff=FastForwardConfig(enabled=True),
+    param_dtype="bfloat16", source="arXiv:2401.02385",
+)
+
+REDUCED = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+    vocab=512, param_dtype="float32", remat=False,
+).with_ff(block_size=32, tile=64)

@@ -1,0 +1,17 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend stub [arXiv:2212.04356]."""
+from repro.models.base import ModelConfig, FastForwardConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", arch="audio",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab=51865, act="gelu", gated=False, norm="layernorm",
+    n_audio_frames=1500, n_encoder_layers=4,
+    ff=FastForwardConfig(enabled=True),
+    param_dtype="bfloat16", source="arXiv:2212.04356",
+)
+
+REDUCED = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+    vocab=512, n_audio_frames=32, n_encoder_layers=2,
+    param_dtype="float32", remat=False,
+).with_ff(block_size=32, tile=64)

@@ -1,0 +1,16 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517].
+d_ff = 0: no FFN exists, FastForward is inapplicable (DESIGN.md §4)."""
+from repro.models.base import ModelConfig, FastForwardConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m", arch="ssm",
+    n_layers=12, d_model=768, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab=50304, ssm_expand=2, ssm_chunk=128, ssm_conv=4,
+    ff=FastForwardConfig(enabled=False),
+    param_dtype="bfloat16", source="arXiv:2405.04517",
+)
+
+REDUCED = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, vocab=512,
+    ssm_chunk=32, param_dtype="float32", remat=False,
+)

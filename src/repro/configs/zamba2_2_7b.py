@@ -1,0 +1,20 @@
+"""zamba2-2.7b [hybrid] — Mamba2 + shared attention blocks
+[arXiv:2411.15242]. 54 Mamba2 layers; ONE weight-shared attention+MLP
+block applied every 6 layers (9 sites)."""
+from repro.models.base import ModelConfig, FastForwardConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", arch="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=10240, vocab=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_chunk=128,
+    ssm_conv=4, attn_every=6,
+    ff=FastForwardConfig(enabled=True),
+    param_dtype="bfloat16", source="arXiv:2411.15242",
+)
+
+REDUCED = CONFIG.with_(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+    vocab=512, ssm_state=16, ssm_head_dim=16, ssm_chunk=32,
+    attn_every=2, param_dtype="float32", remat=False,
+).with_ff(block_size=32, tile=64)

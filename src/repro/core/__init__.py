@@ -1,0 +1,18 @@
+"""FastForward core: the paper's contribution as composable JAX modules.
+
+- predictor:    expert neuron predictor (§3.2)
+- compensator:  error compensation network (§3.3)
+- scheduler:    layerwise sparsity schedule, Algorithm 1 (§3.4)
+- sparse_ffn:   tile-sparse gated FFN (mask + gather paths)
+- fastforward:  integrated FFN module used by all model definitions
+- distill:      predictor/compensator training (weighted BCE + MSE)
+"""
+from repro.core.fastforward import (  # noqa: F401
+    fastforward_ffn_spec,
+    ff_dense,
+    ff_masked_sequence,
+    ff_block_sparse,
+    ff_decode_sparse,
+    layer_budgets,
+    k_tiles_for,
+)

@@ -1,0 +1,40 @@
+"""Error compensation network (paper §3.3).
+
+A low-rank two-layer FFN (bottleneck r' = d_model/8) running in parallel
+with the sparsified FFN; its output is added to the sparse FFN output.
+Trained by layerwise distillation (MSE against the dense FFN output),
+warm-started with oracle masks before switching to predicted masks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+
+
+def compensator_spec(d_model: int, r: int, dtype=jnp.float32):
+    return {
+        "w1": ParamSpec((d_model, r), ("embed", None), dtype=dtype),
+        # zero-init the output projection: the compensator starts as a
+        # no-op, so an untrained compensator never hurts fidelity.
+        "w2": ParamSpec((r, d_model), (None, "embed"), init="zeros", dtype=dtype),
+    }
+
+
+def compensate(params, x):
+    """Eq. 20: Y_comp = sigma(X W1) W2, per token."""
+    h = jax.nn.relu(
+        jnp.einsum("...d,dr->...r", x, params["w1"],
+                   preferred_element_type=jnp.float32)
+    )
+    y = jnp.einsum("...r,rd->...d", h, params["w2"],
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def compensator_loss(params, x, y_sparse, y_dense):
+    """Eq. 22 layerwise distillation MSE (compensated sparse vs dense)."""
+    y = y_sparse + compensate(params, x)
+    err = (y - y_dense).astype(jnp.float32)
+    return jnp.mean(err * err)

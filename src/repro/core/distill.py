@@ -1,0 +1,105 @@
+"""FastForward distillation: train predictor (weighted BCE) and error
+compensator (layerwise MSE distillation, two-phase: oracle -> predicted
+masks), per paper §3.2–§3.3.
+
+Operates layer-by-layer on FFN inputs harvested from a teacher forward
+pass; optimizer is plain Adam on the predictor/compensator params only
+(the FFN weights are frozen).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ModelConfig
+from repro.core import predictor as P
+from repro.core import compensator as C
+from repro.core import sparse_ffn as S
+from repro.training.optimizer import adam_init, adam_update
+
+
+def oracle_mask(params_ffn, x_block, keep_frac: float, tile: int, act: str):
+    """True top-K tile mask by dense activation norms (paper's oracle).
+    Tile aggregation uses SQUARED norms: dropping tile t costs
+    ~sum_j||h_j||^2 of its neurons, so norm^2-mass is error-optimal."""
+    h = S.ffn_hidden(params_ffn, x_block, act)            # [..., N, F]
+    norms = jnp.sum(h.astype(jnp.float32) ** 2, axis=-2)
+    return S.neuron_mask_from_scores(norms, keep_frac, tile), h
+
+
+def predicted_mask(params, x_block, keep_frac: float, tile: int):
+    # sigmoid before tile aggregation: expected active-neuron mass per
+    # tile (robust to outlier logits; see DESIGN.md tile adaptation)
+    scores = jax.nn.sigmoid(P.neuron_scores(params["pred"], x_block))
+    return S.neuron_mask_from_scores(scores, keep_frac, tile)
+
+
+@functools.partial(jax.jit, static_argnames=("keep_frac", "tile", "act"))
+def distill_step(train_params, opt_state, ffn_params, x_block, step,
+                 *, keep_frac: float, tile: float, act: str, lr=1e-3,
+                 oracle_phase=False):
+    """One distillation step on a batch of blocks x_block [B, N, D].
+
+    train_params = {"pred": ..., "comp": ...}; ffn_params frozen.
+    Returns (train_params, opt_state, metrics).
+    """
+
+    def loss_fn(tp):
+        h = S.ffn_hidden(ffn_params, x_block, act)
+        labels_loss = P.predictor_loss(tp["pred"], x_block, h, keep_frac)
+        # mask for the compensator target
+        norms = jnp.sum(h.astype(jnp.float32) ** 2, axis=-2)
+        m_oracle = S.neuron_mask_from_scores(norms, keep_frac, tile)
+        scores = jax.nn.sigmoid(
+            P.neuron_scores(jax.lax.stop_gradient(tp["pred"]), x_block))
+        m_pred = S.neuron_mask_from_scores(scores, keep_frac, tile)
+        mask = jnp.where(oracle_phase, m_oracle, m_pred)
+        y_dense = S.ffn_dense(ffn_params, x_block, act)
+        y_sparse = S.ffn_masked(ffn_params, x_block, mask[..., None, :], act)
+        comp_loss = C.compensator_loss(tp["comp"], x_block, y_sparse, y_dense)
+        return labels_loss + comp_loss, (labels_loss, comp_loss)
+
+    (loss, (pl, cl)), grads = jax.value_and_grad(loss_fn, has_aux=True)(train_params)
+    train_params, opt_state = adam_update(train_params, grads, opt_state,
+                                          step, lr=lr)
+    return train_params, opt_state, {"loss": loss, "pred_bce": pl, "comp_mse": cl}
+
+
+def train_fastforward_layer(ffn_params, blocks: Iterator, cfg: ModelConfig,
+                            key, steps: int = 200, warmup_frac: float = 0.3,
+                            lr: float = 1e-3):
+    """Train predictor+compensator for one layer on an iterator of
+    [B, N, D] FFN-input blocks. Two-phase per paper: first
+    `warmup_frac*steps` with oracle masks, then predicted masks."""
+    from repro.core.fastforward import fastforward_ffn_spec
+    from repro.nn.param import init_params
+
+    d_ff = ffn_params["wu"].shape[1]
+    spec = fastforward_ffn_spec(cfg, d_ff=d_ff)
+    full = init_params({k: v for k, v in spec.items() if k in ("pred", "comp")}, key)
+    tp = {"pred": full["pred"], "comp": full["comp"]}
+    opt = adam_init(tp)
+    keep = 1.0 - cfg.ff.sparsity
+    warm = int(steps * warmup_frac)
+    hist = []
+    for i in range(steps):
+        x_block = next(blocks)
+        tp, opt, m = distill_step(
+            tp, opt, ffn_params, x_block, jnp.int32(i),
+            keep_frac=keep, tile=cfg.ff.tile, act=cfg.act, lr=lr,
+            oracle_phase=(i < warm))
+        hist.append({k: float(v) for k, v in m.items()})
+    return tp, hist
+
+
+def predictor_agreement(train_params, ffn_params, x_block, keep_frac, tile,
+                        act: str = "silu"):
+    """Fraction of oracle tiles the trained predictor recovers (recall)."""
+    m_o, _ = oracle_mask(ffn_params, x_block, keep_frac, tile, act)
+    m_p = predicted_mask(train_params, x_block, keep_frac, tile)
+    inter = jnp.sum(m_o * m_p, axis=-1)
+    return jnp.mean(inter / jnp.maximum(jnp.sum(m_o, axis=-1), 1.0))

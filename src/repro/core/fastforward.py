@@ -1,0 +1,138 @@
+"""FastForward FFN module: predictor + tile-sparse FFN + compensator.
+
+This is the drop-in replacement for a transformer FFN. All model
+definitions route their FFN through `ff_apply_*` when cfg.ff.enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ModelConfig
+from repro.nn.param import ParamSpec
+from repro.core import predictor as P
+from repro.core import compensator as C
+from repro.core import sparse_ffn as S
+from repro.core import scheduler as SCHED
+
+
+def fastforward_ffn_spec(cfg: ModelConfig, d_ff: Optional[int] = None,
+                         dtype=None):
+    """Spec for one layer's FFN (+ predictor/compensator when enabled)."""
+    d_ff = d_ff or cfg.d_ff
+    dtype = dtype or cfg.dtype
+    sp = S.ffn_spec(cfg.d_model, d_ff, cfg.gated, dtype)
+    if cfg.ff.enabled:
+        sp["pred"] = P.predictor_spec(
+            cfg.d_model, d_ff, cfg.ff.predictor_r(cfg.d_model), dtype)
+        if cfg.ff.use_compensator:
+            sp["comp"] = C.compensator_spec(
+                cfg.d_model, cfg.ff.compensator_r(cfg.d_model), dtype)
+    return sp
+
+
+def _compensate(params, cfg: ModelConfig, x, y):
+    if cfg.ff.enabled and cfg.ff.use_compensator and "comp" in params:
+        return y + C.compensate(params["comp"], x)
+    return y
+
+
+def ff_dense(params, cfg: ModelConfig, x):
+    return S.ffn_dense(params, x, cfg.act)
+
+
+# ------------------------------------------------- full-sequence (mask)
+
+
+def ff_masked_sequence(params, cfg: ModelConfig, x, keep_frac,
+                       dense_first=None, dense_last=None):
+    """Mask path over a full sequence, blocked at cfg.ff.block_size.
+
+    x: [B, T, D] with T % block_size == 0. keep_frac: scalar (may be a
+    traced per-layer budget from Algorithm 1). Semantically faithful to
+    the paper; FLOPs are NOT reduced (see gather path for that).
+    """
+    ff = cfg.ff
+    B, T, D = x.shape
+    N = ff.block_size
+    nb = T // N
+    xb = x.reshape(B, nb, N, D)
+    scores = jax.nn.sigmoid(P.neuron_scores(params["pred"], xb))
+    mask = S.neuron_mask_from_scores(scores, keep_frac, ff.tile)
+    dense_first = ff.dense_first_block if dense_first is None else dense_first
+    dense_last = ff.dense_last_block if dense_last is None else dense_last
+    blk = jnp.arange(nb)
+    force = jnp.zeros((nb,), bool)
+    if dense_first:
+        force = force | (blk == 0)
+    if dense_last:
+        force = force | (blk == nb - 1)
+    mask = jnp.where(force[None, :, None], jnp.ones_like(mask), mask)
+    y = S.ffn_masked(params, xb, mask[:, :, None, :], cfg.act)
+    y = _compensate(params, cfg, xb, y)
+    # compensator must not fire on dense blocks (they have zero error)
+    if cfg.ff.use_compensator and "comp" in params:
+        y_dense_blocks = S.ffn_masked(params, xb, jnp.ones_like(mask)[:, :, None, :], cfg.act)
+        y = jnp.where(force[None, :, None, None], y_dense_blocks, y)
+    return y.reshape(B, T, D)
+
+
+# ------------------------------------------------------ per-block gather
+
+
+def ff_block_sparse(params, cfg: ModelConfig, x_block, k_tiles: int,
+                    shards: int = 1, is_dense=None):
+    """Gather path for one prompt block: x_block [B, N, D] -> [B, N, D].
+
+    k_tiles is static (jit shape). `is_dense` (traced bool) switches to
+    the dense FFN via lax.cond — used for the always-dense first/last
+    blocks inside the blockwise-prefill scan.
+    """
+    ff = cfg.ff
+    scores = jax.nn.sigmoid(P.neuron_scores(params["pred"], x_block))
+    ids = S.balanced_topk_tiles(scores, k_tiles, ff.tile, shards)  # [B, K]
+
+    def sparse(x):
+        y = S.ffn_sparse_batched(params, x, ids, ff.tile, cfg.act)
+        return _compensate(params, cfg, x, y)
+
+    if is_dense is None:
+        return sparse(x_block)
+    return jax.lax.cond(is_dense,
+                        lambda x: S.ffn_dense(params, x, cfg.act),
+                        sparse, x_block)
+
+
+def ff_decode_sparse(params, cfg: ModelConfig, x_tok, k_tiles: int,
+                     shards: int = 1):
+    """Decode-time sparsity (paper Table 3): block == current token."""
+    return ff_block_sparse(params, cfg, x_tok, k_tiles, shards)
+
+
+# ----------------------------------------------------------- scheduling
+
+
+def layer_budgets(cfg: ModelConfig, importance=None):
+    """Per-layer keep fractions: Algorithm 1 when enabled+calibrated,
+    else uniform (1 - sparsity)."""
+    keep = 1.0 - cfg.ff.sparsity
+    if cfg.ff.layerwise_schedule and importance is not None:
+        return SCHED.allocate_budgets(importance, keep)
+    return SCHED.uniform_budgets(cfg.n_layers, keep)
+
+
+def k_tiles_for(cfg: ModelConfig, d_ff: Optional[int] = None,
+                shards: int = 1) -> int:
+    """Static tile count for the gather path (uniform schedule)."""
+    d_ff = d_ff or cfg.d_ff
+    n_tiles = d_ff // cfg.ff.tile
+    keep = 1.0 - cfg.ff.sparsity
+    k = max(int(np.ceil(keep * n_tiles)), 1)
+    if shards > 1 and n_tiles % shards == 0:
+        per = max(int(np.ceil(k / shards)), 1)
+        k = per * shards
+    return min(k, n_tiles)

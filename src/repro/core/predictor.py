@@ -1,0 +1,75 @@
+"""Expert neuron predictor (paper §3.2).
+
+A lightweight attention-pooling module: a trainable query vector attends
+over the block's token embeddings (keys == values == tokens), and a
+two-layer MLP with bottleneck r = d_model/16 (rounded up to a power of
+two) maps the pooled representation to one score per FFN neuron.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+
+
+def predictor_spec(d_model: int, d_ff: int, r: int, dtype=jnp.float32):
+    return {
+        "q_pred": ParamSpec((d_model,), ("embed",), init="normal", scale=0.02, dtype=dtype),
+        "w1": ParamSpec((d_model, r), ("embed", None), dtype=dtype),
+        "w2": ParamSpec((r, d_ff), (None, "mlp"), dtype=dtype),
+    }
+
+
+def pool_block(params, x_block):
+    """Eq. 12: a = softmax(q_pred X^T / sqrt(d)) X.
+
+    x_block: [..., N, D] -> pooled [..., D].
+    """
+    d = x_block.shape[-1]
+    logits = jnp.einsum("...nd,d->...n", x_block.astype(jnp.float32),
+                        params["q_pred"].astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.float32(d))
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...n,...nd->...d", w, x_block.astype(jnp.float32))
+
+
+def neuron_scores(params, x_block):
+    """Eq. 13: s = ReLU(a W1) W2 -> [..., d_ff] neuron logits."""
+    a = pool_block(params, x_block)
+    h = jax.nn.relu(a @ params["w1"].astype(jnp.float32))
+    return h @ params["w2"].astype(jnp.float32)
+
+
+# ------------------------------------------------ GRIFFIN-style labels
+
+
+def activation_labels(hidden, keep_frac: float = 0.5):
+    """Paper §3.2 training targets from dense FFN hidden activations.
+
+    hidden: [..., N, F] (post-activation, pre-down-proj). Returns
+    (labels[..., F] in {0,1}, weights[..., F]): top `keep_frac` neurons by
+    L2 norm over the block are positive; positive weights decay 32/16/8/
+    4/2 over successive top-20%-of-positives bands; negatives weight 1.
+    """
+    norms = jnp.linalg.norm(hidden.astype(jnp.float32), axis=-2)  # [..., F]
+    F = norms.shape[-1]
+    n_pos = max(int(round(F * keep_frac)), 1)
+    # rank 0 = largest norm
+    order = jnp.argsort(-norms, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    labels = (ranks < n_pos).astype(jnp.float32)
+    band = jnp.clip(ranks * 5 // max(n_pos, 1), 0, 4)  # 20% bands of positives
+    pos_w = jnp.float32(32.0) / (2.0 ** band.astype(jnp.float32))  # 32,16,8,4,2
+    weights = jnp.where(labels > 0, pos_w, 1.0)
+    return labels, weights
+
+
+def predictor_loss(params, x_block, hidden, keep_frac: float = 0.5):
+    """Weighted BCE (Eq. 19) against activation-derived labels."""
+    labels, weights = activation_labels(hidden, keep_frac)
+    s = neuron_scores(params, x_block)
+    logp = jax.nn.log_sigmoid(s)
+    lognp = jax.nn.log_sigmoid(-s)
+    bce = -(labels * logp + (1.0 - labels) * lognp)
+    return jnp.mean(jnp.sum(weights * bce, axis=-1) / jnp.sum(weights, axis=-1))

@@ -1,0 +1,75 @@
+"""Layer-wise sparsity scheduling (paper §3.4, Algorithm 1).
+
+Layer importance s_i = attention mass received by *non-sink* tokens
+(everything outside the first prompt block), averaged over heads and a
+calibration set. Algorithm 1 greedily water-fills keep-fractions
+proportional to importance under a global budget.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def nonsink_attention_mass(attn_probs, block_size: int):
+    """Eq. 23 per-layer importance from one calibration sample.
+
+    attn_probs: [..., H, T, T] post-softmax attention for ONE layer
+    (query axis -2 attends over key axis -1). Returns scalar: total
+    attention mass received by keys outside the first block, averaged
+    over heads (and any leading batch dims).
+    """
+    t_k = attn_probs.shape[-1]
+    keys = jnp.arange(t_k)
+    nonsink = (keys >= block_size).astype(attn_probs.dtype)
+    # sum over queries t and non-sink keys k; MEAN over heads/batch
+    mass = jnp.einsum("...ts,s->...", attn_probs, nonsink)
+    return jnp.mean(mass)
+
+
+def allocate_budgets(importance, budget: float):
+    """Algorithm 1: importance s_i -> per-layer keep-fractions b_i.
+
+    `budget` is the global keep-fraction (1 - sparsity). Returns a numpy
+    array b with b_i in (0, 1], mean(b) == budget (up to clipping).
+    """
+    s = np.asarray(importance, np.float64)
+    L = len(s)
+    assert np.all(s >= 0), "importance must be non-negative"
+    T = budget * L
+    S_total = float(np.sum(s))
+    b = np.zeros(L)
+    # allocate high-importance layers first so min(1, .) clipping
+    # redistributes their overflow to the rest (greedy waterfill).
+    order = np.argsort(-s)
+    for i in order:
+        if S_total <= 0:
+            b[i] = min(1.0, T / max(L, 1))
+            continue
+        b[i] = min(1.0, s[i] / S_total * T)
+        T -= b[i]
+        S_total -= s[i]
+    # no floor: budgets_to_tiles enforces >=1 tile per layer downstream
+    return np.clip(b, 0.0, 1.0)
+
+
+def budgets_to_tiles(budgets, n_tiles: int):
+    """Per-layer keep-fraction -> integer tile counts (>=1)."""
+    return np.maximum(1, np.round(np.asarray(budgets) * n_tiles)).astype(np.int32)
+
+
+def uniform_budgets(n_layers: int, budget: float):
+    return np.full(n_layers, budget)
+
+
+def calibrate_layer_importance(collect_attn_fn, samples, block_size: int):
+    """Run `collect_attn_fn(sample) -> [L, H, T, T]` over a calibration
+    set and average Eq. 23 per layer. Pure-python driver (offline)."""
+    acc = None
+    for x in samples:
+        probs = collect_attn_fn(x)  # [L, H, T, T]
+        s = jax.vmap(lambda p: nonsink_attention_mass(p, block_size))(probs)
+        s = np.asarray(s, np.float64)
+        acc = s if acc is None else acc + s
+    return acc / max(len(samples), 1)

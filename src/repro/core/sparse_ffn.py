@@ -1,0 +1,202 @@
+"""Tile-sparse gated FFN — the compute core of FastForward.
+
+TPU adaptation (DESIGN.md §3): neurons are sparsified in tiles of 128
+(MXU lane width). Two execution paths, cross-checked in tests:
+
+  * mask path   — multiplicative neuron mask; differentiable; used for
+                  training/distillation and for full-sequence fidelity
+                  experiments (supports per-layer budgets, Algorithm 1).
+  * gather path — tile-index gather of W_gate/W_up rows and W_down
+                  columns; static K tiles; real FLOP reduction; used by
+                  the serving engine and dry-runs. The Pallas kernel in
+                  repro.kernels.sparse_ffn is its TPU twin.
+
+Balanced per-shard top-K: with d_ff sharded over `model`, scores are
+reshaped to [shards, tiles_per_shard] and top-(K/shards) is taken per
+shard, so the weight gather never crosses a shard boundary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+from repro.nn.layers import ACTIVATIONS, swiglu
+
+
+def ffn_spec(d_model: int, d_ff: int, gated: bool = True, dtype=jnp.float32):
+    sp = {
+        "wu": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "wd": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+    }
+    if gated:
+        sp["wg"] = ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype=dtype)
+    return sp
+
+
+def ffn_hidden(params, x, act: str = "silu"):
+    """Post-activation hidden h: [..., F] (used for labels + mask path)."""
+    up = jnp.einsum("...d,df->...f", x, params["wu"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    if "wg" in params:
+        gate = jnp.einsum("...d,df->...f", x, params["wg"],
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+        return swiglu(gate, up)
+    return ACTIVATIONS[act](up.astype(jnp.float32)).astype(x.dtype)
+
+
+def ffn_dense(params, x, act: str = "silu"):
+    h = ffn_hidden(params, x, act)
+    y = jnp.einsum("...f,fd->...d", h, params["wd"],
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------- mask path
+
+
+def tile_scores(scores, tile: int):
+    """Neuron scores [..., F] -> tile scores [..., F/tile]."""
+    F = scores.shape[-1]
+    return scores.reshape(scores.shape[:-1] + (F // tile, tile)).sum(-1)
+
+
+def neuron_mask_from_scores(scores, keep_frac, tile: int):
+    """Dynamic-threshold tile mask (supports traced per-layer budgets).
+
+    scores: [..., F]; keep_frac: scalar (may be traced). Returns a
+    {0,1} mask [..., F] keeping the top ceil(keep_frac * n_tiles) tiles.
+    """
+    # Hard top-k selection: not differentiable by construction (the
+    # predictor is trained via its own BCE objective, paper §3.2), so the
+    # whole mask is a stop_gradient region.
+    ts = jax.lax.stop_gradient(tile_scores(scores, tile))  # [..., n_tiles]
+    n_tiles = ts.shape[-1]
+    k = jnp.clip(jnp.ceil(keep_frac * n_tiles).astype(jnp.int32), 1, n_tiles)
+    sorted_ts = jnp.sort(ts, axis=-1)                   # ascending
+    thresh = jnp.take_along_axis(
+        sorted_ts, (n_tiles - k) * jnp.ones(ts.shape[:-1] + (1,), jnp.int32),
+        axis=-1)
+    tmask = (ts >= thresh).astype(scores.dtype)         # [..., n_tiles]
+    return jnp.repeat(tmask, tile, axis=-1)
+
+
+def ffn_masked(params, x, mask, act: str = "silu"):
+    """Mask path: h * mask before down-projection. mask: [..., F]
+    broadcastable over the token axis of x [..., N, D]."""
+    h = ffn_hidden(params, x, act)
+    h = h * mask.astype(h.dtype)
+    y = jnp.einsum("...f,fd->...d", h, params["wd"],
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------- gather path
+
+
+def balanced_topk_tiles(scores, k_tiles: int, tile: int, shards: int = 1):
+    """Tile ids under balanced per-shard selection.
+
+    scores: [..., F]. Returns int32 [..., k_tiles] of *global* tile ids;
+    exactly k_tiles/shards tiles come from each shard's range.
+    """
+    ts = tile_scores(scores, tile)                      # [..., n_tiles]
+    n_tiles = ts.shape[-1]
+    if shards > 1 and n_tiles % shards == 0 and k_tiles % shards == 0:
+        tps, kps = n_tiles // shards, k_tiles // shards
+        grouped = ts.reshape(ts.shape[:-1] + (shards, tps))
+        _, idx = jax.lax.top_k(grouped, kps)            # [..., shards, kps]
+        base = (jnp.arange(shards) * tps)[..., :, None]
+        return (idx + base).reshape(ts.shape[:-1] + (k_tiles,)).astype(jnp.int32)
+    _, idx = jax.lax.top_k(ts, k_tiles)
+    return idx.astype(jnp.int32)
+
+
+def gather_ffn_weights(params, tile_ids, tile: int):
+    """Gather selected weight tiles for one block.
+
+    tile_ids: [K] (one selection; vmap over batch for batched blocks).
+    Returns dict of gathered weights: wg/wu [D, K*tile], wd [K*tile, D].
+    """
+    D, F = params["wu"].shape
+    n_tiles = F // tile
+
+    def take_cols(w):  # [D, F] -> [D, K*tile]
+        wt = w.reshape(D, n_tiles, tile)
+        return jnp.take(wt, tile_ids, axis=1).reshape(D, -1)
+
+    out = {"wu": take_cols(params["wu"])}
+    if "wg" in params:
+        out["wg"] = take_cols(params["wg"])
+    wdt = params["wd"].reshape(n_tiles, tile, D)
+    out["wd"] = jnp.take(wdt, tile_ids, axis=0).reshape(-1, D)
+    return out
+
+
+def ffn_sparse_gather(params, x_block, tile_ids, tile: int, act: str = "silu"):
+    """Gather path for ONE block: x_block [N, D], tile_ids [K] -> [N, D].
+
+    FLOPs = (K*tile/d_ff) of the dense FFN. vmap over a batch of blocks.
+    """
+    g = gather_ffn_weights(params, tile_ids, tile)
+    return ffn_dense(g, x_block, act)
+
+
+def ffn_sparse_batched(params, x_blocks, tile_ids, tile: int, act: str = "silu"):
+    """x_blocks [B, N, D], tile_ids [B, K] -> [B, N, D]."""
+    return jax.vmap(
+        lambda xb, ids: ffn_sparse_gather(params, xb, ids, tile, act)
+    )(x_blocks, tile_ids)
+
+
+def ffn_block_sparse_shardmap(params, cfg, x_block, k_tiles: int, mesh):
+    """shard_map gather path (EXPERIMENTS.md §Perf): every weight gather
+    stays local to its model shard; only the [B,N,D] partial FFN output
+    crosses the ICI (psum), instead of GSPMD all-gathering weight tiles.
+
+    x_block: [B, N, D] (batch sharded over the data axes); params: one
+    layer's FastForward FFN params with d_ff sharded over "model".
+    """
+    import functools
+    from jax.sharding import PartitionSpec as P
+    from repro.core import predictor as PR
+    from repro.core import compensator as C
+
+    tile = cfg.ff.tile
+    act = cfg.act
+    shards = mesh.shape["model"]
+    k_local = max(k_tiles // shards, 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_axes if batch_axes else None
+
+    # predictor pooling + bottleneck are tiny and replicated; only the
+    # [r, F] output projection is sharded on F.
+    a = PR.pool_block(params["pred"], x_block)                 # [B, D] f32
+    h1 = jax.nn.relu(a @ params["pred"]["w1"].astype(jnp.float32))
+
+    def local_fn(wg, wu, wd, w2, h1_, x):
+        scores = jax.nn.sigmoid(h1_ @ w2.astype(jnp.float32))  # [B, F_loc]
+        ids = balanced_topk_tiles(scores, k_local, tile, shards=1)
+        y = ffn_sparse_batched({"wg": wg, "wu": wu, "wd": wd}, x, ids,
+                               tile, act)
+        return jax.lax.psum(y, "model")
+
+    y = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(None, "model"), P(None, "model"), P("model", None),
+                  P(None, "model"), P(bspec, None), P(bspec, None, None)),
+        out_specs=P(bspec, None, None),
+        check_vma=False,
+    )(params["wg"], params["wu"], params["wd"], params["pred"]["w2"],
+      h1, x_block)
+    y = y.astype(x_block.dtype)
+    if cfg.ff.use_compensator and "comp" in params:
+        y = y + C.compensate(params["comp"], x_block)
+    return y
+
+
+def mask_from_tile_ids(tile_ids, n_tiles: int, tile: int):
+    """Tile ids -> {0,1} neuron mask (for cross-checking the two paths)."""
+    onehot = jax.nn.one_hot(tile_ids, n_tiles, dtype=jnp.float32).sum(-2)
+    onehot = jnp.clip(onehot, 0.0, 1.0)
+    return jnp.repeat(onehot, tile, axis=-1)

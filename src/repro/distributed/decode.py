@@ -1,0 +1,87 @@
+"""Optimized decode step for dense-family models: shard_map flash-decode
+over sequence-sharded KV caches (see collectives.py).
+
+The baseline decode_step leaves KV-cache resharding to GSPMD, which
+all-gathers K and V per layer when the cache's sequence axis is sharded
+over "model" (kv-head counts on the assigned archs are all below the
+16-way model axis, so sequence sharding is the only uniform option).
+This variant computes local softmax statistics per shard and combines
+with a log-sum-exp psum — only [B,H,dh]-sized payloads cross the ICI.
+Numerics validated against the dense reference in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.base import ModelConfig
+from repro.models import dense as D
+from repro.nn import layers as L
+from repro.nn import attention as A
+from repro.core import fastforward as FF
+from repro.distributed.collectives import decode_attention_seqsharded
+
+
+def _write_kv_sharded(kc, vc, k_new, v_new, position, mesh):
+    """Single-token cache write with the sequence axis sharded over
+    "model": shard_map so each shard writes only if it owns `position`
+    (no cross-shard scatter traffic)."""
+
+    def local(kc, vc, k_new, v_new, position):
+        s_local = kc.shape[1]
+        shard = jax.lax.axis_index("model")
+        offset = shard * s_local
+        local_pos = jnp.clip(position - offset, 0, s_local - 1)
+        owns = (position >= offset) & (position < offset + s_local)
+        k_upd = jax.lax.dynamic_update_slice_in_dim(
+            kc, k_new.astype(kc.dtype), local_pos, axis=1)
+        v_upd = jax.lax.dynamic_update_slice_in_dim(
+            vc, v_new.astype(vc.dtype), local_pos, axis=1)
+        kc = jnp.where(owns, k_upd, kc)
+        vc = jnp.where(owns, v_upd, vc)
+        return kc, vc
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_axes if batch_axes else None
+    kv_spec = P(bspec, "model", None, None)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(kv_spec, kv_spec, P(bspec, None, None, None),
+                  P(bspec, None, None, None), P()),
+        out_specs=(kv_spec, kv_spec),
+        check_vma=False,
+    )(kc, vc, k_new, v_new, position)
+
+
+def decode_step_seqsharded(params, cfg: ModelConfig, token, cache,
+                           position, mesh, shards: int = 1):
+    """Drop-in for dense.decode_step with seq-sharded KV (no window)."""
+    ff = cfg.ff
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
+    positions = jnp.full((B, 1), position)
+    k_tiles = (FF.k_tiles_for(cfg, shards=shards)
+               if (ff.enabled and ff.apply_to_decode) else 0)
+
+    def layer_body(x, layer_in):
+        lp, kc, vc = layer_in
+        xn = D.apply_norm(cfg, lp["ln1"], x)
+        k_new, v_new = A.project_kv(lp["attn"], xn, positions,
+                                    cfg.rope_theta)
+        kc, vc = _write_kv_sharded(kc, vc, k_new, v_new, position, mesh)
+        q = A.project_q(lp["attn"], xn, positions, cfg.rope_theta)
+        o = decode_attention_seqsharded(q, kc, vc, position, mesh)
+        x = x + A.output_proj(lp["attn"], o)
+        xn2 = D.apply_norm(cfg, lp["ln2"], x)
+        if k_tiles:
+            y = FF.ff_decode_sparse(lp["ffn"], cfg, xn2, k_tiles, shards)
+        else:
+            y = FF.ff_dense(lp["ffn"], cfg, xn2)
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    x = D.apply_norm(cfg, params["ln_f"], x)
+    logits = L.unembed(params["lm_head"], x[:, 0, :])
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,95 @@
+"""Logical-axis sharding: ParamSpec.axes -> PartitionSpec via rules.
+
+Rules map logical axis names to mesh axis names. A logical axis is only
+sharded when the dimension is divisible by the mesh axis size (e.g.
+whisper-tiny's 6 heads stay replicated on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.param import ParamSpec, is_spec
+
+# Default logical -> mesh axis rules. "batch" resolves to every
+# data-parallel axis present in the mesh (("pod","data") or ("data",)).
+DEFAULT_RULES = {
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "mlp_expert": "model",
+    "expert": "expert_axis",   # resolved per-config: "data" | None
+    "layers": None,
+    "batch": "batch_axes",
+    "seq": None,
+    "kv_seq": "model",         # decode-time sequence-sharded KV
+    "state": None,
+}
+
+
+def data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def resolve_axis(name: Optional[str], dim: int, mesh: Mesh, rules=None,
+                 expert_axis=None):
+    """One logical axis -> mesh axis (or None), honoring divisibility."""
+    if name is None:
+        return None
+    rules = rules or DEFAULT_RULES
+    target = rules.get(name, None)
+    if target == "batch_axes":
+        axes = data_axes(mesh)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        return axes if axes and dim % size == 0 else None
+    if target == "expert_axis":
+        target = expert_axis
+    if target is None or target not in mesh.axis_names:
+        return None
+    return target if dim % mesh.shape[target] == 0 else None
+
+
+def pspec_for(axes, shape, mesh: Mesh, rules=None, expert_axis=None):
+    entries = [resolve_axis(a, d, mesh, rules, expert_axis)
+               for a, d in zip(axes, shape)]
+    # A mesh axis may appear at most once in a PartitionSpec.
+    seen = set()
+    clean = []
+    for e in entries:
+        flat = e if isinstance(e, tuple) else ((e,) if e else ())
+        if any(f in seen for f in flat):
+            clean.append(None)
+        else:
+            seen.update(flat)
+            clean.append(e)
+    return P(*clean)
+
+
+def param_shardings(specs, mesh: Mesh, rules=None, expert_axis=None):
+    """ParamSpec tree -> NamedSharding tree."""
+
+    def mk(s: ParamSpec):
+        return NamedSharding(mesh, pspec_for(s.axes, s.shape, mesh, rules,
+                                             expert_axis))
+
+    return jax.tree.map(mk, specs, is_leaf=is_spec)
+
+
+def constrain(x, axes, mesh: Optional[Mesh] = None, rules=None,
+              expert_axis=None):
+    """Best-effort activation sharding constraint; no-op without a mesh."""
+    if mesh is None:
+        try:
+            mesh = jax.sharding.get_abstract_mesh()
+        except Exception:
+            return x
+        if mesh is None or not mesh.axis_names or mesh.empty:
+            return x
+    spec = pspec_for(axes, x.shape, mesh, rules, expert_axis)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+Used for the fused-prefill path (the beyond-paper baseline the blockwise
+FastForward prefill is compared against) and for block-cached prefill
+attention (q_offset > 0). One (q-block, k-block) grid with f32 running
+max / sum / accumulator scratch in VMEM; k-blocks entirely above the
+causal diagonal are skipped via pl.when (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, block_q, block_k, q_offset, causal, window):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos0 = q_offset + qi * block_q
+
+    def compute():
+        q = q_ref[...].astype(jnp.float32) * scale
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            rows = q_pos0 + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, block_k), 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            mask = cols <= rows
+            if window:
+                mask = mask & (cols > rows - window)
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p, v_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # skip k-blocks entirely above the diagonal (or beyond the window)
+        first_row = q_pos0
+        last_row = q_pos0 + block_q - 1
+        k_lo = ki * block_k
+        relevant = k_lo <= last_row
+        if window:
+            relevant = relevant & (k_lo + block_k - 1 > first_row - window)
+        pl.when(relevant)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[...] = (acc_scr[...] /
+                      jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_q", "block_k", "causal", "q_offset", "window", "interpret"))
+def flash_attention(q, k, v, *, block_q: int = 128, block_k: int = 128,
+                    causal: bool = True, q_offset: int = 0,
+                    window: int | None = None, interpret: bool = False):
+    """q: [T, dh]; k, v: [S, dh] -> o [T, dh] (f32). T % block_q == 0,
+    S % block_k == 0. vmap over (batch, head) from the ops wrapper."""
+    T, dh = q.shape
+    S = k.shape[0]
+    assert T % block_q == 0 and S % block_k == 0
+    scale = 1.0 / (dh ** 0.5)
+    grid = (T // block_q, S // block_k)
+    kernel = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, q_offset=q_offset,
+                          causal=causal, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, dh), lambda qi, ki: (qi, 0)),
+            pl.BlockSpec((block_k, dh), lambda qi, ki: (ki, 0)),
+            pl.BlockSpec((block_k, dh), lambda qi, ki: (ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, dh), lambda qi, ki: (qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    return kernel(q, k, v)

@@ -1,0 +1,37 @@
+"""Jit'd wrappers: batched GQA flash attention over [B,T,H,dh] layouts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref as R
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mha_flash(q, k, v, *, causal=True, q_offset=0, window=None,
+              use_kernel: bool | None = None, interpret: bool | None = None):
+    """q: [B,T,H,dh]; k,v: [B,S,Kv,dh] (GQA: H % Kv == 0). Returns
+    [B,T,H,dh] f32."""
+    B, T, H, dh = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if interpret is None:
+        interpret = not on_tpu()
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, dh)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, dh)
+    if use_kernel:
+        fn = lambda qq, kk, vv: K.flash_attention(
+            qq, kk, vv, causal=causal, q_offset=q_offset, window=window,
+            interpret=interpret)
+    else:
+        fn = lambda qq, kk, vv: R.attention_ref(
+            qq, kk, vv, causal=causal, q_offset=q_offset, window=window)
+    o = jax.vmap(fn)(qh, kh, vh)
+    return o.reshape(B, H, T, dh).transpose(0, 2, 1, 3)

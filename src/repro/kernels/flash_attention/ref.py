@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the causal flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, q_offset=0, window=None):
+    """q: [T, dh]; k,v: [S, dh]. Query i sits at absolute position
+    q_offset + i; keys at 0..S-1. Returns [T, dh] float32."""
+    T, dh = q.shape
+    S = k.shape[0]
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) / jnp.sqrt(
+        jnp.float32(dh))
+    if causal:
+        qi = q_offset + jnp.arange(T)[:, None]
+        kj = jnp.arange(S)[None, :]
+        mask = kj <= qi
+        if window:
+            mask = mask & (kj > qi - window)
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v.astype(jnp.float32)

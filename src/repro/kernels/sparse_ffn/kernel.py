@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: block-sparse gated FFN with scalar-prefetch tiles.
+
+TPU adaptation of FastForward's CUDA row-gather (DESIGN.md §3): the
+selected neuron-tile indices are scalar-prefetched; each grid step DMAs
+one [D, tile] slab of W_gate/W_up and one [tile, D] slab of W_down from
+HBM into VMEM (BlockSpec.index_map redirects by tile id), computes the
+gated product for the token block on the MXU, and accumulates into a
+single VMEM output block. FLOPs scale exactly with K/n_tiles.
+
+Grid: (num_token_blocks, K). VMEM working set per step:
+  x block   [bn, D]      (bn = token block rows, default 128)
+  wg, wu    [D, tile]
+  wd        [tile, D]
+  out       [bn, D] (accumulator, revisited across the K axis)
+All MXU dims are multiples of 128 when D and tile are.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sparse_ffn_kernel(ids_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    hu = jax.lax.dot(x, wu_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    h = hg * jax.nn.sigmoid(hg) * hu
+    y = jax.lax.dot(h, wd_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    o_ref[...] += y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "block_n", "interpret"))
+def sparse_ffn(x, wg, wu, wd, tile_ids, *, tile: int = 128,
+               block_n: int = 128, interpret: bool = False):
+    """x: [N, D]; wg/wu: [D, F]; wd: [F, D]; tile_ids: [K] int32 (global
+    tile ids). Returns [N, D] float32. N % block_n == 0, F % tile == 0."""
+    N, D = x.shape
+    F = wg.shape[1]
+    K = tile_ids.shape[0]
+    assert N % block_n == 0 and F % tile == 0
+
+    grid = (N // block_n, K)
+
+    kernel = pl.pallas_call(
+        _sparse_ffn_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_n, D), lambda n, k, ids: (n, 0)),
+                pl.BlockSpec((D, tile), lambda n, k, ids: (0, ids[k])),
+                pl.BlockSpec((D, tile), lambda n, k, ids: (0, ids[k])),
+                pl.BlockSpec((tile, D), lambda n, k, ids: (ids[k], 0)),
+            ],
+            out_specs=pl.BlockSpec((block_n, D), lambda n, k, ids: (n, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, D), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    return kernel(tile_ids, x, wg, wu, wd)
+
+
+def _dense_ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    f = pl.program_id(1)
+
+    @pl.when(f == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    hu = jax.lax.dot(x, wu_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    h = hg * jax.nn.sigmoid(hg) * hu
+    o_ref[...] += jax.lax.dot(h, wd_ref[...].astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "block_n", "interpret"))
+def dense_ffn(x, wg, wu, wd, *, tile: int = 512, block_n: int = 128,
+              interpret: bool = False):
+    """Dense gated-FFN twin of the sparse kernel (the paper's baseline);
+    walks ALL F/tile tiles instead of a selected subset."""
+    N, D = x.shape
+    F = wg.shape[1]
+    assert N % block_n == 0 and F % tile == 0
+    grid = (N // block_n, F // tile)
+    kernel = pl.pallas_call(
+        _dense_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, D), lambda n, f: (n, 0)),
+            pl.BlockSpec((D, tile), lambda n, f: (0, f)),
+            pl.BlockSpec((D, tile), lambda n, f: (0, f)),
+            pl.BlockSpec((tile, D), lambda n, f: (f, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, D), lambda n, f: (n, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, D), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    return kernel(x, wg, wu, wd)

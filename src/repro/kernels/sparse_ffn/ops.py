@@ -1,0 +1,42 @@
+"""Jit'd public wrappers around the sparse-FFN Pallas kernel.
+
+`use_kernel=True` targets TPU (Mosaic); on this CPU container the kernel
+runs in interpret mode for validation and the XLA fallback (ref path)
+serves execution. The serving engine picks via repro.kernels.backend().
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse_ffn import kernel as K
+from repro.kernels.sparse_ffn import ref as R
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sparse_ffn_op(x, wg, wu, wd, tile_ids, tile: int = 128,
+                  use_kernel: bool | None = None):
+    """Dispatch: Pallas kernel on TPU, interpret-mode kernel if forced,
+    jnp oracle otherwise. x: [N, D] or [B, N, D] (vmapped)."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if x.ndim == 3:
+        return jax.vmap(
+            lambda xb, ids: sparse_ffn_op(xb, wg, wu, wd, ids, tile,
+                                          use_kernel))(x, tile_ids)
+    if use_kernel:
+        interp = not on_tpu()
+        return K.sparse_ffn(x, wg, wu, wd, tile_ids, tile=tile,
+                            interpret=interp)
+    return R.sparse_ffn_ref(x, wg, wu, wd, tile_ids, tile)
+
+
+def dense_ffn_op(x, wg, wu, wd, use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if use_kernel:
+        return K.dense_ffn(x, wg, wu, wd, interpret=not on_tpu())
+    return R.dense_ffn_ref(x, wg, wu, wd)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the block-sparse gated FFN kernel.
+
+Semantics: given tokens x [N, D], full FFN weights, and a list of
+selected neuron-tile ids [K] (tile width = kernel tile size), compute
+the gated FFN restricted to the selected tiles:
+
+    y = sum_k  silu(x @ Wg[:, tile_k]) * (x @ Wu[:, tile_k]) @ Wd[tile_k, :]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_ffn_ref(x, wg, wu, wd, tile_ids, tile: int):
+    """x: [N, D]; wg/wu: [D, F]; wd: [F, D]; tile_ids: [K] int32.
+    Returns [N, D] in float32."""
+    D, F = wg.shape
+    n_tiles = F // tile
+    wg_t = wg.reshape(D, n_tiles, tile)
+    wu_t = wu.reshape(D, n_tiles, tile)
+    wd_t = wd.reshape(n_tiles, tile, D)
+    g = jnp.take(wg_t, tile_ids, axis=1).reshape(D, -1)
+    u = jnp.take(wu_t, tile_ids, axis=1).reshape(D, -1)
+    d = jnp.take(wd_t, tile_ids, axis=0).reshape(-1, D)
+    x32 = x.astype(jnp.float32)
+    hg = x32 @ g.astype(jnp.float32)
+    hu = x32 @ u.astype(jnp.float32)
+    h = hg * jax.nn.sigmoid(hg) * hu
+    return h @ d.astype(jnp.float32)
+
+
+def dense_ffn_ref(x, wg, wu, wd):
+    """Full (non-sparse) gated FFN oracle, f32 accumulation."""
+    x32 = x.astype(jnp.float32)
+    hg = x32 @ wg.astype(jnp.float32)
+    hu = x32 @ wu.astype(jnp.float32)
+    h = hg * jax.nn.sigmoid(hg) * hu
+    return h @ wd.astype(jnp.float32)

@@ -1,0 +1,271 @@
+"""Post-optimization HLO analysis with while-loop trip-count scaling.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE, which
+under-reports every scan-over-layers/blocks model by the trip count.
+This module parses `compiled.as_text()` into a computation graph and
+walks it from ENTRY:
+
+  * dot FLOPs: 2 * prod(result_shape) * prod(contraction_dims), using a
+    per-computation name->shape table for operands;
+  * collective bytes: result bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (the payload that
+    crosses the ICI);
+  * memory traffic: sum of (result + operand) bytes of top-level ops —
+    an upper-bound proxy for HBM traffic after fusion;
+
+all scaled by `known_trip_count` through nested while loops, taking the
+max across conditional branches (the dense branch dominates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional
+
+DTYPE_BYTES = {"pred": 0.125, "s2": 0.25, "u2": 0.25, "s4": 0.5,
+               "u4": 0.5, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+               "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "s32": 4,
+               "u32": 4, "f32": 4, "f64": 8, "u64": 8, "s64": 8,
+               "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def _parse_op_line(stripped: str):
+    """Parse '%name = TYPE opcode(...)' robustly: tuple result types may
+    contain '/*index=N*/' comments, so the type is read by bracket
+    matching rather than regex. Returns (name, type, opcode) or None."""
+    m = _NAME_RE.match(stripped)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    if i >= len(stripped):
+        return None
+    if stripped[i] == "(":       # tuple type
+        depth = 0
+        j = i
+        while j < len(stripped):
+            if stripped[j] == "(":
+                depth += 1
+            elif stripped[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        rtype = stripped[i:j + 1]
+        i = j + 1
+    else:
+        j = stripped.find(" ", i)
+        if j < 0:
+            return None
+        rtype = stripped[i:j]
+        i = j
+    rest = stripped[i:].lstrip()
+    m2 = re.match(r"([\w\-]+)\(", rest)
+    if not m2:
+        return None
+    return name, rtype, m2.group(1)
+_TRIP_RE = re.compile(r'known_trip_count"?\s*[=:]\s*\{\s*"?n"?\s*[=:]\s*"?(\d+)')
+_CALLED_RE = re.compile(
+    r"(?:condition|body|to_apply|called_computations|true_computation|"
+    r"false_computation|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_elems(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+def _parse_operands(line: str, opcode: str) -> List[str]:
+    """Names inside the first (...) group after the opcode."""
+    idx = line.find(opcode + "(")
+    if idx < 0:
+        return []
+    start = idx + len(opcode)
+    depth = 0
+    end = start
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = line[start + 1:end]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def parse_hlo(text: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    current: Optional[str] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$",
+                          stripped)
+        if header and "=" not in stripped.split("(")[0]:
+            current = header.group(2)
+            comps[current] = []
+            if header.group(1):
+                entry = current
+            continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        parsed = _parse_op_line(stripped)
+        if not parsed:
+            continue
+        name, rtype, opcode = parsed
+        ops = _parse_operands(stripped, opcode)
+        comps[current].append(Op(name, rtype, opcode, ops, stripped))
+    comps["__entry__"] = comps.get(entry, [])
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+@dataclasses.dataclass
+class Metrics:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Metrics", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.traffic_bytes += other.traffic_bytes * scale
+        for k in COLLECTIVES:
+            self.collective_bytes[k] += other.collective_bytes[k] * scale
+            self.collective_counts[k] += other.collective_counts[k] * scale
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out = _shape_elems(op.result_type)
+    if out is None:
+        return 0.0
+    n_out = math.prod(out) if out else 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if m and op.operands:
+        lhs_type = shapes.get(op.operands[0], "")
+        dims = _shape_elems(lhs_type)
+        if dims is not None and m.group(1):
+            for d in m.group(1).split(","):
+                di = int(d)
+                if di < len(dims):
+                    contract *= dims[di]
+    return 2.0 * n_out * contract
+
+
+def analyze_computation(comp: str, comps, memo) -> Metrics:
+    if comp in memo:
+        return memo[comp]
+    memo[comp] = Metrics()  # break cycles defensively
+    total = Metrics()
+    ops = comps.get(comp, [])
+    shapes = {op.name: op.result_type for op in ops}
+    for op in ops:
+        rbytes = _shape_bytes(op.result_type)
+        if op.opcode == "while":
+            trip = 1
+            mt = _TRIP_RE.search(op.line)
+            if mt:
+                trip = int(mt.group(1))
+            called = _CALLED_RE.findall(op.line)
+            names = [n for grp in called for n in
+                     re.findall(r"[\w.\-]+", grp)]
+            body = re.search(r"body=%?([\w.\-]+)", op.line)
+            cond = re.search(r"condition=%?([\w.\-]+)", op.line)
+            if body:
+                total.add(analyze_computation(body.group(1), comps, memo),
+                          trip)
+            if cond:
+                total.add(analyze_computation(cond.group(1), comps, memo),
+                          trip)
+        elif op.opcode == "conditional":
+            branches = re.search(
+                r"(?:branch_computations|true_computation)=\{?%?([^,}]+(?:,\s*%?[\w.\-]+)*)\}?",
+                op.line)
+            names = []
+            m_t = re.search(r"true_computation=%?([\w.\-]+)", op.line)
+            m_f = re.search(r"false_computation=%?([\w.\-]+)", op.line)
+            m_b = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+            if m_b:
+                names = re.findall(r"%?([\w.\-]+)", m_b.group(1))
+            else:
+                names = [m.group(1) for m in (m_t, m_f) if m]
+            if names:
+                subs = [analyze_computation(n, comps, memo) for n in names]
+                best = max(subs, key=lambda s: s.flops + s.traffic_bytes)
+                total.add(best)
+        elif op.opcode in ("fusion", "call", "async-start", "custom-call"):
+            m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", op.line)
+            if m:
+                sub = analyze_computation(m.group(1), comps, memo)
+                total.add(Metrics(flops=sub.flops,
+                                  collective_bytes=sub.collective_bytes,
+                                  collective_counts=sub.collective_counts))
+            total.traffic_bytes += rbytes + sum(
+                _shape_bytes(shapes.get(o, "")) for o in op.operands)
+        elif op.opcode == "dot" or op.opcode.startswith("dot."):
+            total.flops += _dot_flops(op, shapes)
+            total.traffic_bytes += rbytes + sum(
+                _shape_bytes(shapes.get(o, "")) for o in op.operands)
+        elif any(op.opcode.startswith(c) for c in COLLECTIVES):
+            kind = next(c for c in COLLECTIVES if op.opcode.startswith(c))
+            if not op.opcode.endswith("-done"):
+                total.collective_bytes[kind] += rbytes
+                total.collective_counts[kind] += 1
+                total.traffic_bytes += rbytes
+        elif op.opcode in ("parameter", "constant", "iota", "tuple",
+                           "get-tuple-element", "bitcast"):
+            pass
+        else:
+            total.traffic_bytes += rbytes
+    memo[comp] = total
+    return total
+
+
+def analyze_hlo(text: str) -> Metrics:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry_name__")
+    memo: dict = {}
+    return analyze_computation(entry, comps, memo)

@@ -1,0 +1,30 @@
+"""Production meshes. v5e pod-slice numbers (DESIGN.md §5):
+single pod = (data=16, model=16) = 256 chips; multi-pod adds a leading
+pod axis: (pod=2, data=16, model=16) = 512 chips.
+
+A FUNCTION, not a module constant: importing this module must never
+touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh for CI-scale sharding tests (8 host devices)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,62 @@
+"""Serving launcher: batched requests through the FastForward engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --requests 4 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs import ALL, get_config
+from repro.models.registry import get_model
+from repro.nn.param import init_params
+from repro.serving.engine import Engine
+from repro.training.checkpoint import load_checkpoint
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ALL, default="tinyllama-1.1b")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=96)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--dense", action="store_true",
+                   help="disable FastForward sparsity (baseline)")
+    p.add_argument("--checkpoint", default=None)
+    args = p.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if args.dense:
+        cfg = cfg.with_ff(enabled=False)
+    model = get_model(cfg)
+    if args.checkpoint:
+        params, meta = load_checkpoint(args.checkpoint)
+        print(f"loaded checkpoint ({meta})")
+    else:
+        params = init_params(model.specs(cfg), jax.random.key(0))
+
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab,
+                                 size=rng.integers(args.prompt_len // 2,
+                                                   args.prompt_len + 1)))
+               for _ in range(args.requests)]
+    eng = Engine(cfg, params)
+    res = eng.generate(prompts, max_new=args.max_new,
+                       temperature=args.temperature)
+    print(f"mode={'dense' if args.dense else 'fastforward'} "
+          f"sparsity={0.0 if args.dense else cfg.ff.sparsity}")
+    print(f"prefill: {res.prefill_seconds*1e3:.1f} ms "
+          f"({res.prompt_tokens} prompt tokens)")
+    print(f"decode:  {res.decode_seconds*1e3:.1f} ms "
+          f"({res.generated_tokens} tokens)")
+    for i, row in enumerate(res.tokens):
+        print(f"req{i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Assigned input shapes and abstract input specs for the dry-run.
+
+Four shapes (assignment):
+  train_4k     seq 4096   global_batch 256   -> train_step
+  prefill_32k  seq 32768  global_batch 32    -> prefill_step (paper §3.1)
+  decode_32k   seq 32768  global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288 global_batch 1     -> serve_step, sub-quadratic
+
+`input_specs` returns weak-type-correct ShapeDtypeStructs (no device
+allocation), sharded when a mesh is given.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.base import ModelConfig
+from repro.models.registry import get_model
+from repro.nn import param as PM
+from repro.distributed.sharding import (
+    param_shardings, pspec_for, data_axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if supported, else a skip reason (recorded in DESIGN.md)."""
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return ("encoder-decoder without a sub-quadratic decoder variant "
+                "(whisper) — skipped per assignment rules")
+    return None
+
+
+def _sds(shape, dtype, mesh=None, axes=None):
+    sh = None
+    if mesh is not None and axes is not None:
+        sh = NamedSharding(mesh, pspec_for(axes, shape, mesh))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh=None):
+    """Token/label/frontend-embedding specs for train & prefill."""
+    B, T = shape.global_batch, shape.seq_len
+    tok_ax = ("batch", "seq")
+    out = {}
+    if cfg.arch == "audio":
+        out["audio_embed"] = _sds((B, cfg.n_audio_frames, cfg.d_model),
+                                  cfg.dtype, mesh, ("batch", "seq", None))
+        out["tokens"] = _sds((B, T), jnp.int32, mesh, tok_ax)
+        if shape.kind == "train":
+            out["labels"] = _sds((B, T), jnp.int32, mesh, tok_ax)
+    elif cfg.arch == "vlm":
+        t_text = T - cfg.n_patches
+        assert t_text > 0, "sequence shorter than the image region"
+        out["patch_embed"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                  cfg.dtype, mesh, ("batch", "seq", None))
+        out["tokens"] = _sds((B, t_text), jnp.int32, mesh, tok_ax)
+        if shape.kind == "train":
+            out["labels"] = _sds((B, T), jnp.int32, mesh, tok_ax)
+    else:
+        out["tokens"] = _sds((B, T), jnp.int32, mesh, tok_ax)
+        if shape.kind == "train":
+            out["labels"] = _sds((B, T), jnp.int32, mesh, tok_ax)
+    return out
+
+
+def cache_abstract(cfg: ModelConfig, shape: ShapeSpec, mesh=None):
+    """Abstract KV/state cache for decode/prefill shapes."""
+    model = get_model(cfg)
+    if shape.kind == "prefill":
+        cache_len = shape.seq_len
+        if cfg.sliding_window and cfg.sliding_window < cache_len:
+            cache_len = shape.seq_len  # prefill cache holds full prompt
+    else:
+        cache_len = cfg.decode_window(shape.seq_len) or 1
+    spec_tree = model.cache_spec(cfg, shape.global_batch, cache_len)
+    if mesh is None:
+        return PM.abstract_params(spec_tree)
+    sh = param_shardings(spec_tree, mesh)
+    return PM.abstract_params(spec_tree, sh)
+
+
+def token_specs_decode(cfg: ModelConfig, shape: ShapeSpec, mesh=None):
+    B = shape.global_batch
+    return {
+        "token": _sds((B,), jnp.int32, mesh, ("batch",)),
+        "position": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh=None):
+    """All abstract inputs for (arch, shape): the dry-run contract."""
+    shape = SHAPES[shape_name]
+    out = {"shape": shape}
+    if shape.kind in ("train", "prefill"):
+        out["batch"] = batch_specs(cfg, shape, mesh)
+    if shape.kind in ("prefill", "decode"):
+        out["cache"] = cache_abstract(cfg, shape, mesh)
+    if shape.kind == "decode":
+        out.update(token_specs_decode(cfg, shape, mesh))
+    return out

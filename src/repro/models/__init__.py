@@ -1,0 +1,1 @@
+from repro.models.base import ModelConfig, FastForwardConfig  # noqa: F401

@@ -1,0 +1,127 @@
+"""Model configuration dataclasses shared by all architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FastForwardConfig:
+    """Configuration of the paper's technique (core contribution)."""
+
+    enabled: bool = False
+    sparsity: float = 0.5          # fraction of d_ff neurons dropped
+    block_size: int = 128          # prompt block length (paper §3.1)
+    tile: int = 128                # neuron tile granularity (TPU adaptation)
+    predictor_dim: int = 0         # r  (0 -> d_model/16 rounded up to pow2)
+    compensator_dim: int = 0       # r' (0 -> d_model/8)
+    layerwise_schedule: bool = True  # Algorithm 1 (mask path only; see DESIGN)
+    dense_first_block: bool = True
+    dense_last_block: bool = True
+    apply_to_decode: bool = True   # paper Table 3: reuse for generation
+    use_compensator: bool = True
+
+    def predictor_r(self, d_model: int) -> int:
+        if self.predictor_dim:
+            return self.predictor_dim
+        r = max(d_model // 16, 8)
+        return 1 << (r - 1).bit_length()  # round up to pow2 (paper §3.2)
+
+    def compensator_r(self, d_model: int) -> int:
+        return self.compensator_dim or max(d_model // 8, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch: str                      # dense | moe | audio | vlm | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                # 0 -> d_model // n_heads
+    act: str = "silu"
+    gated: bool = True             # SwiGLU vs plain 2-layer FFN
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    sliding_window: Optional[int] = None   # native SW (mistral: 4096)
+    long_window: int = 8192        # window for long_500k mode on dense archs
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- SSM / hybrid ---
+    ssm_state: int = 0             # N (mamba2 state dim)
+    ssm_head_dim: int = 64         # P (mamba2) / xLSTM head width driver
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    attn_every: int = 6            # zamba2: shared block cadence
+    # --- modality frontends (stubs per assignment) ---
+    n_audio_frames: int = 0        # whisper encoder sequence
+    n_encoder_layers: int = 0      # whisper encoder depth
+    n_patches: int = 0             # llava vision tokens (anyres)
+    # --- fastforward ---
+    ff: FastForwardConfig = dataclasses.field(default_factory=FastForwardConfig)
+    # --- performance knobs (EXPERIMENTS.md §Perf) ---
+    attn_chunk: int = 0            # >0: online-softmax chunked attention
+    fused_prefill: bool = False    # parallel-block prefill (beyond-paper)
+    shardmap_ffn: bool = False     # shard_map tile-sparse FFN (local gather)
+    # --- numerics / misc ---
+    param_dtype: str = "float32"
+    optimizer: str = "adamw"       # adamw | adafactor
+    remat: bool = True
+    source: str = ""               # provenance citation
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def ffn_tiles(self) -> int:
+        return max(self.d_ff // self.ff.tile, 1) if self.d_ff else 0
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def with_ff(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, ff=dataclasses.replace(self.ff, **kw))
+
+    # ---- capabilities used by launch/shapes + dryrun skip logic ----
+
+    @property
+    def has_ffn(self) -> bool:
+        return self.d_ff > 0 or (self.arch == "moe")
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.arch == "audio"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """long_500k: SSM/hybrid natively; dense via sliding window; the
+        encoder-decoder (whisper) is excluded (see DESIGN.md)."""
+        return not self.is_encdec
+
+    def decode_window(self, seq_len: int) -> int:
+        """KV-cache length used at decode for a given context length."""
+        if self.arch in ("ssm",):
+            return 0  # no KV cache at all
+        native = self.sliding_window
+        if seq_len > 32768:  # long mode -> sub-quadratic variant required
+            return min(native or self.long_window, self.long_window)
+        if native is not None and native < seq_len:
+            return native
+        return seq_len

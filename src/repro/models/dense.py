@@ -1,0 +1,317 @@
+"""Dense llama-family decoder LM (tinyllama, qwen2.5, granite, phi3, and
+the paper's own llama3-8b), with FastForward FFN integration.
+
+Three entry points, one per input-shape kind:
+  forward      — full-sequence teacher-forced training forward
+                 (FastForward mask path, Algorithm 1 budgets)
+  prefill      — paper §3.1 blockwise prompt processing, scan over
+                 128-token blocks (FastForward gather path)
+  decode_step  — single-token generation with KV cache (ring buffer in
+                 sliding-window/long mode)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ModelConfig
+from repro.nn import param as PM
+from repro.nn import layers as L
+from repro.nn import attention as A
+from repro.core import fastforward as FF
+from repro.distributed.sharding import constrain
+
+
+# ------------------------------------------------------------------ specs
+
+
+def norm_spec(cfg: ModelConfig, dtype):
+    return (L.layernorm_spec(cfg.d_model, dtype) if cfg.norm == "layernorm"
+            else L.rmsnorm_spec(cfg.d_model, dtype))
+
+
+def apply_norm(cfg: ModelConfig, params, x):
+    return (L.layernorm(params, x) if cfg.norm == "layernorm"
+            else L.rmsnorm(params, x))
+
+
+def layer_spec(cfg: ModelConfig, dtype):
+    return {
+        "ln1": norm_spec(cfg, dtype),
+        "attn": A.attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim, cfg.qkv_bias, dtype),
+        "ln2": norm_spec(cfg, dtype),
+        "ffn": FF.fastforward_ffn_spec(cfg, dtype=dtype),
+    }
+
+
+def specs(cfg: ModelConfig):
+    dtype = cfg.dtype
+    return {
+        "embed": L.embedding_spec(cfg.vocab, cfg.d_model, dtype),
+        "layers": PM.stack_specs(layer_spec(cfg, dtype), cfg.n_layers),
+        "ln_f": norm_spec(cfg, dtype),
+        "lm_head": L.embedding_spec(cfg.vocab, cfg.d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _ffn_apply_masked(cfg: ModelConfig, fp, x, budget):
+    if cfg.ff.enabled:
+        return FF.ff_masked_sequence(fp, cfg, x, budget)
+    return FF.ff_dense(fp, cfg, x)
+
+
+def forward(params, cfg: ModelConfig, batch, budgets=None):
+    """batch: {"tokens": [B,T]} (+"inputs_embeds" for VLM reuse).
+    Returns (logits [B,T,V], aux dict)."""
+    tokens = batch["tokens"]
+    if "inputs_embeds" in batch:
+        x = batch["inputs_embeds"].astype(cfg.dtype)
+    else:
+        x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    B, T = x.shape[:2]
+    x = constrain(x, ("batch", None, None))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if budgets is None:
+        budgets = jnp.asarray(FF.layer_budgets(cfg), jnp.float32)
+
+    def body(x, layer_in):
+        lp, budget = layer_in
+        xn = apply_norm(cfg, lp["ln1"], x)
+        h = A.attend_full(lp["attn"], xn, pos, causal=True,
+                          window=cfg.sliding_window,
+                          rope_theta=cfg.rope_theta,
+                          chunk=cfg.attn_chunk)
+        x = x + h
+        xn2 = apply_norm(cfg, lp["ln2"], x)
+        y = _ffn_apply_masked(cfg, lp["ffn"], xn2, budget)
+        x = constrain(x + y, ("batch", None, None))
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (params["layers"], budgets))
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = L.unembed(params["lm_head"], x)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, {}
+
+
+# ------------------------------------------------------------------ cache
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    kv = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {
+        "k": PM.ParamSpec(kv, ax, init="zeros", dtype=dtype),
+        "v": PM.ParamSpec(kv, ax, init="zeros", dtype=dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, cache_len, dtype),
+                        is_leaf=PM.is_spec)
+
+
+# ---------------------------------------------------------------- prefill
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
+            lengths=None, collect_hidden: bool = False, mesh=None):
+    """Blockwise prompt processing (paper §3.1): scan over N-token blocks.
+
+    batch: {"tokens": [B,T]}, T % block_size == 0. cache length >= T.
+    lengths: optional [B] true prompt lengths for right-padded batches
+    (positions beyond a row's length are never attended).
+    collect_hidden: also return the full hidden sequence [B,T,D]
+    (pre-final-norm) so the engine can read logits at lengths-1.
+    Returns (cache, logits_last) or (cache, logits_last, hidden)."""
+    tokens = batch["tokens"]
+    ff = cfg.ff
+    B, T = tokens.shape
+    N = ff.block_size
+    nb = T // N
+    blocks = tokens.reshape(B, nb, N).transpose(1, 0, 2)  # [nb, B, N]
+    k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+
+    def block_step(cache, blk_in):
+        blk_idx, tok_blk = blk_in
+        pos0 = blk_idx * N
+        x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
+        positions = pos0 + jnp.arange(N)[None, :]
+        is_dense = jnp.zeros((), bool)
+        if ff.dense_first_block:
+            is_dense = is_dense | (blk_idx == 0)
+        if ff.dense_last_block:
+            is_dense = is_dense | (blk_idx == nb - 1)
+
+        def layer_body(x, layer_in):
+            lp, kc, vc = layer_in
+            xn = apply_norm(cfg, lp["ln1"], x)
+            k_new, v_new = A.project_kv(lp["attn"], xn, positions,
+                                        cfg.rope_theta)
+            kc, vc = A.write_kv_block(kc, vc, k_new, v_new, pos0)
+            h = A.attend_block_cached(lp["attn"], xn, kc, vc, pos0,
+                                      window=cfg.sliding_window,
+                                      rope_theta=cfg.rope_theta,
+                                      lengths=lengths)
+            x = x + h
+            xn2 = apply_norm(cfg, lp["ln2"], x)
+            if ff.enabled and cfg.shardmap_ffn and mesh is not None:
+                from repro.core.sparse_ffn import ffn_block_sparse_shardmap
+                y = jax.lax.cond(
+                    is_dense,
+                    lambda xx: FF.ff_dense(lp["ffn"], cfg, xx),
+                    lambda xx: ffn_block_sparse_shardmap(
+                        lp["ffn"], cfg, xx, k_tiles, mesh), xn2)
+            elif ff.enabled:
+                y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, k_tiles,
+                                       shards, is_dense)
+            else:
+                y = FF.ff_dense(lp["ffn"], cfg, xn2)
+            return x + y, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            layer_body, x, (params["layers"], cache["k"], cache["v"]))
+        out = x if collect_hidden else x[:, -1, :]
+        return {"k": ks, "v": vs}, out
+
+    cache, outs = jax.lax.scan(
+        block_step, cache, (jnp.arange(nb), blocks))
+    if collect_hidden:
+        hidden = outs.transpose(1, 0, 2, 3).reshape(B, T, -1)
+        x_last = apply_norm(cfg, params["ln_f"], hidden[:, -1, :])
+        logits = L.unembed(params["lm_head"], x_last)
+        return cache, logits, hidden
+    x_last = apply_norm(cfg, params["ln_f"], outs[-1])
+    logits = L.unembed(params["lm_head"], x_last)
+    return cache, logits
+
+
+# ------------------------------------------------- fused prefill (ours)
+
+
+def prefill_fused(params, cfg: ModelConfig, batch, cache, shards: int = 1,
+                  mesh=None):
+    """Beyond-paper prefill (EXPERIMENTS.md §Perf): processes ALL prompt
+    blocks in parallel instead of the paper's sequential 128-token scan.
+
+    - attention: full-sequence causal, online-softmax chunked (no [T,S]
+      score materialization, no 2x masked-block waste);
+    - FFN: the same per-block FastForward gather path, vmapped over
+      blocks instead of scanned (identical math, no serialization);
+    - KV cache written wholesale per layer.
+    """
+    tokens = batch["tokens"]
+    ff = cfg.ff
+    B, T = tokens.shape
+    N = ff.block_size
+    nb = T // N
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    chunk = cfg.attn_chunk or 512
+
+    def sparse_all_blocks(fp, xn2):
+        xb = xn2.reshape(B * nb, N, -1)
+        if cfg.shardmap_ffn and mesh is not None:
+            from repro.core.sparse_ffn import ffn_block_sparse_shardmap
+            y = ffn_block_sparse_shardmap(fp, cfg, xb, k_tiles, mesh)
+        else:
+            y = FF.ff_block_sparse(fp, cfg, xb, k_tiles, shards)
+        y = y.reshape(B, nb, N, -1)
+        # dense first/last block (paper ablation Table 5): recompute the
+        # two boundary blocks densely — cheap relative to nb blocks.
+        if ff.dense_first_block:
+            y = y.at[:, 0].set(FF.ff_dense(fp, cfg, xn2[:, :N]))
+        if ff.dense_last_block:
+            y = y.at[:, -1].set(FF.ff_dense(fp, cfg, xn2[:, -N:]))
+        return y.reshape(B, T, -1)
+
+    def layer_body(x, lp):
+        xn = apply_norm(cfg, lp["ln1"], x)
+        h = A.attend_full(lp["attn"], xn, pos, causal=True,
+                          window=cfg.sliding_window,
+                          rope_theta=cfg.rope_theta, chunk=chunk)
+        k_new, v_new = A.project_kv(lp["attn"], xn, pos, cfg.rope_theta)
+        x = x + h
+        xn2 = apply_norm(cfg, lp["ln2"], x)
+        if ff.enabled:
+            y = sparse_all_blocks(lp["ffn"], xn2)
+        else:
+            y = FF.ff_dense(lp["ffn"], cfg, xn2)
+        return x + y, (k_new, v_new)
+
+    x, (ks, vs) = jax.lax.scan(layer_body, x, params["layers"])
+    S_cache = cache["k"].shape[2]
+    if S_cache == T:
+        cache = {"k": ks.astype(cache["k"].dtype),
+                 "v": vs.astype(cache["v"].dtype)}
+    else:
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], ks.astype(cache["k"].dtype), 0, axis=2),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vs.astype(cache["v"].dtype), 0, axis=2),
+        }
+    x_last = apply_norm(cfg, params["ln_f"], x[:, -1, :])
+    logits = L.unembed(params["lm_head"], x_last)
+    return cache, logits
+
+
+# ------------------------------------------------------------ decode step
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, position,
+                shards: int = 1, window: Optional[int] = None):
+    """token: [B] int32; cache from init_cache; position: scalar int32
+    OR [B] int32 for ragged batches (per-sequence decode positions).
+    window: ring-buffer size when the cache is a sliding window."""
+    ff = cfg.ff
+    B = token.shape[0]
+    ragged = jnp.ndim(position) == 1
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
+    positions = (position[:, None] if ragged
+                 else jnp.full((B, 1), position))
+    k_tiles = (FF.k_tiles_for(cfg, shards=shards)
+               if (ff.enabled and ff.apply_to_decode) else 0)
+
+    def layer_body(x, layer_in):
+        lp, kc, vc = layer_in
+        xn = apply_norm(cfg, lp["ln1"], x)
+        k_new, v_new = A.project_kv(lp["attn"], xn, positions,
+                                    cfg.rope_theta)
+        if ragged:
+            kc, vc = A.write_kv_tok(kc, vc, k_new, v_new, position)
+            h = A.attend_decode_ragged(lp["attn"], xn, kc, vc, position,
+                                       rope_theta=cfg.rope_theta)
+        else:
+            if window:
+                kc, vc = A.write_kv_ring(kc, vc, k_new, v_new, position,
+                                         window)
+            else:
+                kc, vc = A.write_kv_block(kc, vc, k_new, v_new, position)
+            h = A.attend_decode(lp["attn"], xn, kc, vc, position,
+                                window=window, rope_theta=cfg.rope_theta)
+        x = x + h
+        xn2 = apply_norm(cfg, lp["ln2"], x)
+        if k_tiles:
+            y = FF.ff_decode_sparse(lp["ffn"], cfg, xn2, k_tiles, shards)
+        else:
+            y = FF.ff_dense(lp["ffn"], cfg, xn2)
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(cfg, params["ln_f"], x)
+    logits = L.unembed(params["lm_head"], x[:, 0, :])
+    return logits, {"k": ks, "v": vs}

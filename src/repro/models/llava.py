@@ -1,0 +1,101 @@
+"""LLaVA-NeXT style VLM: Mistral-7B language backbone consuming stubbed
+anyres vision embeddings (the ViT/SigLIP tower + projector is a STUB per
+the assignment: `input_specs` provides projected patch embeddings
+[B, n_patches, d_model] directly).
+
+Prompt layout: [patch embeddings | text tokens]. Image-region blocks are
+kept dense by FastForward (treated like sink blocks — cross-modal mixing
+concentrates there; DESIGN.md §4). The backbone honors Mistral's native
+sliding window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+from repro.nn import layers as L
+from repro.core import fastforward as FF
+from repro.models import dense as D
+
+specs = D.specs
+cache_spec = D.cache_spec
+init_cache = D.init_cache
+decode_step = D.decode_step
+
+
+def fuse_inputs(params, cfg: ModelConfig, batch):
+    """[B, n_patches + T_text, D] fused embedding sequence."""
+    patches = batch["patch_embed"].astype(cfg.dtype)      # [B, P, D]
+    tok_embed = L.embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
+    return jnp.concatenate([patches, tok_embed], axis=1)
+
+
+def forward(params, cfg: ModelConfig, batch, budgets=None):
+    """batch: {"patch_embed": [B,P,D], "tokens": [B,T_text]}.
+    Returns logits over the FULL fused sequence [B, P+T_text, V]; the
+    caller masks image-region labels."""
+    x = fuse_inputs(params, cfg, batch)
+    return D.forward(params, cfg, {"tokens": batch["tokens"],
+                                   "inputs_embeds": x}, budgets)
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
+            mesh=None):
+    """Blockwise prefill over the fused sequence. Reuses the dense-model
+    scan but feeds embeddings instead of token ids, so the image region
+    flows through the same 128-token blocks (kept dense: the image spans
+    the first ceil(P/N) blocks; FastForward's dense_first_block covers
+    block 0 and we extend density over all image blocks)."""
+    x = fuse_inputs(params, cfg, batch)
+    ff = cfg.ff
+    B, T, _ = x.shape
+    N = ff.block_size
+    nb = T // N
+    n_img_blocks = -(-cfg.n_patches // N)
+    blocks = x.reshape(B, nb, N, -1).transpose(1, 0, 2, 3)  # [nb,B,N,D]
+    k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    from repro.nn import attention as A
+
+    def block_step(cache, blk_in):
+        blk_idx, x_blk = blk_in
+        pos0 = blk_idx * N
+        positions = pos0 + jnp.arange(N)[None, :]
+        is_dense = (blk_idx < n_img_blocks) if ff.dense_first_block \
+            else jnp.zeros((), bool)
+        if ff.dense_last_block:
+            is_dense = is_dense | (blk_idx == nb - 1)
+        xx = x_blk
+
+        def layer_body(xx, layer_in):
+            lp, kc, vc = layer_in
+            xn = D.apply_norm(cfg, lp["ln1"], xx)
+            k_new, v_new = A.project_kv(lp["attn"], xn, positions,
+                                        cfg.rope_theta)
+            kc, vc = A.write_kv_block(kc, vc, k_new, v_new, pos0)
+            h = A.attend_block_cached(lp["attn"], xn, kc, vc, pos0,
+                                      window=cfg.sliding_window,
+                                      rope_theta=cfg.rope_theta)
+            xx = xx + h
+            xn2 = D.apply_norm(cfg, lp["ln2"], xx)
+            if ff.enabled and cfg.shardmap_ffn and mesh is not None:
+                from repro.core.sparse_ffn import ffn_block_sparse_shardmap
+                y = jax.lax.cond(
+                    is_dense,
+                    lambda xa: FF.ff_dense(lp["ffn"], cfg, xa),
+                    lambda xa: ffn_block_sparse_shardmap(
+                        lp["ffn"], cfg, xa, k_tiles, mesh), xn2)
+            elif ff.enabled:
+                y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, k_tiles,
+                                       shards, is_dense)
+            else:
+                y = FF.ff_dense(lp["ffn"], cfg, xn2)
+            return xx + y, (kc, vc)
+
+        xx, (ks, vs) = jax.lax.scan(
+            layer_body, xx, (params["layers"], cache["k"], cache["v"]))
+        return {"k": ks, "v": vs}, xx[:, -1, :]
+
+    cache, lasts = jax.lax.scan(block_step, cache, (jnp.arange(nb), blocks))
+    x_last = D.apply_norm(cfg, params["ln_f"], lasts[-1])
+    return cache, L.unembed(params["lm_head"], x_last)

@@ -1,0 +1,279 @@
+"""Mixture-of-Experts decoder LM (qwen2-moe, kimi-k2).
+
+Routed experts: top-k routing with capacity-based scatter dispatch
+(GShard-style position-in-expert via cumsum, token drop beyond capacity)
+— batched expert einsum keeps HLO FLOPs ≈ active FLOPs × capacity factor.
+Shared experts: a dense always-on FFN path; FastForward applies HERE
+(the routed experts are already contextually sparse — see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ModelConfig
+from repro.nn import param as PM
+from repro.nn import layers as L
+from repro.nn import attention as A
+from repro.core import fastforward as FF
+from repro.core import sparse_ffn as S
+from repro.models import dense as D
+from repro.distributed.sharding import constrain
+
+
+# ------------------------------------------------------------------ specs
+
+
+def moe_ffn_spec(cfg: ModelConfig, dtype):
+    e, dff = cfg.n_experts, cfg.d_ff_expert
+    d = cfg.d_model
+    sp = {
+        "router": PM.ParamSpec((d, e), ("embed", None), scale=1.0, dtype=dtype),
+        "wg_e": PM.ParamSpec((e, d, dff), ("expert", "embed", "mlp_expert"), dtype=dtype),
+        "wu_e": PM.ParamSpec((e, d, dff), ("expert", "embed", "mlp_expert"), dtype=dtype),
+        "wd_e": PM.ParamSpec((e, dff, d), ("expert", "mlp_expert", "embed"), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        shared_ff = cfg.n_shared_experts * cfg.d_ff_expert
+        sp["shared"] = FF.fastforward_ffn_spec(cfg, d_ff=shared_ff, dtype=dtype)
+        sp["shared_gate"] = PM.ParamSpec((d, 1), ("embed", None), dtype=dtype)
+    return sp
+
+
+def layer_spec(cfg: ModelConfig, dtype):
+    return {
+        "ln1": D.norm_spec(cfg, dtype),
+        "attn": A.attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim, cfg.qkv_bias, dtype),
+        "ln2": D.norm_spec(cfg, dtype),
+        "moe": moe_ffn_spec(cfg, dtype),
+    }
+
+
+def specs(cfg: ModelConfig):
+    dtype = cfg.dtype
+    return {
+        "embed": L.embedding_spec(cfg.vocab, cfg.d_model, dtype),
+        "layers": PM.stack_specs(layer_spec(cfg, dtype), cfg.n_layers),
+        "ln_f": D.norm_spec(cfg, dtype),
+        "lm_head": L.embedding_spec(cfg.vocab, cfg.d_model, dtype),
+    }
+
+
+# --------------------------------------------------------------- routing
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor
+                      / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for layout friendliness
+
+
+def routed_experts(params, cfg: ModelConfig, x):
+    """x: [B, T, D] -> (y [B, T, D], aux_loss scalar).
+
+    Scatter-based capacity dispatch; drops overflow tokens (their routed
+    contribution is zero — the shared expert/residual still carries them).
+    """
+    B, T, Dm = x.shape
+    N = B * T
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(N, cfg)
+    xf = x.reshape(N, Dm)
+    logits = jnp.einsum("nd,de->ne", xf, params["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # [N, E]
+    top_p, top_e = jax.lax.top_k(probs, K)                       # [N, K]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                                 # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    flat_e = top_e.reshape(-1)                                   # [N*K]
+    flat_w = top_p.reshape(-1).astype(jnp.float32)
+    flat_tok = jnp.arange(N * K) // K
+
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # [N*K, E]
+    # sharding probe (EXPERIMENTS.md §Perf K1): explicit constraint is a
+    # no-op — GSPMD already keeps the bookkeeping token-sharded; the MoE
+    # collective cost is the scatter-add into the [E,C,D] buffer below.
+    onehot = constrain(onehot, ("batch", None))
+    pos = jnp.cumsum(onehot, axis=0) * onehot                    # 1-based
+    pos_in_e = jnp.max(pos, axis=-1) - 1                         # [N*K]
+    keep = (pos_in_e >= 0) & (pos_in_e < C)
+    slot = jnp.clip(pos_in_e, 0, C - 1)
+
+    buf = jnp.zeros((E, C, Dm), x.dtype)
+    contrib = jnp.where(keep[:, None], xf[flat_tok], 0).astype(x.dtype)
+    buf = buf.at[flat_e, slot].add(contrib, mode="drop")
+    buf = constrain(buf, ("expert", None, None))
+
+    h_g = jnp.einsum("ecd,edf->ecf", buf, params["wg_e"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    h_u = jnp.einsum("ecd,edf->ecf", buf, params["wu_e"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    h = L.swiglu(h_g, h_u)
+    out = jnp.einsum("ecf,efd->ecd", h, params["wd_e"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+
+    gathered = out[flat_e, slot]                                 # [N*K, D]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = jnp.zeros((N, Dm), jnp.float32).at[flat_tok].add(
+        gathered.astype(jnp.float32) * flat_w[:, None])
+    return y.reshape(B, T, Dm).astype(x.dtype), aux
+
+
+def moe_block(params, cfg: ModelConfig, x, budget=None, mode="train",
+              k_tiles=0, shards=1, is_dense=None):
+    """Full MoE FFN: routed experts + (FastForward-sparsified) shared
+    expert. mode: train (mask path) | block (gather path) | dense."""
+    y, aux = routed_experts(params, cfg, x)
+    if cfg.n_shared_experts:
+        sp = params["shared"]
+        if cfg.ff.enabled and mode == "train":
+            ys = FF.ff_masked_sequence(sp, cfg, x, budget)
+        elif cfg.ff.enabled and mode == "block" and k_tiles:
+            ys = FF.ff_block_sparse(sp, cfg, x, k_tiles, shards, is_dense)
+        else:
+            ys = FF.ff_dense(sp, cfg, x)
+        gate = jax.nn.sigmoid(
+            jnp.einsum("btd,do->bto", x, params["shared_gate"],
+                       preferred_element_type=jnp.float32))
+        y = y + (gate * ys.astype(jnp.float32)).astype(y.dtype)
+    return y, aux
+
+
+def _shared_ff_width(cfg: ModelConfig) -> int:
+    return cfg.n_shared_experts * cfg.d_ff_expert
+
+
+def shared_k_tiles(cfg: ModelConfig, shards: int = 1) -> int:
+    if not (cfg.ff.enabled and cfg.n_shared_experts):
+        return 0
+    return FF.k_tiles_for(cfg, d_ff=_shared_ff_width(cfg), shards=shards)
+
+
+# ---------------------------------------------------------------- forward
+
+
+def forward(params, cfg: ModelConfig, batch, budgets=None):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    B, T = x.shape[:2]
+    x = constrain(x, ("batch", None, None))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if budgets is None:
+        budgets = jnp.asarray(FF.layer_budgets(cfg), jnp.float32)
+
+    def body(carry, layer_in):
+        x, aux = carry
+        lp, budget = layer_in
+        xn = D.apply_norm(cfg, lp["ln1"], x)
+        h = A.attend_full(lp["attn"], xn, pos, causal=True,
+                          window=cfg.sliding_window,
+                          rope_theta=cfg.rope_theta,
+                          chunk=cfg.attn_chunk)
+        x = x + h
+        xn2 = D.apply_norm(cfg, lp["ln2"], x)
+        y, a = moe_block(lp["moe"], cfg, xn2, budget, mode="train")
+        x = constrain(x + y, ("batch", None, None))
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)),
+                               (params["layers"], budgets))
+    x = D.apply_norm(cfg, params["ln_f"], x)
+    logits = L.unembed(params["lm_head"], x)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, {"aux_loss": aux}
+
+
+# ------------------------------------------------------- cache + serving
+
+
+cache_spec = D.cache_spec
+init_cache = D.init_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
+    tokens = batch["tokens"]
+    ff = cfg.ff
+    B, T = tokens.shape
+    N = ff.block_size
+    nb = T // N
+    blocks = tokens.reshape(B, nb, N).transpose(1, 0, 2)
+    k_tiles = shared_k_tiles(cfg, shards)
+
+    def block_step(cache, blk_in):
+        blk_idx, tok_blk = blk_in
+        pos0 = blk_idx * N
+        x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
+        positions = pos0 + jnp.arange(N)[None, :]
+        is_dense = jnp.zeros((), bool)
+        if ff.dense_first_block:
+            is_dense = is_dense | (blk_idx == 0)
+        if ff.dense_last_block:
+            is_dense = is_dense | (blk_idx == nb - 1)
+
+        def layer_body(x, layer_in):
+            lp, kc, vc = layer_in
+            xn = D.apply_norm(cfg, lp["ln1"], x)
+            k_new, v_new = A.project_kv(lp["attn"], xn, positions,
+                                        cfg.rope_theta)
+            kc, vc = A.write_kv_block(kc, vc, k_new, v_new, pos0)
+            h = A.attend_block_cached(lp["attn"], xn, kc, vc, pos0,
+                                      window=cfg.sliding_window,
+                                      rope_theta=cfg.rope_theta)
+            x = x + h
+            xn2 = D.apply_norm(cfg, lp["ln2"], x)
+            y, _ = moe_block(lp["moe"], cfg, xn2, mode="block",
+                             k_tiles=k_tiles, shards=shards,
+                             is_dense=is_dense)
+            return x + y, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            layer_body, x, (params["layers"], cache["k"], cache["v"]))
+        return {"k": ks, "v": vs}, x[:, -1, :]
+
+    cache, lasts = jax.lax.scan(block_step, cache, (jnp.arange(nb), blocks))
+    x_last = D.apply_norm(cfg, params["ln_f"], lasts[-1])
+    return cache, L.unembed(params["lm_head"], x_last)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, position,
+                shards: int = 1, window=None):
+    ff = cfg.ff
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
+    positions = jnp.full((B, 1), position)
+    k_tiles = shared_k_tiles(cfg, shards) if ff.apply_to_decode else 0
+
+    def layer_body(x, layer_in):
+        lp, kc, vc = layer_in
+        xn = D.apply_norm(cfg, lp["ln1"], x)
+        k_new, v_new = A.project_kv(lp["attn"], xn, positions,
+                                    cfg.rope_theta)
+        if window:
+            kc, vc = A.write_kv_ring(kc, vc, k_new, v_new, position, window)
+        else:
+            kc, vc = A.write_kv_block(kc, vc, k_new, v_new, position)
+        h = A.attend_decode(lp["attn"], xn, kc, vc, position, window=window,
+                            rope_theta=cfg.rope_theta)
+        x = x + h
+        xn2 = D.apply_norm(cfg, lp["ln2"], x)
+        mode = "block" if k_tiles else "dense"
+        y, _ = moe_block(lp["moe"], cfg, xn2, mode=mode, k_tiles=k_tiles,
+                         shards=shards)
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    x = D.apply_norm(cfg, params["ln_f"], x)
+    logits = L.unembed(params["lm_head"], x[:, 0, :])
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,17 @@
+"""Architecture registry: dispatch cfg.arch -> model module."""
+from __future__ import annotations
+
+from repro.models import dense, moe, whisper, llava, xlstm, zamba2
+
+_MODULES = {
+    "dense": dense,
+    "moe": moe,
+    "audio": whisper,
+    "vlm": llava,
+    "ssm": xlstm,
+    "hybrid": zamba2,
+}
+
+
+def get_model(cfg):
+    return _MODULES[cfg.arch]

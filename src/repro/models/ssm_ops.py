@@ -1,0 +1,289 @@
+"""State-space / recurrent cell machinery: Mamba2 SSD (chunked scan) and
+xLSTM cells (chunked mLSTM, sequential sLSTM).
+
+All chunked forms carry an explicit state so blockwise prefill and
+one-token decode reuse the same math; tests validate them against
+naive per-step recurrent references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def segsum(a):
+    """a: [..., T] -> [..., T, T] with out[t, s] = sum_{r=s+1..t} a_r for
+    s <= t, -inf above the diagonal (log-space decay matrix)."""
+    T = a.shape[-1]
+    cum = jnp.cumsum(a, -1)
+    d = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, d, NEG_INF)
+
+
+# =============================================================== Mamba2 SSD
+
+
+def ssd_chunked(x, dA, B, C, chunk: int, init_state=None):
+    """Chunked SSD scan (Mamba2).
+
+    x:  [Bb, T, H, P]   (inputs, dt already folded in: x * dt)
+    dA: [Bb, T, H]      (dt * A, negative log-decays)
+    B:  [Bb, T, G, N]   C: [Bb, T, G, N]  (G groups broadcast over H)
+    Returns (y [Bb,T,H,P], final_state [Bb,H,P,N]).
+    """
+    Bb, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert T % chunk == 0, (T, chunk)
+    nc, cs = T // chunk, chunk
+    rep = H // G
+
+    xr = x.reshape(Bb, nc, cs, H, P)
+    ar = dA.reshape(Bb, nc, cs, H).transpose(0, 3, 1, 2)      # [Bb,H,nc,cs]
+    Br = B.reshape(Bb, nc, cs, G, N)
+    Cr = C.reshape(Bb, nc, cs, G, N)
+
+    a_cum = jnp.cumsum(ar, -1)                                 # [Bb,H,nc,cs]
+    L = jnp.exp(segsum(ar))                                    # [Bb,H,nc,cs,cs]
+
+    # broadcast groups over heads
+    Bh = jnp.repeat(Br, rep, axis=3) if G != H else Br         # [Bb,nc,cs,H,N]
+    Ch = jnp.repeat(Cr, rep, axis=3) if G != H else Cr
+
+    # intra-chunk (diagonal blocks)
+    Gmat = jnp.einsum("bclhn,bcshn->bhcls", Ch, Bh,
+                      preferred_element_type=jnp.float32)
+    M = Gmat * L                                               # [Bb,H,nc,cs,cs]
+    y_diag = jnp.einsum("bhcls,bcshp->bclhp", M, xr,
+                        preferred_element_type=jnp.float32)
+
+    # chunk-final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)            # [Bb,H,nc,cs]
+    states = jnp.einsum("bcshn,bhcs,bcshp->bchpn", Bh, decay_states, xr,
+                        preferred_element_type=jnp.float32)    # [Bb,nc,H,P,N]
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                      # [Bb,H,nc]
+    s0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        st, dec = inp                                          # [Bb,H,P,N],[Bb,H]
+        s_new = dec[..., None, None] * s + st
+        return s_new, s                                        # emit state BEFORE chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # [Bb,nc,H,P,N]
+
+    # contribution of carried-in states
+    state_decay = jnp.exp(a_cum)                               # [Bb,H,nc,cs]
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Ch, prev_states,
+                       state_decay, preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(Bb, T, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_step(state, x_t, dA_t, B_t, C_t):
+    """One-token SSD update. state: [Bb,H,P,N]; x_t: [Bb,H,P];
+    dA_t: [Bb,H]; B_t, C_t: [Bb,G,N]. Returns (y [Bb,H,P], new_state)."""
+    G = B_t.shape[1]
+    H = x_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1) if G != H else B_t       # [Bb,H,N]
+    Ch = jnp.repeat(C_t, rep, axis=1) if G != H else C_t
+    s32 = state.astype(jnp.float32)
+    new = (jnp.exp(dA_t)[..., None, None] * s32
+           + jnp.einsum("bhp,bhn->bhpn", x_t.astype(jnp.float32), Bh))
+    y = jnp.einsum("bhpn,bhn->bhp", new, Ch)
+    return y.astype(x_t.dtype), new
+
+
+# ============================================================ mLSTM (xLSTM)
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, chunk: int, state=None):
+    """Chunk-parallel mLSTM with max-stabilized exponential gating.
+
+    q,k: [Bb,T,H,dk]; v: [Bb,T,H,dv]; i_gate,f_gate: [Bb,T,H] (logits).
+    state: (C [Bb,H,dk,dv], n [Bb,H,dk], m [Bb,H]) or None.
+    Returns (h [Bb,T,H,dv], state).
+    """
+    Bb, T, H, dk = q.shape
+    dv = v.shape[-1]
+    assert T % chunk == 0
+    nc, cs = T // chunk, chunk
+    qs = q.reshape(Bb, nc, cs, H, dk) / np.sqrt(dk)
+    ks = k.reshape(Bb, nc, cs, H, dk)
+    vs = v.reshape(Bb, nc, cs, H, dv)
+    a = jax.nn.log_sigmoid(f_gate).reshape(Bb, nc, cs, H).transpose(0, 3, 1, 2)
+    b = i_gate.reshape(Bb, nc, cs, H).transpose(0, 3, 1, 2)    # [Bb,H,nc,cs]
+    la = jnp.cumsum(a, -1)                                     # [Bb,H,nc,cs]
+    la_tot = la[..., -1]                                       # [Bb,H,nc]
+    w = la_tot[..., None] - la + b                             # [Bb,H,nc,cs]
+
+    if state is None:
+        C0 = jnp.zeros((Bb, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((Bb, H, dk), jnp.float32)
+        m0 = jnp.zeros((Bb, H), jnp.float32)
+    else:
+        C0, n0, m0 = [s.astype(jnp.float32) for s in state]
+
+    # D[t,s] = la_t - la_s + b_s (s<=t) in log space
+    Dmat = segsum(a) + b[..., None, :]                          # [Bb,H,nc,cs,cs]
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    Dmat = jnp.where(mask, Dmat, NEG_INF)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        qc, kc, vc, ac, bc, lac, wc, Dc = inp
+        # ac,lac,wc: [Bb,H,cs]; Dc: [Bb,H,cs,cs]; qc..: [Bb,cs,H,*]
+        la_t = lac                                             # [Bb,H,cs]
+        d_inter = m[..., None] + la_t                          # [Bb,H,cs]
+        m_intra = jnp.max(Dc, -1)                              # [Bb,H,cs]
+        m_out = jnp.maximum(d_inter, m_intra)                  # [Bb,H,cs]
+        S = jnp.exp(Dc - m_out[..., None])                     # [Bb,H,cs,cs]
+        qk = jnp.einsum("bthk,bshk->bhts", qc, kc,
+                        preferred_element_type=jnp.float32)
+        att = S * qk
+        h_intra = jnp.einsum("bhts,bshv->bthv", att, vc,
+                             preferred_element_type=jnp.float32)
+        w_inter = jnp.exp(d_inter - m_out)                     # [Bb,H,cs]
+        qC = jnp.einsum("bthk,bhkv->bthv", qc, C,
+                        preferred_element_type=jnp.float32)
+        h_inter = w_inter.transpose(0, 2, 1)[..., None] * qC
+        qn = jnp.einsum("bthk,bhk->bht", qc, n,
+                        preferred_element_type=jnp.float32)
+        denom_raw = w_inter * qn + jnp.sum(att, -1)   # [Bb,H,cs]
+        denom = jnp.maximum(jnp.abs(denom_raw), jnp.exp(-m_out))  # [Bb,H,cs]
+        h = (h_intra + h_inter) / denom.transpose(0, 2, 1)[..., None]
+        # state update to chunk end
+        la_T = lac[..., -1]                                    # [Bb,H]
+        m_new = jnp.maximum(m + la_T, jnp.max(wc, -1))
+        scale_old = jnp.exp(m + la_T - m_new)                  # [Bb,H]
+        src = jnp.exp(wc - m_new[..., None])                   # [Bb,H,cs]
+        kv = jnp.einsum("bhs,bshk,bshv->bhkv", src, kc, vc,
+                        preferred_element_type=jnp.float32)
+        ksum = jnp.einsum("bhs,bshk->bhk", src, kc,
+                          preferred_element_type=jnp.float32)
+        C = scale_old[..., None, None] * C + kv
+        n = scale_old[..., None] * n + ksum
+        return (C, n, m_new), h
+
+    xs = (qs.transpose(1, 0, 2, 3, 4), ks.transpose(1, 0, 2, 3, 4),
+          vs.transpose(1, 0, 2, 3, 4),
+          a.transpose(2, 0, 1, 3), b.transpose(2, 0, 1, 3),
+          la.transpose(2, 0, 1, 3), w.transpose(2, 0, 1, 3),
+          Dmat.transpose(2, 0, 1, 3, 4))
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(Bb, T, H, dv)
+    return h.astype(v.dtype), (C, n, m)
+
+
+def mlstm_step(state, q_t, k_t, v_t, i_t, f_t):
+    """One-token mLSTM update. q_t,k_t: [Bb,H,dk]; v_t: [Bb,H,dv];
+    i_t,f_t: [Bb,H] logits. Returns (h [Bb,H,dv], new_state)."""
+    C, n, m = [s.astype(jnp.float32) for s in state]
+    dk = q_t.shape[-1]
+    qf = q_t.astype(jnp.float32) / np.sqrt(dk)
+    a = jax.nn.log_sigmoid(f_t)                                # [Bb,H]
+    m_new = jnp.maximum(a + m, i_t)
+    fscale = jnp.exp(a + m - m_new)
+    iscale = jnp.exp(i_t - m_new)
+    C = fscale[..., None, None] * C + iscale[..., None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k_t.astype(jnp.float32), v_t.astype(jnp.float32))
+    n = fscale[..., None] * n + iscale[..., None] * k_t.astype(jnp.float32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                      jnp.exp(-m_new))
+    return (num / den[..., None]).astype(v_t.dtype), (C, n, m_new)
+
+
+def mlstm_recurrent_ref(q, k, v, i_gate, f_gate):
+    """Naive per-step reference (oracle for tests)."""
+    Bb, T, H, dk = q.shape
+    dv = v.shape[-1]
+    state = (jnp.zeros((Bb, H, dk, dv), jnp.float32),
+             jnp.zeros((Bb, H, dk), jnp.float32),
+             jnp.zeros((Bb, H), jnp.float32))
+
+    def step(state, t_in):
+        qt, kt, vt, it, ft = t_in
+        h, state = mlstm_step(state, qt, kt, vt, it, ft)
+        return state, h
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_gate.transpose(1, 0, 2),
+          f_gate.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), state
+
+
+# ============================================================ sLSTM (xLSTM)
+
+
+def slstm_scan(zg, ig, fg, og, r, state=None):
+    """Sequential sLSTM over a sequence with recurrent gate feedback.
+
+    zg,ig,fg,og: [Bb,T,H,dh] pre-activation gate contributions from the
+    input projection. r: [H, dh, 4*dh] block-diagonal recurrent matrix
+    adding R @ h_{t-1} to the gates. state: (c,n,h,m) each [Bb,H,dh].
+    Returns (h_seq [Bb,T,H,dh], state).
+    """
+    Bb, T, H, dh = zg.shape
+    if state is None:
+        z0 = jnp.zeros((Bb, H, dh), jnp.float32)
+        state = (z0, z0, z0, z0)
+
+    def step(state, gates_t):
+        c, n, h, m = state
+        zt, it, ft, ot = gates_t                               # [Bb,H,dh]
+        rgate = jnp.einsum("bhd,hdg->bhg", h, r.astype(jnp.float32))
+        rz, ri, rf, ro = jnp.split(rgate, 4, axis=-1)
+        zt = jnp.tanh(zt.astype(jnp.float32) + rz)
+        it_l = it.astype(jnp.float32) + ri
+        ft_l = ft.astype(jnp.float32) + rf
+        ot = jax.nn.sigmoid(ot.astype(jnp.float32) + ro)
+        lf = jax.nn.log_sigmoid(ft_l)
+        m_new = jnp.maximum(lf + m, it_l)
+        i_e = jnp.exp(it_l - m_new)
+        f_e = jnp.exp(lf + m - m_new)
+        c = f_e * c + i_e * zt
+        n = f_e * n + i_e
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    xs = (zg.transpose(1, 0, 2, 3), ig.transpose(1, 0, 2, 3),
+          fg.transpose(1, 0, 2, 3), og.transpose(1, 0, 2, 3))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3).astype(zg.dtype), state
+
+
+# ------------------------------------------------------------- conv utils
+
+
+def causal_conv1d(x, w, b=None):
+    """Depthwise causal conv. x: [Bb,T,Cc]; w: [K,Cc]; b: [Cc]."""
+    K = w.shape[0]
+    pads = [jnp.pad(x, ((0, 0), (K - 1 - k, 0), (0, 0)))[:, :x.shape[1]]
+            for k in range(K)]
+    y = sum(pads[k] * w[k][None, None, :] for k in range(K))
+    if b is not None:
+        y = y + b[None, None, :]
+    return y
+
+
+def conv_step(conv_state, x_t, w, b=None):
+    """One-token depthwise conv. conv_state: [Bb,K-1,Cc] (previous
+    inputs, oldest first); x_t: [Bb,Cc]. Returns (y_t, new_state)."""
+    K = w.shape[0]
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [Bb,K,Cc]
+    y = jnp.einsum("bkc,kc->bc", full, w)
+    if b is not None:
+        y = y + b[None, :]
+    return y, full[:, 1:, :]

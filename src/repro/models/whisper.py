@@ -1,0 +1,253 @@
+"""Whisper-style encoder-decoder (audio backbone only, per assignment).
+
+The mel-spectrogram + conv feature extractor is a STUB: `input_specs`
+provides precomputed frame embeddings [B, n_audio_frames, d_model].
+Encoder: non-causal self-attention, sinusoidal positions, LayerNorm,
+GELU FFN. Decoder: causal self-attention + cross-attention; FastForward
+applies to the decoder FFN (sink-token reasoning is decoder-side).
+long_500k is skipped for this arch (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+from repro.nn import param as PM
+from repro.nn import layers as L
+from repro.nn import attention as A
+from repro.core import fastforward as FF
+from repro.core import sparse_ffn as S
+from repro.models import dense as D
+
+
+def enc_layer_spec(cfg: ModelConfig, dtype):
+    return {
+        "ln1": L.layernorm_spec(cfg.d_model, dtype),
+        "attn": A.attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim, True, dtype),
+        "ln2": L.layernorm_spec(cfg.d_model, dtype),
+        "ffn": S.ffn_spec(cfg.d_model, cfg.d_ff, gated=False, dtype=dtype),
+    }
+
+
+def dec_layer_spec(cfg: ModelConfig, dtype):
+    return {
+        "ln1": L.layernorm_spec(cfg.d_model, dtype),
+        "self_attn": A.attention_spec(cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.head_dim, True, dtype),
+        "ln_x": L.layernorm_spec(cfg.d_model, dtype),
+        "cross_attn": A.attention_spec(cfg.d_model, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.head_dim, True, dtype),
+        "ln2": L.layernorm_spec(cfg.d_model, dtype),
+        "ffn": FF.fastforward_ffn_spec(cfg, dtype=dtype),
+    }
+
+
+def specs(cfg: ModelConfig):
+    dtype = cfg.dtype
+    n_enc = cfg.n_encoder_layers or cfg.n_layers
+    return {
+        "embed": L.embedding_spec(cfg.vocab, cfg.d_model, dtype),
+        "enc_layers": PM.stack_specs(enc_layer_spec(cfg, dtype), n_enc),
+        "ln_enc": L.layernorm_spec(cfg.d_model, dtype),
+        "dec_layers": PM.stack_specs(dec_layer_spec(cfg, dtype), cfg.n_layers),
+        "ln_f": L.layernorm_spec(cfg.d_model, dtype),
+        "lm_head": L.embedding_spec(cfg.vocab, cfg.d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------- encoder
+
+
+def encode(params, cfg: ModelConfig, audio_embed):
+    """audio_embed: [B, T_a, D] (stub frontend output)."""
+    T_a = audio_embed.shape[1]
+    x = audio_embed.astype(cfg.dtype)
+    x = x + L.sinusoidal_positions(T_a, cfg.d_model)[None].astype(cfg.dtype)
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.arange(T_a)[None], (B, T_a))
+
+    def body(x, lp):
+        xn = L.layernorm(lp["ln1"], x)
+        h = A.attend_full(lp["attn"], xn, pos, causal=False, use_rope=False)
+        x = x + h
+        xn2 = L.layernorm(lp["ln2"], x)
+        return x + S.ffn_dense(lp["ffn"], xn2, "gelu"), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return L.layernorm(params["ln_enc"], x)
+
+
+# ---------------------------------------------------------------- decoder
+
+
+def _dec_layer(cfg, lp, x, pos, enc_out, budget):
+    xn = L.layernorm(lp["ln1"], x)
+    h = A.attend_full(lp["self_attn"], xn, pos, causal=True, use_rope=False)
+    x = x + h
+    xn = L.layernorm(lp["ln_x"], x)
+    q = A.project_q(lp["cross_attn"], xn)
+    k, v = A.project_kv(lp["cross_attn"], enc_out)
+    o = A.dot_attention(q, k, v)
+    x = x + A.output_proj(lp["cross_attn"], o)
+    xn2 = L.layernorm(lp["ln2"], x)
+    if cfg.ff.enabled:
+        y = FF.ff_masked_sequence(lp["ffn"], cfg, xn2, budget)
+    else:
+        y = FF.ff_dense(lp["ffn"], cfg, xn2)
+    return x + y
+
+
+def forward(params, cfg: ModelConfig, batch, budgets=None):
+    """batch: {"audio_embed": [B,Ta,D], "tokens": [B,T]}."""
+    enc_out = encode(params, cfg, batch["audio_embed"])
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    x = x + L.sinusoidal_positions(T, cfg.d_model)[None].astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if budgets is None:
+        budgets = jnp.asarray(FF.layer_budgets(cfg), jnp.float32)
+
+    def body(x, layer_in):
+        lp, budget = layer_in
+        return _dec_layer(cfg, lp, x, pos, enc_out, budget), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, (params["dec_layers"], budgets))
+    x = L.layernorm(params["ln_f"], x)
+    return L.unembed(params["lm_head"], x), {}
+
+
+# ------------------------------------------------------------------ cache
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    kv = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    xa = (cfg.n_layers, batch, cfg.n_audio_frames, cfg.n_kv_heads,
+          cfg.head_dim)
+    ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {
+        "k": PM.ParamSpec(kv, ax, init="zeros", dtype=dtype),
+        "v": PM.ParamSpec(kv, ax, init="zeros", dtype=dtype),
+        "ck": PM.ParamSpec(xa, ax, init="zeros", dtype=dtype),
+        "cv": PM.ParamSpec(xa, ax, init="zeros", dtype=dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, cache_len, dtype),
+                        is_leaf=PM.is_spec)
+
+
+def precompute_cross(params, cfg: ModelConfig, audio_embed, cache):
+    """Fill the cross-attention KV cache from the encoder output."""
+    enc_out = encode(params, cfg, audio_embed)
+
+    def one(lp):
+        return A.project_kv(lp["cross_attn"], enc_out)
+
+    ck, cv = jax.vmap(one)(params["dec_layers"])
+    return dict(cache, ck=ck, cv=cv)
+
+
+# ------------------------------------- blockwise prefill (decoder side)
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
+    """Blockwise decoder prefill over the token prompt; cross KV must be
+    precomputed (or audio_embed given in batch)."""
+    if "audio_embed" in batch:
+        cache = precompute_cross(params, cfg, batch["audio_embed"], cache)
+    tokens = batch["tokens"]
+    ff = cfg.ff
+    B, T = tokens.shape
+    N = ff.block_size
+    nb = T // N
+    blocks = tokens.reshape(B, nb, N).transpose(1, 0, 2)
+    k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    pos_table = L.sinusoidal_positions(T, cfg.d_model).astype(cfg.dtype)
+
+    def block_step(cache, blk_in):
+        blk_idx, tok_blk = blk_in
+        pos0 = blk_idx * N
+        x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(pos_table, pos0, N, 0)[None]
+        is_dense = jnp.zeros((), bool)
+        if ff.dense_first_block:
+            is_dense = is_dense | (blk_idx == 0)
+        if ff.dense_last_block:
+            is_dense = is_dense | (blk_idx == nb - 1)
+
+        def layer_body(x, layer_in):
+            lp, kc, vc, ck, cv = layer_in
+            xn = L.layernorm(lp["ln1"], x)
+            k_new, v_new = A.project_kv(lp["self_attn"], xn)
+            kc, vc = A.write_kv_block(kc, vc, k_new, v_new, pos0)
+            h = A.attend_block_cached(lp["self_attn"], xn, kc, vc, pos0,
+                                      use_rope=False)
+            x = x + h
+            xn = L.layernorm(lp["ln_x"], x)
+            q = A.project_q(lp["cross_attn"], xn)
+            o = A.dot_attention(q, ck, cv)
+            x = x + A.output_proj(lp["cross_attn"], o)
+            xn2 = L.layernorm(lp["ln2"], x)
+            if ff.enabled:
+                y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, k_tiles,
+                                       shards, is_dense)
+            else:
+                y = FF.ff_dense(lp["ffn"], cfg, xn2)
+            return x + y, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            layer_body, x,
+            (params["dec_layers"], cache["k"], cache["v"],
+             cache["ck"], cache["cv"]))
+        return dict(cache, k=ks, v=vs), x[:, -1, :]
+
+    cache, lasts = jax.lax.scan(block_step, cache, (jnp.arange(nb), blocks))
+    x_last = L.layernorm(params["ln_f"], lasts[-1])
+    return cache, L.unembed(params["lm_head"], x_last)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, position,
+                shards: int = 1, window=None):
+    ff = cfg.ff
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
+    T_max = cache["k"].shape[2]
+    pos_table = L.sinusoidal_positions(T_max, cfg.d_model).astype(cfg.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(pos_table, position, 1, 0)[None]
+    k_tiles = (FF.k_tiles_for(cfg, shards=shards)
+               if (ff.enabled and ff.apply_to_decode) else 0)
+
+    def layer_body(x, layer_in):
+        lp, kc, vc, ck, cv = layer_in
+        xn = L.layernorm(lp["ln1"], x)
+        k_new, v_new = A.project_kv(lp["self_attn"], xn)
+        kc, vc = A.write_kv_block(kc, vc, k_new, v_new, position)
+        h = A.attend_decode(lp["self_attn"], xn, kc, vc, position,
+                            use_rope=False)
+        x = x + h
+        xn = L.layernorm(lp["ln_x"], x)
+        q = A.project_q(lp["cross_attn"], xn)
+        o = A.dot_attention(q, ck, cv)
+        x = x + A.output_proj(lp["cross_attn"], o)
+        xn2 = L.layernorm(lp["ln2"], x)
+        if k_tiles:
+            y = FF.ff_decode_sparse(lp["ffn"], cfg, xn2, k_tiles, shards)
+        else:
+            y = FF.ff_dense(lp["ffn"], cfg, xn2)
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        layer_body, x,
+        (params["dec_layers"], cache["k"], cache["v"],
+         cache["ck"], cache["cv"]))
+    x = L.layernorm(params["ln_f"], x)
+    logits = L.unembed(params["lm_head"], x[:, 0, :])
+    return logits, dict(cache, k=ks, v=vs)

@@ -1,0 +1,237 @@
+"""xLSTM LM (arXiv:2405.04517): alternating mLSTM / sLSTM blocks.
+
+d_ff = 0 — there is NO feed-forward network in these blocks, so the
+paper's FFN-sparsity technique is inapplicable (DESIGN.md
+§Arch-applicability); the architecture runs dense. Attention-free:
+long_500k decode is native (O(1) state).
+
+Layers are scanned in (mLSTM, sLSTM) pairs: even layers mLSTM (matrix
+memory, chunk-parallel), odd layers sLSTM (scalar memory, sequential).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+from repro.nn import param as PM
+from repro.nn import layers as L
+from repro.models import ssm_ops as O
+
+
+def _dims(cfg: ModelConfig):
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    H = cfg.n_heads
+    return D, Di, H, Di // H
+
+
+def mlstm_spec(cfg: ModelConfig, dtype):
+    D, Di, H, dh = _dims(cfg)
+    return {
+        "ln": L.rmsnorm_spec(D, dtype),
+        "w_up": PM.ParamSpec((D, 2 * Di), ("embed", "mlp"), dtype=dtype),
+        "conv_w": PM.ParamSpec((cfg.ssm_conv, Di), (None, "mlp"),
+                               init="normal", scale=0.1, dtype=dtype),
+        "conv_b": PM.ParamSpec((Di,), ("mlp",), init="zeros", dtype=dtype),
+        "wq": PM.ParamSpec((Di, Di), ("mlp", None), dtype=dtype),
+        "wk": PM.ParamSpec((Di, Di), ("mlp", None), dtype=dtype),
+        "wv": PM.ParamSpec((Di, Di), ("mlp", None), dtype=dtype),
+        "w_i": PM.ParamSpec((Di, H), ("mlp", None), dtype=dtype),
+        "b_i": PM.ParamSpec((H,), (None,), init="zeros", dtype=dtype),
+        "w_f": PM.ParamSpec((Di, H), ("mlp", None), dtype=dtype),
+        # positive forget-gate bias: start near "remember everything"
+        "b_f": PM.ParamSpec((H,), (None,), init="ones", dtype=dtype),
+        "ln_h": L.rmsnorm_spec(Di, dtype),
+        "w_down": PM.ParamSpec((Di, D), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def slstm_spec(cfg: ModelConfig, dtype):
+    D, _, H, _ = _dims(cfg)
+    dh = D // H
+    return {
+        "ln": L.rmsnorm_spec(D, dtype),
+        "w": PM.ParamSpec((D, 4 * D), ("embed", "mlp"), dtype=dtype),
+        "b": PM.ParamSpec((4 * D,), ("mlp",), init="zeros", dtype=dtype),
+        "r": PM.ParamSpec((H, dh, 4 * dh), (None, None, None),
+                          init="normal", scale=0.05, dtype=dtype),
+        "ln_h": L.rmsnorm_spec(D, dtype),
+        "w_out": PM.ParamSpec((D, D), ("embed", None), dtype=dtype),
+    }
+
+
+def pair_spec(cfg: ModelConfig, dtype):
+    return {"m": mlstm_spec(cfg, dtype), "s": slstm_spec(cfg, dtype)}
+
+
+def specs(cfg: ModelConfig):
+    dtype = cfg.dtype
+    assert cfg.n_layers % 2 == 0, "xLSTM layers alternate mLSTM/sLSTM"
+    return {
+        "embed": L.embedding_spec(cfg.vocab, cfg.d_model, dtype),
+        "pairs": PM.stack_specs(pair_spec(cfg, dtype), cfg.n_layers // 2),
+        "ln_f": L.rmsnorm_spec(cfg.d_model, dtype),
+        "lm_head": L.embedding_spec(cfg.vocab, cfg.d_model, dtype),
+    }
+
+
+# ------------------------------------------------------------- block fwd
+
+
+def mlstm_block(lp, cfg: ModelConfig, x, state=None, chunk=None):
+    """x: [B,T,D]. state: (C,n,m,conv) or None. Returns (y, state)."""
+    D, Di, H, dh = _dims(cfg)
+    xn = L.rmsnorm(lp["ln"], x)
+    conv_state = None if state is None else state[3]
+
+    def conv_fn(xm):
+        if conv_state is not None:
+            pad = jnp.concatenate([conv_state, xm], axis=1)
+            return O.causal_conv1d(pad, lp["conv_w"], lp["conv_b"])[
+                :, conv_state.shape[1]:]
+        return O.causal_conv1d(xm, lp["conv_w"], lp["conv_b"])
+
+    up = jnp.einsum("...d,dk->...k", xn, lp["w_up"],
+                    preferred_element_type=jnp.float32).astype(xn.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc_raw = conv_fn(xm)
+    xc = L.silu(xc_raw)
+    T = x.shape[1]
+    q = (xc @ lp["wq"]).reshape(x.shape[0], T, H, dh)
+    k = (xc @ lp["wk"]).reshape(x.shape[0], T, H, dh)
+    v = (xm @ lp["wv"]).reshape(x.shape[0], T, H, dh)
+    ig = (xc @ lp["w_i"] + lp["b_i"]).astype(jnp.float32)
+    fg = (xc @ lp["w_f"] + lp["b_f"]).astype(jnp.float32)
+    cell_state = None if state is None else state[:3]
+    h, (C, n, m) = O.mlstm_chunked(q, k, v, ig, fg,
+                                   chunk or cfg.ssm_chunk, cell_state)
+    h = L.rmsnorm(lp["ln_h"], h.reshape(x.shape[0], T, Di))
+    h = h * L.silu(z)
+    y = jnp.einsum("...k,kd->...d", h, lp["w_down"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    new_conv = xm[:, -(cfg.ssm_conv - 1):, :]
+    if state is not None:
+        # keep conv tail across short blocks
+        pad = jnp.concatenate([state[3], xm], axis=1)
+        new_conv = pad[:, -(cfg.ssm_conv - 1):, :]
+    return x + y, (C, n, m, new_conv)
+
+
+def slstm_block(lp, cfg: ModelConfig, x, state=None):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    B, T, _ = x.shape
+    xn = L.rmsnorm(lp["ln"], x)
+    g = (jnp.einsum("...d,dg->...g", xn, lp["w"],
+                    preferred_element_type=jnp.float32)
+         + lp["b"].astype(jnp.float32))
+    g = g.reshape(B, T, 4, H, dh)
+    zg, ig, fg, og = g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3]
+    cell = None if state is None else state
+    hs, new_state = O.slstm_scan(zg, ig, fg, og, lp["r"], cell)
+    h = L.rmsnorm(lp["ln_h"], hs.reshape(B, T, D).astype(x.dtype))
+    y = jnp.einsum("...d,do->...o", h, lp["w_out"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return x + y, new_state
+
+
+# ----------------------------------------------------------------- model
+
+
+def forward(params, cfg: ModelConfig, batch, budgets=None):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+
+    def body(x, pp):
+        x, _ = mlstm_block(pp["m"], cfg, x)
+        x, _ = slstm_block(pp["s"], cfg, x)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["pairs"])
+    x = L.rmsnorm(params["ln_f"], x)
+    return L.unembed(params["lm_head"], x), {}
+
+
+# ------------------------------------------------------------------ cache
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """State cache (no KV): cache_len is ignored (O(1) state)."""
+    del cache_len
+    D, Di, H, dh = _dims(cfg)
+    np_ = cfg.n_layers // 2
+    dh_s = cfg.d_model // H
+    f32 = jnp.float32
+    ax5 = ("layers", "batch", None, None, None)
+    ax4 = ("layers", "batch", None, None)
+    ax3 = ("layers", "batch", None)
+    return {
+        "mC": PM.ParamSpec((np_, batch, H, dh, dh), ax5, init="zeros", dtype=f32),
+        "mn": PM.ParamSpec((np_, batch, H, dh), ax4, init="zeros", dtype=f32),
+        "mm": PM.ParamSpec((np_, batch, H), ax3, init="zeros", dtype=f32),
+        "mconv": PM.ParamSpec((np_, batch, cfg.ssm_conv - 1, Di), ax4,
+                              init="zeros", dtype=dtype or cfg.dtype),
+        "sc": PM.ParamSpec((np_, batch, H, dh_s), ax4, init="zeros", dtype=f32),
+        "sn": PM.ParamSpec((np_, batch, H, dh_s), ax4, init="zeros", dtype=f32),
+        "sh": PM.ParamSpec((np_, batch, H, dh_s), ax4, init="zeros", dtype=f32),
+        "sm": PM.ParamSpec((np_, batch, H, dh_s), ax4, init="zeros", dtype=f32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    return jax.tree.map(
+        lambda s: (jnp.ones if s.init == "ones" else jnp.zeros)(s.shape, s.dtype),
+        cache_spec(cfg, batch, cache_len, dtype), is_leaf=PM.is_spec)
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
+    """Chunk-parallel prefill over the whole prompt, carrying states."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+
+    def body(x, pin):
+        pp, mC, mn, mm, mconv, sc, sn, sh, sm = pin
+        x, (C, n, m, cv) = mlstm_block(pp["m"], cfg, x,
+                                       state=(mC, mn, mm, mconv))
+        x, (c2, n2, h2, m2) = slstm_block(pp["s"], cfg, x,
+                                          state=(sc, sn, sh, sm))
+        return x, (C, n, m, cv, c2, n2, h2, m2)
+
+    x, states = jax.lax.scan(
+        body, x, (params["pairs"], cache["mC"], cache["mn"], cache["mm"],
+                  cache["mconv"], cache["sc"], cache["sn"], cache["sh"],
+                  cache["sm"]))
+    cache = {"mC": states[0], "mn": states[1], "mm": states[2],
+             "mconv": states[3].astype(cache["mconv"].dtype),
+             "sc": states[4], "sn": states[5], "sh": states[6],
+             "sm": states[7]}
+    xl = L.rmsnorm(params["ln_f"], x[:, -1, :])
+    return cache, L.unembed(params["lm_head"], xl)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, position,
+                shards: int = 1, window=None):
+    del position, window
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
+
+    def body(x, pin):
+        pp, mC, mn, mm, mconv, sc, sn, sh, sm = pin
+        x, (C, n, m, cv) = mlstm_block(pp["m"], cfg, x,
+                                       state=(mC, mn, mm, mconv), chunk=1)
+        x, (c2, n2, h2, m2) = slstm_block(pp["s"], cfg, x,
+                                          state=(sc, sn, sh, sm))
+        return x, (C, n, m, cv, c2, n2, h2, m2)
+
+    x, states = jax.lax.scan(
+        body, x, (params["pairs"], cache["mC"], cache["mn"], cache["mm"],
+                  cache["mconv"], cache["sc"], cache["sn"], cache["sh"],
+                  cache["sm"]))
+    cache = {"mC": states[0], "mn": states[1], "mm": states[2],
+             "mconv": states[3].astype(cache["mconv"].dtype),
+             "sc": states[4], "sn": states[5], "sh": states[6],
+             "sm": states[7]}
+    xl = L.rmsnorm(params["ln_f"], x[:, 0, :])
+    return L.unembed(params["lm_head"], xl), cache

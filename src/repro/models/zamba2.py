@@ -1,0 +1,327 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): Mamba2 (SSD) backbone with a
+weight-SHARED attention+MLP block applied every `attn_every` layers.
+
+Layers are scanned in groups: each group = `attn_every` Mamba2 layers
+followed by one application of the shared block (same parameters every
+time, per-site KV cache). FastForward applies to the shared block's MLP
+(the Mamba2 layers have no FFN — DESIGN.md §4). long_500k: Mamba2 state
+is O(1); the shared attention uses a sliding window in long mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+from repro.nn import param as PM
+from repro.nn import layers as L
+from repro.nn import attention as A
+from repro.core import fastforward as FF
+from repro.models import dense as D
+from repro.models import ssm_ops as O
+
+
+def _dims(cfg: ModelConfig):
+    Dm = cfg.d_model
+    Di = cfg.ssm_expand * Dm                  # inner width
+    P = cfg.ssm_head_dim
+    H = Di // P                                # ssm heads
+    G, N = 1, cfg.ssm_state
+    return Dm, Di, H, P, G, N
+
+
+def mamba_spec(cfg: ModelConfig, dtype):
+    Dm, Di, H, P, G, N = _dims(cfg)
+    conv_dim = Di + 2 * G * N
+    return {
+        "ln": L.rmsnorm_spec(Dm, dtype),
+        "in_proj": PM.ParamSpec((Dm, 2 * Di + 2 * G * N + H),
+                                ("embed", "mlp"), dtype=dtype),
+        "conv_w": PM.ParamSpec((cfg.ssm_conv, conv_dim), (None, "mlp"),
+                               init="normal", scale=0.1, dtype=dtype),
+        "conv_b": PM.ParamSpec((conv_dim,), ("mlp",), init="zeros", dtype=dtype),
+        "A_log": PM.ParamSpec((H,), (None,), init="zeros", dtype=jnp.float32),
+        "D_skip": PM.ParamSpec((H,), (None,), init="ones", dtype=jnp.float32),
+        "dt_bias": PM.ParamSpec((H,), (None,), init="zeros", dtype=jnp.float32),
+        "ln_gate": L.rmsnorm_spec(Di, dtype),
+        "out_proj": PM.ParamSpec((Di, Dm), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def shared_block_spec(cfg: ModelConfig, dtype):
+    return {
+        "ln1": L.rmsnorm_spec(cfg.d_model, dtype),
+        "attn": A.attention_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim, False, dtype),
+        "ln2": L.rmsnorm_spec(cfg.d_model, dtype),
+        "ffn": FF.fastforward_ffn_spec(cfg, dtype=dtype),
+    }
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def specs(cfg: ModelConfig):
+    dtype = cfg.dtype
+    g = n_groups(cfg)
+    per_group = PM.stack_specs(mamba_spec(cfg, dtype), cfg.attn_every,
+                               axis_name="layers")
+    return {
+        "embed": L.embedding_spec(cfg.vocab, cfg.d_model, dtype),
+        "groups": PM.stack_specs(per_group, g, axis_name="layers"),
+        "shared": shared_block_spec(cfg, dtype),   # ONE copy, reused
+        "ln_f": L.rmsnorm_spec(cfg.d_model, dtype),
+        "lm_head": L.embedding_spec(cfg.vocab, cfg.d_model, dtype),
+    }
+
+
+# ----------------------------------------------------------- mamba layer
+
+
+def _mamba_project(lp, cfg, xn):
+    Dm, Di, H, P, G, N = _dims(cfg)
+    zxbcdt = jnp.einsum("...d,dk->...k", xn, lp["in_proj"],
+                        preferred_element_type=jnp.float32).astype(xn.dtype)
+    z, xBC, dt_raw = jnp.split(zxbcdt, [Di, 2 * Di + 2 * G * N], axis=-1)
+    return z, xBC, dt_raw
+
+
+def _mamba_post(lp, cfg, x, y_ssm, x_in, z):
+    """Gated norm + out projection; y_ssm [B,T,H,P]."""
+    Dm, Di, H, P, G, N = _dims(cfg)
+    B, T = x.shape[:2]
+    y = y_ssm + lp["D_skip"][None, None, :, None] * x_in
+    y = y.reshape(B, T, Di)
+    y = L.rmsnorm(lp["ln_gate"], y * L.silu(z))
+    out = jnp.einsum("...k,kd->...d", y, lp["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return x + out
+
+
+def mamba_layer(lp, cfg: ModelConfig, x, state=None, chunk=None):
+    """x: [B,T,D]; state: (ssm [B,H,P,N], conv [B,K-1,conv_dim]) or None."""
+    Dm, Di, H, P, G, N = _dims(cfg)
+    B, T = x.shape[:2]
+    xn = L.rmsnorm(lp["ln"], x)
+    z, xBC, dt_raw = _mamba_project(lp, cfg, xn)
+    if state is not None:
+        pad = jnp.concatenate([state[1].astype(xBC.dtype), xBC], axis=1)
+        xBC_c = O.causal_conv1d(pad, lp["conv_w"], lp["conv_b"])[
+            :, state[1].shape[1]:]
+        new_conv = pad[:, -(cfg.ssm_conv - 1):, :]
+    else:
+        xBC_c = O.causal_conv1d(xBC, lp["conv_w"], lp["conv_b"])
+        new_conv = xBC[:, -(cfg.ssm_conv - 1):, :]
+    xBC_c = L.silu(xBC_c)
+    x_in, Bc, Cc = jnp.split(xBC_c, [Di, Di + G * N], axis=-1)
+    x_in = x_in.reshape(B, T, H, P)
+    Bc = Bc.reshape(B, T, G, N)
+    Cc = Cc.reshape(B, T, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    Aneg = -jnp.exp(lp["A_log"])                          # [H]
+    dA = dt * Aneg[None, None, :]
+    xdt = x_in * dt[..., None].astype(x_in.dtype)
+    ssm0 = None if state is None else state[0]
+    y, ssm = O.ssd_chunked(xdt, dA, Bc, Cc, chunk or cfg.ssm_chunk, ssm0)
+    return _mamba_post(lp, cfg, x, y, x_in, z), (ssm, new_conv)
+
+
+def mamba_step(lp, cfg: ModelConfig, x_tok, state):
+    """One-token step. x_tok [B,1,D]; state (ssm, conv)."""
+    Dm, Di, H, P, G, N = _dims(cfg)
+    B = x_tok.shape[0]
+    xn = L.rmsnorm(lp["ln"], x_tok)
+    z, xBC, dt_raw = _mamba_project(lp, cfg, xn)
+    y_c, new_conv = O.conv_step(state[1].astype(xBC.dtype), xBC[:, 0],
+                                lp["conv_w"], lp["conv_b"])
+    xBC_c = L.silu(y_c)
+    x_in, Bc, Cc = jnp.split(xBC_c, [Di, Di + G * N], axis=-1)
+    x_in = x_in.reshape(B, H, P)
+    Bc = Bc.reshape(B, G, N)
+    Cc = Cc.reshape(B, G, N)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + lp["dt_bias"])
+    dA = dt * (-jnp.exp(lp["A_log"]))[None, :]
+    xdt = x_in * dt[..., None].astype(x_in.dtype)
+    y, ssm = O.ssd_step(state[0], xdt, dA, Bc, Cc)
+    return _mamba_post(lp, cfg, x_tok, y[:, None], x_in[:, None], z), \
+        (ssm, new_conv)
+
+
+# ---------------------------------------------------------- shared block
+
+
+def shared_block_full(sp, cfg: ModelConfig, x, pos, budget):
+    xn = L.rmsnorm(sp["ln1"], x)
+    h = A.attend_full(sp["attn"], xn, pos, causal=True,
+                      window=cfg.sliding_window, rope_theta=cfg.rope_theta)
+    x = x + h
+    xn2 = L.rmsnorm(sp["ln2"], x)
+    if cfg.ff.enabled:
+        y = FF.ff_masked_sequence(sp["ffn"], cfg, xn2, budget)
+    else:
+        y = FF.ff_dense(sp["ffn"], cfg, xn2)
+    return x + y
+
+
+# ----------------------------------------------------------------- model
+
+
+def forward(params, cfg: ModelConfig, batch, budgets=None):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    keep = 1.0 - cfg.ff.sparsity
+
+    def group_body(x, gp):
+        def mamba_body(x, lp):
+            x, _ = mamba_layer(lp, cfg, x)
+            return x, None
+        x, _ = jax.lax.scan(mamba_body, x, gp)
+        x = shared_block_full(params["shared"], cfg, x, pos, keep)
+        return x, None
+
+    body_fn = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, _ = jax.lax.scan(body_fn, x, params["groups"])
+    x = L.rmsnorm(params["ln_f"], x)
+    return L.unembed(params["lm_head"], x), {}
+
+
+# ------------------------------------------------------------------ cache
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    Dm, Di, H, P, G, N = _dims(cfg)
+    g = n_groups(cfg)
+    e = cfg.attn_every
+    conv_dim = Di + 2 * G * N
+    kv = (g, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    kv_ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {
+        "ssm": PM.ParamSpec((g, e, batch, H, P, N),
+                            ("layers", "layers2", "batch", None, None, None),
+                            init="zeros", dtype=jnp.float32),
+        "conv": PM.ParamSpec((g, e, batch, cfg.ssm_conv - 1, conv_dim),
+                             ("layers", "layers2", "batch", None, "mlp"),
+                             init="zeros", dtype=dtype),
+        "k": PM.ParamSpec(kv, kv_ax, init="zeros", dtype=dtype),
+        "v": PM.ParamSpec(kv, kv_ax, init="zeros", dtype=dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, cache_len, dtype),
+                        is_leaf=PM.is_spec)
+
+
+# ---------------------------------------------------------------- prefill
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
+    """Blockwise prefill: scan over prompt blocks; Mamba2 states carry
+    across blocks, shared attention appends to its per-site KV cache."""
+    tokens = batch["tokens"]
+    ff = cfg.ff
+    B, T = tokens.shape
+    Nb = ff.block_size
+    nb = T // Nb
+    blocks = tokens.reshape(B, nb, Nb).transpose(1, 0, 2)
+    k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    window = cfg.sliding_window
+
+    def block_step(cache, blk_in):
+        blk_idx, tok_blk = blk_in
+        pos0 = blk_idx * Nb
+        x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
+        positions = pos0 + jnp.arange(Nb)[None, :]
+        is_dense = jnp.zeros((), bool)
+        if ff.dense_first_block:
+            is_dense = is_dense | (blk_idx == 0)
+        if ff.dense_last_block:
+            is_dense = is_dense | (blk_idx == nb - 1)
+
+        def group_body(x, gin):
+            gp, ssm_g, conv_g, kc, vc = gin
+
+            def mamba_body(carry, lin):
+                x = carry
+                lp, s0, c0 = lin
+                x, (s1, c1) = mamba_layer(lp, cfg, x, state=(s0, c0))
+                return x, (s1, c1)
+
+            x, (ssm1, conv1) = jax.lax.scan(mamba_body, x,
+                                            (gp, ssm_g, conv_g))
+            sp = params["shared"]
+            xn = L.rmsnorm(sp["ln1"], x)
+            k_new, v_new = A.project_kv(sp["attn"], xn, positions,
+                                        cfg.rope_theta)
+            kc, vc = A.write_kv_block(kc, vc, k_new, v_new, pos0)
+            h = A.attend_block_cached(sp["attn"], xn, kc, vc, pos0,
+                                      window=window,
+                                      rope_theta=cfg.rope_theta)
+            x = x + h
+            xn2 = L.rmsnorm(sp["ln2"], x)
+            if ff.enabled:
+                y = FF.ff_block_sparse(sp["ffn"], cfg, xn2, k_tiles,
+                                       shards, is_dense)
+            else:
+                y = FF.ff_dense(sp["ffn"], cfg, xn2)
+            return x + y, (ssm1, conv1.astype(cache["conv"].dtype), kc, vc)
+
+        x, (ssm, conv, ks, vs) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache["ssm"], cache["conv"],
+             cache["k"], cache["v"]))
+        return {"ssm": ssm, "conv": conv, "k": ks, "v": vs}, x[:, -1, :]
+
+    cache, lasts = jax.lax.scan(block_step, cache, (jnp.arange(nb), blocks))
+    xl = L.rmsnorm(params["ln_f"], lasts[-1])
+    return cache, L.unembed(params["lm_head"], xl)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, position,
+                shards: int = 1, window=None):
+    ff = cfg.ff
+    B = token.shape[0]
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
+    positions = jnp.full((B, 1), position)
+    k_tiles = (FF.k_tiles_for(cfg, shards=shards)
+               if (ff.enabled and ff.apply_to_decode) else 0)
+
+    def group_body(x, gin):
+        gp, ssm_g, conv_g, kc, vc = gin
+
+        def mamba_body(x, lin):
+            lp, s0, c0 = lin
+            x, (s1, c1) = mamba_step(lp, cfg, x, (s0, c0))
+            return x, (s1, c1)
+
+        x, (ssm1, conv1) = jax.lax.scan(mamba_body, x, (gp, ssm_g, conv_g))
+        sp = params["shared"]
+        xn = L.rmsnorm(sp["ln1"], x)
+        k_new, v_new = A.project_kv(sp["attn"], xn, positions,
+                                    cfg.rope_theta)
+        if window:
+            kc, vc = A.write_kv_ring(kc, vc, k_new, v_new, position, window)
+        else:
+            kc, vc = A.write_kv_block(kc, vc, k_new, v_new, position)
+        h = A.attend_decode(sp["attn"], xn, kc, vc, position, window=window,
+                            rope_theta=cfg.rope_theta)
+        x = x + h
+        xn2 = L.rmsnorm(sp["ln2"], x)
+        if k_tiles:
+            y = FF.ff_decode_sparse(sp["ffn"], cfg, xn2, k_tiles, shards)
+        else:
+            y = FF.ff_dense(sp["ffn"], cfg, xn2)
+        return x + y, (ssm1, conv1.astype(cache["conv"].dtype), kc, vc)
+
+    x, (ssm, conv, ks, vs) = jax.lax.scan(
+        group_body, x, (params["groups"], cache["ssm"], cache["conv"],
+                        cache["k"], cache["v"]))
+    xl = L.rmsnorm(params["ln_f"], x[:, 0, :])
+    return L.unembed(params["lm_head"], xl), \
+        {"ssm": ssm, "conv": conv, "k": ks, "v": vs}

@@ -1,0 +1,9 @@
+from repro.nn.param import (  # noqa: F401
+    ParamSpec,
+    init_params,
+    abstract_params,
+    stack_specs,
+    cast_specs,
+    count_params,
+    flatten_specs,
+)

@@ -1,0 +1,257 @@
+"""GQA attention: full/causal, sliding-window, cross, and cached decode.
+
+The XLA (jnp) path here is the lowering path used for dry-runs and CPU
+tests; the Pallas flash kernel in repro.kernels.flash_attention is the
+TPU-target equivalent validated against ref oracles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+from repro.nn.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+def attention_spec(d_model: int, n_heads: int, n_kv_heads: int, d_head: int,
+                   bias: bool = False, dtype=jnp.float32):
+    sp = {
+        "wq": ParamSpec((d_model, n_heads, d_head), ("embed", "heads", "head_dim"), dtype=dtype),
+        "wk": ParamSpec((d_model, n_kv_heads, d_head), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wv": ParamSpec((d_model, n_kv_heads, d_head), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wo": ParamSpec((n_heads, d_head, d_model), ("heads", "head_dim", "embed"), dtype=dtype),
+    }
+    if bias:
+        sp["bq"] = ParamSpec((n_heads, d_head), ("heads", "head_dim"), init="zeros", dtype=dtype)
+        sp["bk"] = ParamSpec((n_kv_heads, d_head), ("kv_heads", "head_dim"), init="zeros", dtype=dtype)
+        sp["bv"] = ParamSpec((n_kv_heads, d_head), ("kv_heads", "head_dim"), init="zeros", dtype=dtype)
+    return sp
+
+
+def project_q(params, x, positions=None, rope_theta=None):
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+    return q
+
+
+def project_kv(params, x, positions=None, rope_theta=None):
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "bk" in params:
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if rope_theta is not None:
+        k = apply_rope(k, positions, rope_theta)
+    return k, v
+
+
+def output_proj(params, o):
+    y = jnp.einsum("bthk,hkd->btd", o, params["wo"],
+                   preferred_element_type=jnp.float32)
+    return y.astype(o.dtype)
+
+
+def dot_attention(q, k, v, mask=None):
+    """Grouped-query attention core.
+
+    q: [B,T,H,dh]; k,v: [B,S,Kv,dh]; mask: broadcastable to [B,1,1,T,S]
+    (True = attend). Softmax in f32.
+    """
+    B, T, H, dh = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    qg = q.reshape(B, T, Kv, rep, dh)
+    scores = jnp.einsum("btgrk,bsgk->bgrts", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bgrts,bsgk->btgrk", probs.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(v.dtype)
+    return o.reshape(B, T, H, dh)
+
+
+# ------------------------------------------------------------------ masks
+
+
+def causal_mask(t_q: int, t_k: int, q_offset=0):
+    """[1,1,1,Tq,Tk] causal mask; query i at absolute pos q_offset+i."""
+    qi = q_offset + jnp.arange(t_q)[:, None]
+    kj = jnp.arange(t_k)[None, :]
+    return (kj <= qi)[None, None, None]
+
+
+def sliding_mask(t_q: int, t_k: int, window: int, q_offset=0):
+    qi = q_offset + jnp.arange(t_q)[:, None]
+    kj = jnp.arange(t_k)[None, :]
+    return ((kj <= qi) & (kj > qi - window))[None, None, None]
+
+
+def length_mask(lengths, t_k: int):
+    """lengths: [B] valid key counts -> [B,1,1,1,Tk]."""
+    kj = jnp.arange(t_k)[None, :]
+    return (kj < lengths[:, None])[:, None, None, None, :]
+
+
+# ------------------------------------------- chunked (online softmax)
+
+
+def dot_attention_chunked(q, k, v, chunk: int, *, causal=True, window=None,
+                          q_offset=0):
+    """Flash-style online-softmax attention in pure XLA: scan over KV
+    chunks carrying (m, l, acc). Never materializes the [T, S] score
+    matrix — per-step transient is [B, Kv, rep, T, chunk]. Used by the
+    memory-optimized train/prefill paths (EXPERIMENTS.md §Perf)."""
+    B, T, H, dh = q.shape
+    S = k.shape[1]
+    Kv = k.shape[2]
+    rep = H // Kv
+    assert S % chunk == 0
+    nc = S // chunk
+    qg = (q.reshape(B, T, Kv, rep, dh).astype(jnp.float32)
+          / jnp.sqrt(dh).astype(jnp.float32))
+    kc = k.reshape(B, nc, chunk, Kv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, Kv, dh).transpose(1, 0, 2, 3, 4)
+    qi = q_offset + jnp.arange(T)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kk, vv = inp
+        s = jnp.einsum("btgrk,bsgk->bgrts", qg, kk.astype(jnp.float32))
+        if causal:
+            kj = ci * chunk + jnp.arange(chunk)
+            mask = kj[None, :] <= qi[:, None]
+            if window:
+                mask = mask & (kj[None, :] > qi[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bgrts,bsgk->bgrtk", p, vv.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Kv, rep, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kv, rep, T), jnp.float32)
+    a0 = jnp.zeros((B, Kv, rep, T, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nc), kc, vc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, T, H, dh).astype(v.dtype)
+
+
+# ---------------------------------------------------------- full forward
+
+
+def attend_full(params, x, positions, *, causal=True, window=None,
+                rope_theta=10000.0, use_rope=True, chunk=0):
+    """Self-attention over the full sequence (training / fused prefill).
+    chunk > 0 switches to the online-softmax chunked core (no [T,S]
+    score materialization)."""
+    theta = rope_theta if use_rope else None
+    q = project_q(params, x, positions, theta)
+    k, v = project_kv(params, x, positions, theta)
+    T = x.shape[1]
+    if chunk and T % chunk == 0 and T > chunk:
+        o = dot_attention_chunked(q, k, v, chunk, causal=causal,
+                                  window=window)
+    else:
+        if causal and window:
+            mask = sliding_mask(T, T, window)
+        elif causal:
+            mask = causal_mask(T, T)
+        else:
+            mask = None
+        o = dot_attention(q, k, v, mask)
+    return output_proj(params, o)
+
+
+def attend_block_cached(params, x_block, k_cache, v_cache, pos0, *,
+                        window=None, rope_theta=10000.0, use_rope=True,
+                        lengths=None):
+    """Blockwise prefill: query block attends to cache[:pos0+block].
+
+    x_block: [B,N,D]; k_cache/v_cache: [B,S,Kv,dh] with the current block
+    already written at [pos0, pos0+N). lengths: optional [B] true prompt
+    lengths (right-padded batches never attend past them). Returns [B,N,D].
+    """
+    B, N, _ = x_block.shape
+    S = k_cache.shape[1]
+    positions = pos0 + jnp.arange(N)[None, :]
+    theta = rope_theta if use_rope else None
+    q = project_q(params, x_block, positions, theta)
+    if window:
+        mask = sliding_mask(N, S, window, q_offset=pos0)
+    else:
+        mask = causal_mask(N, S, q_offset=pos0)
+    if lengths is not None:
+        mask = mask & length_mask(lengths, S)
+    o = dot_attention(q, k_cache, v_cache, mask)
+    return output_proj(params, o)
+
+
+def attend_decode(params, x_tok, k_cache, v_cache, position, *,
+                  window=None, rope_theta=10000.0, use_rope=True):
+    """One-token decode: x_tok [B,1,D]; cache holds `position` valid slots
+    (ring-buffer semantics when window is set: cache length == window)."""
+    B = x_tok.shape[0]
+    S = k_cache.shape[1]
+    theta = rope_theta if use_rope else None
+    q = project_q(params, x_tok, jnp.full((B, 1), position), theta)
+    kj = jnp.arange(S)[None, :]
+    if window:
+        # ring buffer: every slot is valid once position >= window
+        valid = kj < jnp.minimum(position + 1, S)
+    else:
+        valid = kj <= position
+    mask = valid[:, None, None, None, :]
+    o = dot_attention(q, k_cache, v_cache, mask)
+    return output_proj(params, o)
+
+
+def write_kv_block(k_cache, v_cache, k_new, v_new, pos0):
+    """Insert a block of K/V at [pos0, pos0+N) (static N, dynamic pos0)."""
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos0, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos0, axis=1)
+    return k_cache, v_cache
+
+
+def write_kv_tok(k_cache, v_cache, k_new, v_new, positions):
+    """Per-sequence single-token write (ragged decode). positions: [B]."""
+    B = k_cache.shape[0]
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, positions].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, positions].set(v_new[:, 0].astype(v_cache.dtype))
+    return k_cache, v_cache
+
+
+def attend_decode_ragged(params, x_tok, k_cache, v_cache, positions, *,
+                         rope_theta=10000.0, use_rope=True):
+    """Per-sequence decode positions [B]; cache row b valid through
+    positions[b] (inclusive)."""
+    S = k_cache.shape[1]
+    theta = rope_theta if use_rope else None
+    q = project_q(params, x_tok, positions[:, None], theta)
+    kj = jnp.arange(S)[None, :]
+    mask = (kj <= positions[:, None])[:, None, None, None, :]
+    o = dot_attention(q, k_cache, v_cache, mask)
+    return output_proj(params, o)
+
+
+def write_kv_ring(k_cache, v_cache, k_new, v_new, position, window: int):
+    """Single-token ring-buffer write at position % window."""
+    slot = jnp.mod(position, window)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    return k_cache, v_cache

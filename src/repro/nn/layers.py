@@ -1,0 +1,136 @@
+"""Core NN layers: norms, linear/einsum application, embeddings, RoPE.
+
+Pure-functional: every layer is (spec builder, apply fn) working on
+plain dict param trees produced by repro.nn.param.init_params.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.param import ParamSpec
+
+# ---------------------------------------------------------------- dtypes
+
+
+def compute_dtype(x):
+    """All matmuls accumulate in f32; activations flow in x.dtype."""
+    return x.dtype
+
+
+# ----------------------------------------------------------------- norms
+
+
+def rmsnorm_spec(d: int, dtype=jnp.float32):
+    return {"scale": ParamSpec((d,), ("embed",), init="ones", dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_spec(d: int, dtype=jnp.float32):
+    return {
+        "scale": ParamSpec((d,), ("embed",), init="ones", dtype=dtype),
+        "bias": ParamSpec((d,), ("embed",), init="zeros", dtype=dtype),
+    }
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------- linear
+
+
+def linear_spec(d_in: int, d_out: int, axes=("embed", "mlp"), bias: bool = False,
+                dtype=jnp.float32, scale: float = 1.0):
+    sp = {"w": ParamSpec((d_in, d_out), axes, init="scaled", scale=scale, dtype=dtype)}
+    if bias:
+        sp["b"] = ParamSpec((d_out,), (axes[1],), init="zeros", dtype=dtype)
+    return sp
+
+
+def linear(params, x):
+    y = jnp.einsum("...i,io->...o", x, params["w"],
+                   preferred_element_type=jnp.float32)
+    if "b" in params:
+        y = y + params["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------ embeddings
+
+
+def embedding_spec(vocab: int, d: int, dtype=jnp.float32):
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"),
+                               init="normal", scale=0.02, dtype=dtype)}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def unembed(params, x):
+    """Logits against the (possibly separate) output table."""
+    return jnp.einsum("...d,vd->...v", x, params["table"],
+                      preferred_element_type=jnp.float32)
+
+
+# ------------------------------------------------------------------ RoPE
+
+
+def rope_frequencies(d_head: int, theta: float = 10000.0):
+    exponents = np.arange(0, d_head, 2, dtype=np.float32) / d_head
+    return 1.0 / (theta ** exponents)  # [d_head/2]
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., T, H, d_head]; positions: [..., T] (int)."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta))  # [d/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [...,T,d/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # [...,T,1,d/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos, d_model):
+    """Whisper-style sinusoidal embeddings, computed for any length."""
+    pos = np.arange(n_pos)[:, None].astype(np.float32)
+    dim = np.arange(d_model // 2)[None, :].astype(np.float32)
+    angle = pos / np.power(10000.0, 2 * dim / d_model)
+    return jnp.asarray(
+        np.concatenate([np.sin(angle), np.cos(angle)], axis=-1), jnp.float32
+    )
+
+
+# ------------------------------------------------------------ activations
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(gate, up):
+    return silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+ACTIVATIONS = {
+    "silu": silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}

@@ -1,0 +1,145 @@
+"""Parameter substrate: declarative ParamSpec trees (no flax).
+
+Models declare a nested-dict tree of ParamSpec leaves. From that single
+declaration we derive: materialized parameters (init_params), abstract
+ShapeDtypeStructs for dry-run lowering (abstract_params), and
+NamedShardings via logical-axis rules (see repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor.
+
+    shape: tensor shape.
+    axes:  logical axis names, one per dim (None = never sharded).
+    init:  "normal" | "zeros" | "ones" | "scaled" (fan-in scaled normal).
+    scale: multiplier for normal/scaled init std.
+    dtype: parameter dtype.
+    """
+
+    shape: tuple
+    axes: tuple
+    init: str = "scaled"
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _spec_leaf(x):
+    return is_spec(x)
+
+
+def flatten_specs(specs):
+    """Flatten a spec tree to [(path_str, spec)] sorted by path."""
+    leaves = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_spec_leaf)[0]
+    out = []
+    for path, spec in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, spec))
+    out.sort(key=lambda kv: kv[0])
+    return out
+
+
+def _init_one(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "scaled":
+        # fan-in scaled: std = scale / sqrt(fan_in); fan_in = second-to-last
+        # dim for matrices laid out [..., in, out]; last dim for vectors.
+        if len(spec.shape) >= 2:
+            fan_in = spec.shape[-2]
+        else:
+            fan_in = spec.shape[-1]
+        std = spec.scale / np.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(specs, key):
+    """Materialize a spec tree into a param tree, deterministically."""
+    flat = flatten_specs(specs)
+    keys = jax.random.split(key, max(len(flat), 1))
+    by_path = {p: _init_one(k, s) for (p, s), k in zip(flat, keys)}
+
+    def build(spec_subtree, prefix):
+        if is_spec(spec_subtree):
+            return by_path[prefix]
+        if isinstance(spec_subtree, dict):
+            return {
+                k: build(v, f"{prefix}/{k}" if prefix else str(k))
+                for k, v in spec_subtree.items()
+            }
+        if isinstance(spec_subtree, (list, tuple)):
+            seq = [
+                build(v, f"{prefix}/{i}" if prefix else str(i))
+                for i, v in enumerate(spec_subtree)
+            ]
+            return type(spec_subtree)(seq)
+        raise TypeError(type(spec_subtree))
+
+    return build(specs, "")
+
+
+def abstract_params(specs, shardings=None):
+    """ShapeDtypeStruct tree (optionally with shardings) for .lower()."""
+
+    def mk(spec, sh):
+        return jax.ShapeDtypeStruct(spec.shape, spec.dtype, sharding=sh)
+
+    if shardings is None:
+        return jax.tree.map(lambda s: mk(s, None), specs, is_leaf=_spec_leaf)
+    return jax.tree.map(mk, specs, shardings, is_leaf=_spec_leaf)
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    """Prefix every spec with a leading stacked dim (scan-over-layers)."""
+
+    def st(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(
+            s, shape=(n,) + s.shape, axes=(axis_name,) + s.axes
+        )
+
+    return jax.tree.map(st, specs, is_leaf=_spec_leaf)
+
+
+def cast_specs(specs, dtype):
+    """Override dtype of every float spec (e.g. bf16 for dry-runs)."""
+
+    def ct(s: ParamSpec) -> ParamSpec:
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return dataclasses.replace(s, dtype=dtype)
+        return s
+
+    return jax.tree.map(ct, specs, is_leaf=_spec_leaf)
+
+
+def count_params(specs) -> int:
+    return int(sum(np.prod(s.shape) for _, s in flatten_specs(specs)))
+
+
+def tree_bytes(specs) -> int:
+    return int(
+        sum(
+            np.prod(s.shape) * jnp.dtype(s.dtype).itemsize
+            for _, s in flatten_specs(specs)
+        )
+    )

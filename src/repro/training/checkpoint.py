@@ -1,0 +1,72 @@
+"""Checkpointing: param/opt trees -> sharded .npz + msgpack manifest.
+
+No orbax offline; this is a self-contained, deterministic format:
+  <dir>/manifest.msgpack   {path: {shape, dtype}} + metadata
+  <dir>/arrays.npz         flat {path: ndarray}
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import msgpack
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i}" if prefix else str(i)))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten(flat):
+    root: dict = {}
+    for path, v in flat.items():
+        keys = path.split("/")
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = v
+    return root
+
+
+def save_checkpoint(directory: str, tree, metadata: dict | None = None):
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {}
+    manifest = {"metadata": metadata or {}, "arrays": {}}
+    for path, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            manifest["arrays"][path] = {"dtype": "bfloat16",
+                                        "shape": list(arr.shape)}
+            arrays[path] = arr.view(np.uint16)
+        else:
+            manifest["arrays"][path] = {"dtype": str(arr.dtype),
+                                        "shape": list(arr.shape)}
+            arrays[path] = arr
+    with open(os.path.join(directory, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    np.savez(os.path.join(directory, "arrays.npz"), **arrays)
+
+
+def load_checkpoint(directory: str):
+    with open(os.path.join(directory, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(directory, "arrays.npz"))
+    flat = {}
+    for path, info in manifest["arrays"].items():
+        arr = data[path]
+        if info["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        flat[path] = jnp.asarray(arr)
+    return _unflatten(flat), manifest["metadata"]

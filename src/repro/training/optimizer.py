@@ -1,0 +1,140 @@
+"""Hand-rolled optimizers (no optax): Adam/AdamW and Adafactor.
+
+Adafactor (factored second moment, no first moment by default) is used
+for the trillion-parameter MoE config, where Adam moments would not fit
+the mesh (see DESIGN.md §5). All states mirror the parameter tree, so
+parameter shardings apply transitively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- Adam
+
+
+def adam_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def adam_update(params, grads, state, step, lr=1e-3, b1=0.9, b2=0.999,
+                eps=1e-8, weight_decay=0.0):
+    step = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_m = treedef.unflatten([l[1] for l in leaves])
+    new_v = treedef.unflatten([l[2] for l in leaves])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# ------------------------------------------------------------- Adafactor
+
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def st(p):
+        if _factored(p.shape):
+            row = jnp.zeros(p.shape[:-1], jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return {"row": row, "col": col}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"f": jax.tree.map(st, params)}
+
+
+def adafactor_update(params, grads, state, step, lr=1e-2, decay=0.8,
+                     eps=1e-30, clip=1.0):
+    step = step.astype(jnp.float32) + 1.0
+    beta = 1.0 - step ** (-decay)
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p.shape):
+            row = beta * s["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            col = beta * s["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            rmean = jnp.mean(row, axis=-1, keepdims=True)
+            vhat = (row / jnp.maximum(rmean, eps))[..., None] * col[..., None, :]
+            u = g32 / jnp.sqrt(jnp.maximum(vhat, eps))
+            ns = {"row": row, "col": col}
+        else:
+            v = beta * s["v"] + (1 - beta) * g2
+            u = g32 / jnp.sqrt(jnp.maximum(v, eps))
+            ns = {"v": v}
+        # update clipping (RMS of update <= clip)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+    is_state = lambda x: isinstance(x, dict) and set(x) <= {"row", "col", "v"}
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = jax.tree.leaves(grads)
+    s_leaves = jax.tree.leaves(state["f"], is_leaf=is_state)
+    outs = [upd(p, g, s) for p, g, s in zip(p_leaves, g_leaves, s_leaves)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_f = treedef.unflatten([o[1] for o in outs])
+    return new_p, {"f": new_f}
+
+
+# -------------------------------------------- abstract state (dry-run)
+
+
+def opt_state_specs(param_specs, kind: str):
+    """ParamSpec tree describing optimizer state (for sharded dry-runs);
+    mirrors the parameter logical axes so shardings apply transitively."""
+    import dataclasses
+    from repro.nn.param import ParamSpec, is_spec
+
+    def f32(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, dtype=jnp.float32, init="zeros")
+
+    if kind == "adamw":
+        m = jax.tree.map(f32, param_specs, is_leaf=is_spec)
+        v = jax.tree.map(f32, param_specs, is_leaf=is_spec)
+        return {"m": m, "v": v}
+    if kind == "adafactor":
+        def st(s: ParamSpec):
+            if _factored(s.shape):
+                return {
+                    "row": ParamSpec(s.shape[:-1], s.axes[:-1],
+                                     init="zeros", dtype=jnp.float32),
+                    "col": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                     s.axes[:-2] + s.axes[-1:],
+                                     init="zeros", dtype=jnp.float32),
+                }
+            return {"v": f32(s)}
+
+        return {"f": jax.tree.map(st, param_specs, is_leaf=is_spec)}
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------- dispatcher
+
+
+def make_optimizer(kind: str, lr: float, weight_decay: float = 0.0):
+    if kind == "adamw":
+        return (adam_init,
+                lambda p, g, s, t: adam_update(p, g, s, t, lr=lr,
+                                               weight_decay=weight_decay))
+    if kind == "adafactor":
+        return (adafactor_init,
+                lambda p, g, s, t: adafactor_update(p, g, s, t, lr=lr))
+    raise ValueError(f"unknown optimizer {kind}")

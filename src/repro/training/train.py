@@ -1,0 +1,84 @@
+"""Training step factory: LM cross-entropy + optimizer update.
+
+Works for every architecture via the model registry; MoE auxiliary
+losses flow through the `aux` dict. Labels < 0 are masked (VLM image
+regions, padding).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+from repro.models.registry import get_model
+from repro.training.optimizer import make_optimizer
+
+
+def cross_entropy(logits, labels):
+    """logits [B,T,V]; labels [B,T] int (−1 = masked)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom
+
+
+def make_loss_fn(cfg: ModelConfig):
+    model = get_model(cfg)
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, cfg, batch)
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:
+            # VLM: logits cover [image | text]; labels already padded by
+            # input_specs to the fused length with image region masked.
+            raise ValueError(
+                f"label length {labels.shape[1]} != logits {logits.shape[1]}")
+        ce = cross_entropy(logits, labels)
+        loss = ce + aux.get("aux_loss", 0.0)
+        metrics = {"loss": loss, "ce": ce}
+        if "aux_loss" in aux:
+            metrics["aux_loss"] = aux["aux_loss"]
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4,
+                    weight_decay: float = 0.0):
+    """Returns (init_state, train_step). State: {params, opt, step}."""
+    loss_fn = make_loss_fn(cfg)
+    opt_init, opt_update = make_optimizer(cfg.optimizer, lr, weight_decay)
+
+    def init_state(params):
+        return {"params": params, "opt": opt_init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"], batch)
+        params, opt = opt_update(state["params"], grads, state["opt"],
+                                 state["step"])
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics, grad_norm=gnorm)
+        return {"params": params, "opt": opt,
+                "step": state["step"] + 1}, metrics
+
+    return init_state, train_step
+
+
+def eval_perplexity(cfg: ModelConfig, params, batches):
+    """Average token perplexity over an iterable of batches."""
+    loss_fn = make_loss_fn(cfg)
+    jfn = jax.jit(lambda p, b: loss_fn(p, b)[1]["ce"])
+    tot, n = 0.0, 0
+    for b in batches:
+        tot += float(jfn(params, b))
+        n += 1
+    return float(jnp.exp(tot / max(n, 1)))

@@ -1,0 +1,155 @@
+"""FastForward core: predictor, compensator, scheduler, sparse FFN."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.base import ModelConfig, FastForwardConfig
+from repro.nn.param import init_params
+from repro.core import predictor as P
+from repro.core import compensator as C
+from repro.core import scheduler as SCHED
+from repro.core import sparse_ffn as S
+from repro.core import fastforward as FF
+
+
+CFG = ModelConfig(name="t", arch="dense", n_layers=4, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=512, vocab=101,
+                  remat=False,
+                  ff=FastForwardConfig(enabled=True, tile=64,
+                                       block_size=32))
+
+
+@pytest.fixture(scope="module")
+def ffn_params():
+    return init_params(FF.fastforward_ffn_spec(CFG), jax.random.key(0))
+
+
+def test_predictor_shapes(ffn_params):
+    x = jax.random.normal(jax.random.key(1), (3, 32, 64))
+    s = P.neuron_scores(ffn_params["pred"], x)
+    assert s.shape == (3, 512)
+
+
+def test_predictor_pooling_is_convex(ffn_params):
+    """Attention pooling output lies in the convex hull of the tokens."""
+    x = jnp.ones((2, 32, 64)) * jnp.arange(2)[:, None, None]
+    a = P.pool_block(ffn_params["pred"], x)
+    np.testing.assert_allclose(np.asarray(a[0]), 0.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a[1]), 1.0, rtol=1e-5)
+
+
+def test_activation_labels_banding():
+    h = jax.random.normal(jax.random.key(2), (1, 32, 512))
+    labels, weights = P.activation_labels(h, keep_frac=0.5)
+    assert float(labels.sum(-1)[0]) == 256            # top 50% positive
+    w = np.asarray(weights[0])
+    lab = np.asarray(labels[0]) > 0
+    assert set(np.unique(w[lab])) == {2.0, 4.0, 8.0, 16.0, 32.0}
+    assert np.all(w[~lab] == 1.0)
+
+
+def test_predictor_loss_decreases_with_oracle_scores(ffn_params):
+    """BCE must be lower when scores match the labels."""
+    x = jax.random.normal(jax.random.key(3), (2, 32, 64))
+    h = S.ffn_hidden(ffn_params, x, "silu")
+    loss_rand = P.predictor_loss(ffn_params["pred"], x, h)
+    # construct a perfect predictor output by patching w2 so scores =
+    # label direction: compare loss against perfect logits directly
+    labels, weights = P.activation_labels(h)
+    perfect = (labels * 2 - 1) * 10.0
+    logp = jax.nn.log_sigmoid(perfect)
+    lognp = jax.nn.log_sigmoid(-perfect)
+    bce = -(labels * logp + (1 - labels) * lognp)
+    loss_perfect = jnp.mean(jnp.sum(weights * bce, -1) / jnp.sum(weights, -1))
+    assert float(loss_perfect) < float(loss_rand)
+
+
+def test_compensator_zero_init_is_noop(ffn_params):
+    x = jax.random.normal(jax.random.key(4), (2, 32, 64))
+    y = C.compensate(ffn_params["comp"], x)
+    np.testing.assert_allclose(np.asarray(y), 0.0, atol=1e-7)
+
+
+def test_mask_and_gather_paths_agree(ffn_params):
+    x = jax.random.normal(jax.random.key(5), (2, 32, 64))
+    scores = P.neuron_scores(ffn_params["pred"], x)
+    ids = S.balanced_topk_tiles(scores, 4, 64, shards=1)
+    mask = S.mask_from_tile_ids(ids, 8, 64)
+    y_m = S.ffn_masked(ffn_params, x, mask[:, None, :], "silu")
+    y_g = S.ffn_sparse_batched(ffn_params, x, ids, 64, "silu")
+    np.testing.assert_allclose(np.asarray(y_m), np.asarray(y_g),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_balanced_topk_is_balanced(ffn_params):
+    scores = jax.random.normal(jax.random.key(6), (3, 512))
+    ids = S.balanced_topk_tiles(scores, 4, 64, shards=2)
+    # shard 0 owns tiles 0..3, shard 1 owns 4..7; two picks from each
+    ids = np.asarray(ids)
+    assert ids.shape == (3, 4)
+    assert np.all((ids[:, :2] < 4)) and np.all((ids[:, 2:] >= 4))
+
+
+def test_mask_keep_fraction():
+    scores = jax.random.normal(jax.random.key(7), (5, 512))
+    for keep in (0.25, 0.5, 0.75):
+        m = S.neuron_mask_from_scores(scores, keep, 64)
+        frac = float(m.mean())
+        assert abs(frac - np.ceil(keep * 8) / 8) < 1e-6
+
+
+# ------------------------------------------------------------- Algorithm 1
+
+
+def test_algorithm1_budget_preserved():
+    s = np.array([1.0, 2.0, 3.0, 4.0])
+    b = SCHED.allocate_budgets(s, 0.5)
+    assert abs(b.mean() - 0.5) < 1e-9
+    assert np.all(np.diff(b[np.argsort(s)]) >= -1e-12)  # monotone in s
+
+
+def test_algorithm1_clipping_redistributes():
+    s = np.array([100.0, 1.0, 1.0, 1.0])
+    b = SCHED.allocate_budgets(s, 0.5)
+    assert b[0] == 1.0                      # clipped at fully dense
+    assert abs(b.sum() - 2.0) < 1e-9        # budget conserved
+
+
+def test_nonsink_attention_mass():
+    T, H, N = 64, 2, 32
+    probs = jnp.ones((H, T, T)) / T          # uniform attention
+    s = SCHED.nonsink_attention_mass(probs, block_size=N)
+    # uniform: mass on non-sink keys = T * (T-N)/T = T - N
+    np.testing.assert_allclose(float(s), T - N, rtol=1e-5)
+
+
+def test_layer_budgets_uniform_vs_scheduled():
+    cfg = CFG.with_ff(layerwise_schedule=True)
+    uni = FF.layer_budgets(cfg, importance=None)
+    assert np.allclose(uni, 0.5)
+    sched = FF.layer_budgets(cfg, importance=np.array([1, 1, 1, 5.0]))
+    assert sched[3] > sched[0]
+    assert abs(sched.mean() - 0.5) < 1e-9
+
+
+def test_k_tiles_static():
+    assert FF.k_tiles_for(CFG) == 4            # 8 tiles, keep 50%
+    assert FF.k_tiles_for(CFG.with_ff(sparsity=0.75)) == 2
+    # shard-balanced: rounded up to a multiple of shards
+    assert FF.k_tiles_for(CFG, shards=2) == 4
+
+
+def test_ff_masked_sequence_dense_first_last(ffn_params):
+    """First/last blocks must produce exactly the dense output."""
+    x = jax.random.normal(jax.random.key(8), (2, 128, 64))  # 4 blocks
+    y = FF.ff_masked_sequence(ffn_params, CFG, x, 0.5)
+    y_dense = FF.ff_dense(ffn_params, CFG, x)
+    np.testing.assert_allclose(np.asarray(y[:, :32]),
+                               np.asarray(y_dense[:, :32]), rtol=2e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y[:, -32:]),
+                               np.asarray(y_dense[:, -32:]), rtol=2e-4,
+                               atol=1e-5)
+    # middle blocks are sparse -> must differ
+    assert float(jnp.abs(y[:, 32:96] - y_dense[:, 32:96]).max()) > 1e-3

@@ -1,0 +1,76 @@
+"""Unit tests for the HLO analyzer that powers §Roofline (trip-count
+scaling, dot FLOPs from the shape table, collective payload bytes)."""
+import textwrap
+
+from repro.launch.hlo_analysis import (
+    analyze_hlo, parse_hlo, _parse_op_line, _shape_bytes)
+
+HLO = textwrap.dedent("""\
+    HloModule test, num_partitions=4
+
+    %add.clone (x: f32[], y: f32[]) -> f32[] {
+      %x = f32[] parameter(0)
+      %y = f32[] parameter(1)
+      ROOT %add = f32[] add(%x, %y)
+    }
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+      %w = f32[16,16]{1,0} constant({...})
+      %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add.clone
+      %one = s32[] constant(1)
+      %ip = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%ip, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,16])) -> pred[] {
+      %p = (s32[], f32[8,16]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+      %x = f32[8,16]{1,0} parameter(0)
+      %zero = s32[] constant(0)
+      %t0 = (s32[], f32[8,16]{1,0}) tuple(%zero, %x)
+      %while.1 = (s32[], f32[8,16]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%while.1), index=1
+    }
+""")
+
+
+def test_parse_op_line_tuple_type_with_index_comments():
+    line = ('%while.15 = (s32[], bf16[8,1,2048]{2,1,0}, '
+            '/*index=5*/f32[22,8]{1,0}) while(%tuple.21), '
+            'condition=%c, body=%b')
+    name, rtype, opcode = _parse_op_line(line)
+    assert name == "while.15"
+    assert opcode == "while"
+    assert "/*index=5*/" in rtype
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert _shape_bytes("bf16[4,4]") == 32
+    assert _shape_bytes("(s32[], f32[2,2]{1,0})") == 4 + 16
+
+
+def test_trip_count_scaling():
+    m = analyze_hlo(HLO)
+    # one dot per iteration: 2*8*16*16 flops, 5 iterations
+    assert m.flops == 2 * 8 * 16 * 16 * 5
+    # one all-reduce of f32[8,16] per iteration
+    assert m.collective_bytes["all-reduce"] == 8 * 16 * 4 * 5
+    assert m.collective_counts["all-reduce"] == 5
+
+
+def test_parse_computations():
+    comps = parse_hlo(HLO)
+    assert comps["__entry_name__"] == "main"
+    assert "body" in comps and "cond" in comps
+    opcodes = [o.opcode for o in comps["body"]]
+    assert "dot" in opcodes and "all-reduce" in opcodes

@@ -1,0 +1,65 @@
+"""Flash-attention Pallas kernel (interpret mode) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ops import mha_flash
+from repro.nn.attention import dot_attention, causal_mask, sliding_mask
+
+
+def qkv(T, S, dh, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    return (jax.random.normal(ks[0], (T, dh)).astype(dtype),
+            jax.random.normal(ks[1], (S, dh)).astype(dtype),
+            jax.random.normal(ks[2], (S, dh)).astype(dtype))
+
+
+@pytest.mark.parametrize("T,S,dh,bq,bk", [
+    (128, 128, 64, 64, 64),
+    (256, 256, 128, 128, 64),
+    (64, 256, 64, 64, 64),      # q block at offset into larger cache
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_causal(T, S, dh, bq, bk, dtype):
+    q, k, v = qkv(T, S, dh, dtype)
+    off = S - T
+    o_k = flash_attention(q, k, v, block_q=bq, block_k=bk, causal=True,
+                          q_offset=off, interpret=True)
+    o_r = attention_ref(q, k, v, causal=True, q_offset=off)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_sliding_window(window):
+    q, k, v = qkv(256, 256, 64)
+    o_k = flash_attention(q, k, v, block_q=64, block_k=64, causal=True,
+                          window=window, interpret=True)
+    o_r = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_noncausal():
+    q, k, v = qkv(128, 128, 64)
+    o_k = flash_attention(q, k, v, block_q=64, block_k=64, causal=False,
+                          interpret=True)
+    o_r = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mha_flash_gqa_matches_dot_attention():
+    B, T, H, Kv, dh = 2, 128, 8, 2, 64
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, Kv, dh))
+    v = jax.random.normal(ks[2], (B, T, Kv, dh))
+    o_f = mha_flash(q, k, v, causal=True, use_kernel=True, interpret=True)
+    o_d = dot_attention(q, k, v, causal_mask(T, T))
+    np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_d),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,81 @@
+"""Per-kernel validation: sparse/dense gated FFN Pallas kernels
+(interpret mode) vs pure-jnp oracles, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.sparse_ffn.kernel import sparse_ffn, dense_ffn
+from repro.kernels.sparse_ffn.ref import sparse_ffn_ref, dense_ffn_ref
+from repro.kernels.sparse_ffn.ops import sparse_ffn_op
+
+
+def make_inputs(N, D, F, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    x = (jax.random.normal(ks[0], (N, D)) * 0.5).astype(dtype)
+    wg = (jax.random.normal(ks[1], (D, F)) / np.sqrt(D)).astype(dtype)
+    wu = (jax.random.normal(ks[2], (D, F)) / np.sqrt(D)).astype(dtype)
+    wd = (jax.random.normal(ks[3], (F, D)) / np.sqrt(F)).astype(dtype)
+    return x, wg, wu, wd
+
+
+@pytest.mark.parametrize("N,D,F,tile,k", [
+    (128, 128, 512, 128, 2),
+    (128, 256, 1024, 128, 5),
+    (256, 128, 1024, 128, 8),    # k == all tiles -> dense equivalence
+    (128, 384, 768, 128, 3),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sparse_kernel_matches_ref(N, D, F, tile, k, dtype):
+    x, wg, wu, wd = make_inputs(N, D, F, dtype)
+    n_tiles = F // tile
+    ids = jnp.asarray(
+        np.random.default_rng(1).choice(n_tiles, size=k, replace=False),
+        jnp.int32)
+    y_k = sparse_ffn(x, wg, wu, wd, ids, tile=tile, interpret=True)
+    y_r = sparse_ffn_ref(x, wg, wu, wd, ids, tile)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=tol, atol=tol)
+
+
+def test_sparse_all_tiles_equals_dense():
+    x, wg, wu, wd = make_inputs(128, 128, 512, jnp.float32)
+    ids = jnp.arange(4, dtype=jnp.int32)
+    y_s = sparse_ffn(x, wg, wu, wd, ids, tile=128, interpret=True)
+    y_d = dense_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(y_s), np.asarray(y_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [128, 256])
+def test_dense_kernel_matches_ref(tile):
+    x, wg, wu, wd = make_inputs(128, 256, 512, jnp.float32)
+    y_k = dense_ffn(x, wg, wu, wd, tile=tile, interpret=True)
+    y_r = dense_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_dispatch_batched():
+    x, wg, wu, wd = make_inputs(128, 128, 512, jnp.float32)
+    xb = jnp.stack([x, x * 0.5])
+    ids = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    y = sparse_ffn_op(xb, wg, wu, wd, ids, tile=128, use_kernel=False)
+    y0 = sparse_ffn_ref(x, wg, wu, wd, ids[0], 128)
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(y0),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_kernel_flop_scaling():
+    """The kernel's HLO cost must scale with K (the point of the paper)."""
+    x, wg, wu, wd = make_inputs(128, 256, 2048, jnp.float32)
+    ids2 = jnp.arange(2, dtype=jnp.int32)
+    ids8 = jnp.arange(8, dtype=jnp.int32)
+    # interpret-mode pallas doesn't expose cost; compare against the
+    # analytical count through the ref path lowering instead.
+    c2 = jax.jit(lambda *a: sparse_ffn_ref(*a, 128)).lower(
+        x, wg, wu, wd, ids2).compile().cost_analysis()
+    c8 = jax.jit(lambda *a: sparse_ffn_ref(*a, 128)).lower(
+        x, wg, wu, wd, ids8).compile().cost_analysis()
+    assert c8["flops"] > 3.5 * c2["flops"]

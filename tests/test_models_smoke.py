@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests (assignment requirement): REDUCED
+variants of all 10 assigned archs run one forward and one train step on
+CPU, asserting output shapes and absence of NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models.registry import get_model
+from repro.nn.param import init_params
+from repro.training.train import make_train_step
+
+
+def make_batch(cfg, B=2, T=64, train=True, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, T)), jnp.int32)}
+    if train:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+    if cfg.arch == "audio":
+        batch["audio_embed"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_audio_frames, cfg.d_model)),
+            jnp.float32)
+    if cfg.arch == "vlm":
+        batch["patch_embed"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_patches, cfg.d_model)) * 0.02,
+            jnp.float32)
+        if train:
+            img = -np.ones((B, cfg.n_patches), np.int32)
+            batch["labels"] = jnp.concatenate(
+                [jnp.asarray(img), batch["labels"]], axis=1)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_smoke(arch):
+    cfg = get_config(arch, reduced=True)
+    model = get_model(cfg)
+    params = init_params(model.specs(cfg), jax.random.key(0))
+    batch = make_batch(cfg, train=False)
+    logits, aux = model.forward(params, cfg, batch)
+    T_out = 64 + (cfg.n_patches if cfg.arch == "vlm" else 0)
+    assert logits.shape == (2, T_out, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch, reduced=True)
+    model = get_model(cfg)
+    params = init_params(model.specs(cfg), jax.random.key(0))
+    init_state, train_step = make_train_step(cfg, lr=1e-3)
+    state = init_state(params)
+    batch = make_batch(cfg)
+    state, metrics = jax.jit(train_step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, b: a + float(jnp.abs(b).sum()),
+        jax.tree.map(lambda a, b: a - b, state["params"], params), 0.0)
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_smoke(arch):
+    cfg = get_config(arch, reduced=True)
+    if cfg.is_encdec:
+        pytest.skip("decode covered in enc-dec consistency test")
+    model = get_model(cfg)
+    params = init_params(model.specs(cfg), jax.random.key(0))
+    cache = model.init_cache(cfg, 2, 96)
+    tok = jnp.asarray([1, 2], jnp.int32)
+    logits, cache = model.decode_step(params, cfg, tok, cache, jnp.int32(0))
+    assert logits.shape == (2, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "zamba2-2.7b",
+                                  "qwen2-moe-a2.7b"])
+def test_prefill_matches_forward(arch):
+    """Blockwise-cached prefill must reproduce the fused forward exactly
+    when FastForward is disabled."""
+    cfg = get_config(arch, reduced=True).with_ff(enabled=False)
+    model = get_model(cfg)
+    params = init_params(model.specs(cfg), jax.random.key(0))
+    batch = make_batch(cfg, train=False)
+    logits, _ = model.forward(params, cfg, batch)
+    cache = model.init_cache(cfg, 2, 64)
+    cache, pl = model.prefill(params, cfg, batch, cache)
+    np.testing.assert_allclose(np.asarray(pl), np.asarray(logits[:, -1]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_loss_decreases_tinyllama():
+    """Training on a sharply-structured Markov corpus must cut loss."""
+    from repro.data.synthetic import batches
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    model = get_model(cfg)
+    params = init_params(model.specs(cfg), jax.random.key(0))
+    init_state, train_step = make_train_step(cfg, lr=3e-3)
+    state = init_state(params)
+    step_fn = jax.jit(train_step, donate_argnums=0)
+    # low-entropy chain (256 states, zipf-8 fan-out): learnable fast
+    data = batches(256, 8, 64, seed=0, branch=8, alpha=1.5)
+    losses = []
+    for i in range(100):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        state, m = step_fn(state, b)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.3, \
+        (np.mean(losses[:10]), np.mean(losses[-10:]))

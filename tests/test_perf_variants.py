@@ -1,0 +1,87 @@
+"""Performance-variant equivalence: every §Perf optimization must be
+semantics-preserving against its paper-faithful baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import dense, whisper
+from repro.nn.param import init_params
+from repro.nn.attention import attention_spec, attend_full
+
+
+def test_fused_prefill_bit_exact_vs_blockwise():
+    """prefill_fused (beyond-paper, parallel blocks) must reproduce the
+    paper's sequential blockwise scan exactly — logits AND cache."""
+    cfg = get_config("granite-8b", reduced=True)
+    params = init_params(dense.specs(cfg), jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 128), 0, cfg.vocab)
+    c1 = dense.init_cache(cfg, 2, 128)
+    c1, l1 = dense.prefill(params, cfg, {"tokens": toks}, c1)
+    c2 = dense.init_cache(cfg, 2, 128)
+    c2, l2 = dense.prefill_fused(params, cfg, {"tokens": toks}, c2)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1["k"]), np.asarray(c2["k"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("window", [None, 48])
+def test_chunked_attention_matches_full(window):
+    p = init_params(attention_spec(64, 8, 2, 32), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 128, 64))
+    pos = jnp.broadcast_to(jnp.arange(128)[None], (2, 128))
+    o1 = attend_full(p, x, pos, window=window)
+    o2 = attend_full(p, x, pos, window=window, chunk=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_chunked_forward_matches_baseline():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    params = init_params(dense.specs(cfg), jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 64), 0, cfg.vocab)
+    l0, _ = dense.forward(params, cfg, {"tokens": toks})
+    l1, _ = dense.forward(params, cfg.with_(attn_chunk=32),
+                          {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=2e-3, atol=1e-3)
+
+
+def test_whisper_decode_matches_forward():
+    """Enc-dec decode continuation equals the teacher-forced forward."""
+    cfg = get_config("whisper-tiny", reduced=True).with_ff(enabled=False)
+    params = init_params(whisper.specs(cfg), jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 64), 0, cfg.vocab)
+    audio = jax.random.normal(jax.random.key(2),
+                              (2, cfg.n_audio_frames, cfg.d_model))
+    cache = whisper.init_cache(cfg, 2, 80)
+    cache, pl = whisper.prefill(
+        params, cfg, {"tokens": toks, "audio_embed": audio}, cache)
+    nt = jnp.argmax(pl, -1).astype(jnp.int32)
+    dl, cache = whisper.decode_step(params, cfg, nt, cache, jnp.int32(64))
+    toks2 = jnp.concatenate([toks, nt[:, None]], 1)
+    l2, _ = whisper.forward(params, cfg,
+                            {"tokens": toks2, "audio_embed": audio})
+    np.testing.assert_allclose(np.asarray(dl), np.asarray(l2[:, -1]),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_sliding_window_decode_ring_buffer():
+    """Windowed decode over a ring buffer matches windowed full forward."""
+    cfg = get_config("llava-next-mistral-7b", reduced=True).with_ff(
+        enabled=False).with_(sliding_window=32, n_patches=0)
+    params = init_params(dense.specs(cfg), jax.random.key(0))
+    T = 64
+    toks = jax.random.randint(jax.random.key(1), (2, T), 0, cfg.vocab)
+    logits, _ = dense.forward(params, cfg, {"tokens": toks})
+    # decode token-by-token through a window-sized ring buffer
+    W = cfg.sliding_window
+    cache = dense.init_cache(cfg, 2, W)
+    out = None
+    for t in range(T):
+        out, cache = dense.decode_step(params, cfg, toks[:, t], cache,
+                                       jnp.int32(t), window=W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(logits[:, -1]),
+                               rtol=2e-3, atol=2e-4)

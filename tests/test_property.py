@@ -1,0 +1,111 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduler as SCHED
+from repro.core import sparse_ffn as S
+from repro.core import predictor as P
+from repro.training.optimizer import (adam_init, adam_update,
+                                      adafactor_init, adafactor_update)
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(st.lists(st.floats(min_value=0.01, max_value=100.0),
+                min_size=2, max_size=64),
+       st.floats(min_value=0.05, max_value=0.95))
+@settings(**SET)
+def test_algorithm1_invariants(importance, budget):
+    """Algorithm 1: budgets in (0,1], total budget conserved (up to the
+    min(1,..) clip when importance concentrates), monotone in s_i."""
+    b = SCHED.allocate_budgets(np.array(importance), budget)
+    assert np.all(b >= 0) and np.all(b <= 1.0)
+    L = len(importance)
+    # conservation: sum(b) == budget*L unless clipping binds everywhere
+    assert b.sum() <= budget * L + 1e-6
+    if np.all(b < 1.0):
+        assert abs(b.sum() - budget * L) < 1e-6
+    # monotonicity
+    order = np.argsort(importance)
+    assert np.all(np.diff(b[order]) >= -1e-9)
+
+
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=1000))
+@settings(**SET)
+def test_tile_mask_cardinality(k_tiles, seed):
+    """Mask keeps exactly ceil(keep*n_tiles) tiles regardless of scores."""
+    n_tiles, tile = 8, 16
+    scores = jax.random.normal(jax.random.key(seed), (3, n_tiles * tile))
+    keep = k_tiles / n_tiles
+    m = S.neuron_mask_from_scores(scores, keep, tile)
+    counts = np.asarray(m.sum(-1)) / tile
+    assert np.all(counts == k_tiles)
+
+
+@given(st.integers(min_value=0, max_value=1000))
+@settings(**SET)
+def test_balanced_topk_ids_unique_and_in_range(seed):
+    scores = jax.random.normal(jax.random.key(seed), (2, 256))
+    ids = S.balanced_topk_tiles(scores, 8, 16, shards=4)  # 16 tiles
+    ids = np.asarray(ids)
+    assert ids.shape == (2, 8)
+    for row in ids:
+        assert len(set(row.tolist())) == 8
+        assert row.min() >= 0 and row.max() < 16
+
+
+@given(st.integers(min_value=0, max_value=100))
+@settings(**SET)
+def test_predictor_scores_permutation_invariant(seed):
+    """Attention pooling is order-invariant over tokens in a block."""
+    spec = P.predictor_spec(16, 64, 8)
+    from repro.nn.param import init_params
+    params = init_params(spec, jax.random.key(7))
+    x = jax.random.normal(jax.random.key(seed), (10, 16))
+    perm = jax.random.permutation(jax.random.key(seed + 1), 10)
+    s1 = P.neuron_scores(params, x)
+    s2 = P.neuron_scores(params, x[perm])
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(min_value=0, max_value=50))
+@settings(max_examples=10, deadline=None)
+def test_adam_descends_quadratic(seed):
+    """Both optimizers reduce a convex quadratic from any start."""
+    x0 = {"w": jax.random.normal(jax.random.key(seed), (8,)) * 3}
+    target = jax.random.normal(jax.random.key(seed + 1), (8,))
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    p, s = x0, adam_init(x0)
+    for t in range(50):
+        g = jax.grad(loss)(p)
+        p, s = adam_update(p, g, s, jnp.int32(t), lr=0.1)
+    assert float(loss(p)) < float(loss(x0))
+
+    p, s = x0, adafactor_init(x0)
+    for t in range(50):
+        g = jax.grad(loss)(p)
+        p, s = adafactor_update(p, g, s, jnp.int32(t), lr=0.3)
+    assert float(loss(p)) < float(loss(x0))
+
+
+@given(st.integers(min_value=0, max_value=30))
+@settings(max_examples=10, deadline=None)
+def test_sparse_ffn_subset_monotone(seed):
+    """More tiles == strictly more of the dense computation: with all
+    tiles selected the gather path equals the dense FFN exactly."""
+    ks = jax.random.split(jax.random.key(seed), 4)
+    x = jax.random.normal(ks[0], (4, 32))
+    params = {
+        "wg": jax.random.normal(ks[1], (32, 128)) * 0.2,
+        "wu": jax.random.normal(ks[2], (32, 128)) * 0.2,
+        "wd": jax.random.normal(ks[3], (128, 32)) * 0.2,
+    }
+    full_ids = jnp.arange(8, dtype=jnp.int32)
+    y_all = S.ffn_sparse_gather(params, x, full_ids, 16)
+    y_dense = S.ffn_dense(params, x)
+    np.testing.assert_allclose(np.asarray(y_all), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,103 @@
+"""SSM machinery: chunked forms vs step-by-step recurrent references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm_ops import (
+    ssd_chunked, ssd_step, mlstm_chunked, mlstm_recurrent_ref,
+    slstm_scan, causal_conv1d, conv_step, segsum)
+
+
+def test_segsum_semantics():
+    a = jnp.asarray([1.0, 2.0, 3.0])
+    s = segsum(a)
+    np.testing.assert_allclose(float(s[2, 0]), 5.0)   # a2 + a3
+    np.testing.assert_allclose(float(s[1, 1]), 0.0)
+    assert float(s[0, 2]) < -1e20
+
+
+@pytest.mark.parametrize("T,chunk", [(32, 8), (64, 16), (64, 64)])
+def test_ssd_chunked_vs_step(T, chunk):
+    Bb, H, P, G, N = 2, 4, 8, 1, 16
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (Bb, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (Bb, T, G, N))
+    Cm = jax.random.normal(ks[4], (Bb, T, G, N))
+    xdt, dA = x * dt[..., None], dt * A[None, None]
+    y, st = ssd_chunked(xdt, dA, Bm, Cm, chunk)
+    s = jnp.zeros((Bb, H, P, N))
+    ys = []
+    for t in range(T):
+        yt, s = ssd_step(s, xdt[:, t], dA[:, t], Bm[:, t], Cm[:, t])
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ys, 1)),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(s),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_ssd_state_carry():
+    """Two chunked halves with carried state == one full pass."""
+    Bb, T, H, P, G, N = 1, 64, 2, 4, 1, 8
+    ks = jax.random.split(jax.random.key(1), 5)
+    x = jax.random.normal(ks[0], (Bb, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (Bb, T, G, N))
+    Cm = jax.random.normal(ks[4], (Bb, T, G, N))
+    xdt, dA = x * dt[..., None], dt * A[None, None]
+    y_full, st_full = ssd_chunked(xdt, dA, Bm, Cm, 16)
+    y1, s1 = ssd_chunked(xdt[:, :32], dA[:, :32], Bm[:, :32], Cm[:, :32], 16)
+    y2, s2 = ssd_chunked(xdt[:, 32:], dA[:, 32:], Bm[:, 32:], Cm[:, 32:],
+                         16, init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(st_full),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_mlstm_chunked_vs_recurrent(chunk):
+    Bb, T, H, dk, dv = 2, 64, 4, 8, 8
+    ks = jax.random.split(jax.random.key(2), 5)
+    q = jax.random.normal(ks[0], (Bb, T, H, dk))
+    k = jax.random.normal(ks[1], (Bb, T, H, dk))
+    v = jax.random.normal(ks[2], (Bb, T, H, dv))
+    ig = jax.random.normal(ks[3], (Bb, T, H)) * 2
+    fg = jax.random.normal(ks[4], (Bb, T, H)) * 2 + 2
+    h_ref, st_ref = mlstm_recurrent_ref(q, k, v, ig, fg)
+    h_c, st_c = mlstm_chunked(q, k, v, ig, fg, chunk)
+    # f32 cancellation in the normalizer bounds absolute precision
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_ref),
+                               rtol=2e-3, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(st_c[0]), np.asarray(st_ref[0]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_normalizer_bounds():
+    """sLSTM hidden state magnitude is bounded by |z| (n normalizes)."""
+    Bb, T, H, dh = 2, 32, 2, 4
+    ks = jax.random.split(jax.random.key(3), 4)
+    zg, ig, fg, og = [jax.random.normal(k, (Bb, T, H, dh)) * 3 for k in ks]
+    r = jax.random.normal(jax.random.key(4), (H, dh, 4 * dh)) * 0.1
+    hs, state = slstm_scan(zg, ig, fg, og, r)
+    assert not bool(jnp.isnan(hs).any())
+    assert float(jnp.abs(hs).max()) <= 1.5  # |o|<=1, |c/n|<=max|tanh|=1
+
+
+def test_conv_step_matches_batch():
+    Bb, T, Cc, K = 2, 16, 6, 4
+    x = jax.random.normal(jax.random.key(5), (Bb, T, Cc))
+    w = jax.random.normal(jax.random.key(6), (K, Cc))
+    b = jnp.full((Cc,), 0.3)
+    y_batch = causal_conv1d(x, w, b)
+    st = jnp.zeros((Bb, K - 1, Cc))
+    outs = []
+    for t in range(T):
+        o, st = conv_step(st, x[:, t], w, b)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(y_batch), rtol=1e-5, atol=1e-6)
