@@ -8,6 +8,8 @@ Prints ``name,value,derived`` CSV rows per benchmark (harness contract).
   fidelity_proxy    paper Table 2-3 (quality vs sparsity)
   ablations         paper Tables 4-7 (schedule/blocks/comp/predictor)
   roofline          ours: dry-run roofline summary (§Roofline)
+  continuous_batching  ours: continuous vs static batching under
+                       staggered arrivals (serving runtime)
 """
 from __future__ import annotations
 
@@ -18,7 +20,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (flops_crossover, prefill_speedup, ttft,
-                            fidelity_proxy, ablations, roofline)
+                            fidelity_proxy, ablations, roofline,
+                            continuous_batching)
     suites = [
         ("flops_crossover", flops_crossover),
         ("prefill_speedup", prefill_speedup),
@@ -26,6 +29,7 @@ def main() -> None:
         ("fidelity_proxy", fidelity_proxy),
         ("ablations", ablations),
         ("roofline", roofline),
+        ("continuous_batching", continuous_batching),
     ]
     failures = 0
     for name, mod in suites:

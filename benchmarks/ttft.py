@@ -14,7 +14,10 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import build_fixture
-from repro.serving.engine import Engine
+# StaticEngine keeps the seed measurement semantics (one batched
+# blockwise prefill); the continuous engine's prefill_seconds means
+# last-request TTFT under chunked scheduling — a different metric.
+from repro.serving.engine import StaticEngine
 from repro.core import sparse_ffn as S
 from repro.core import fastforward as FF
 
@@ -58,7 +61,7 @@ def run(csv=True):
         prompts = [rng.integers(0, cfg.vocab, L).tolist() for _ in range(2)]
         for tag, c in [("dense", cfg.with_ff(enabled=False)),
                        ("sparse50", cfg)]:
-            eng = Engine(c, params)
+            eng = StaticEngine(c, params)
             eng.generate(prompts, max_new=1)           # warm the jit
             res = eng.generate(prompts, max_new=1)
             rows.append((f"ttft_{tag}_L{L}",

@@ -9,7 +9,7 @@ import jax
 from repro.configs import get_config
 from repro.models.registry import get_model
 from repro.nn.param import init_params
-from repro.serving.engine import Engine
+from repro.serving.engine import StaticEngine
 
 cfg = get_config("tinyllama-1.1b", reduced=True)
 params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
@@ -21,7 +21,7 @@ print(f"4 requests, prompt lengths {[len(p) for p in prompts]} "
       f"(right-padded to {cfg.ff.block_size}-token blocks)")
 
 for tag, c in [("dense ", cfg.with_ff(enabled=False)), ("sparse", cfg)]:
-    eng = Engine(c, params)
+    eng = StaticEngine(c, params)
     eng.generate(prompts, max_new=1)  # warm up the jit cache
     res = eng.generate(prompts, max_new=16)
     print(f"{tag}: TTFT {res.prefill_seconds*1e3:7.1f} ms | "
@@ -29,4 +29,5 @@ for tag, c in [("dense ", cfg.with_ff(enabled=False)), ("sparse", cfg)]:
           f"({res.generated_tokens} tokens) | "
           f"first tokens {res.tokens[:, 0].tolist()}")
 print("note: reduced-model CPU timings; the compute-bound speedup at "
-      "production scale is benchmarks/prefill_speedup.py")
+      "production scale is benchmarks/prefill_speedup.py; for the "
+      "continuous-batching engine see launch/serve.py --stream")

@@ -1,0 +1,79 @@
+"""Version-tolerant shims over drifting JAX APIs.
+
+The repo targets the jax_pallas toolchain baked into the image, but the
+exact JAX release moves under us (0.4.x vs 0.5+/0.6+ renames). Every
+site that touches a drifted symbol goes through this module so the fix
+lives in one place:
+
+  * ``tpu_compiler_params``  — ``pltpu.CompilerParams`` (new) vs
+    ``pltpu.TPUCompilerParams`` (0.4.x).
+  * ``cost_analysis``        — ``compiled.cost_analysis()`` returns a
+    dict on new JAX but a one-element list of dicts on 0.4.x.
+  * ``make_mesh``            — ``jax.make_mesh(..., axis_types=...)``
+    grew the kwarg after 0.4.37; older releases reject it.
+  * ``use_mesh``             — ``jax.sharding.set_mesh`` does not exist
+    on 0.4.x; ``Mesh`` itself is a context manager there.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def tpu_compiler_params(**kwargs):
+    """Build Pallas-TPU compiler params across the CompilerParams /
+    TPUCompilerParams rename (kwargs passed through, e.g.
+    ``dimension_semantics=("parallel", "arbitrary")``)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` to a flat dict (older JAX
+    returns a one-element list of per-computation dicts)."""
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported;
+    plain mesh (implicitly Auto) on older releases."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kw = {} if devices is None else {"devices": devices}
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(axis_type.Auto,) * len(axis_names), **kw)
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def use_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh
+    (``jax.sharding.set_mesh`` on new JAX, ``with mesh:`` on 0.4.x)."""
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return contextlib.ExitStack() if mesh is None else mesh
+
+
+def jit_cache_size(jitted):
+    """Number of distinct compilations a ``jax.jit`` wrapper holds
+    (used by the serving runtime's no-recompilation assertion), or
+    None when this JAX exposes no cache-size API — callers must treat
+    None as "check unavailable", NOT as a stable count (comparing two
+    unavailable sentinels would make the assertion pass vacuously)."""
+    try:
+        return int(jitted._cache_size())
+    except Exception:
+        return None

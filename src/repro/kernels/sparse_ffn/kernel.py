@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _sparse_ffn_kernel(ids_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref):
     k = pl.program_id(1)
@@ -68,7 +70,7 @@ def sparse_ffn(x, wg, wu, wd, tile_ids, *, tile: int = 128,
             out_specs=pl.BlockSpec((block_n, D), lambda n, k, ids: (n, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((N, D), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -113,7 +115,7 @@ def dense_ffn(x, wg, wu, wd, *, tile: int = 512, block_n: int = 128,
         ],
         out_specs=pl.BlockSpec((block_n, D), lambda n, f: (n, 0)),
         out_shape=jax.ShapeDtypeStruct((N, D), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

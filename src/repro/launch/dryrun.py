@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat as CP
+from repro.compat import use_mesh
 from repro.configs import ASSIGNED, ALL, get_config
 from repro.models.registry import get_model
 from repro.nn import param as PM
@@ -184,7 +186,7 @@ def build_lowering(cfg, shape_name: str, mesh, fused_prefill: bool = False):
         astate = {"params": aparams, "opt": aopt, "step": astep}
         out_sh = ({"params": pshard, "opt": oshard,
                    "step": None}, None)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(step).lower(astate, abatch)
         return lowered, {"shape": shape}
 
@@ -200,7 +202,7 @@ def build_lowering(cfg, shape_name: str, mesh, fused_prefill: bool = False):
             fn = model.prefill_fused if use_fused else model.prefill
             return fn(params, cfg, batch, cache, shards=shards, **kw)
 
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(step).lower(aparams, abatch, acache)
         return lowered, {"shape": shape}
 
@@ -225,7 +227,7 @@ def build_lowering(cfg, shape_name: str, mesh, fused_prefill: bool = False):
         return model.decode_step(params, cfg, token, cache, position,
                                  shards=shards, window=window)
 
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(step).lower(aparams, tok["token"], acache,
                                       tok["position"])
     return lowered, {"shape": shape, "window": window}
@@ -237,7 +239,7 @@ def analyse(lowered, cfg, shape_name: str, mesh, compile_seconds=None):
     compiled = lowered.compile()
     chips = int(np.prod(list(mesh.shape.values())))
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = CP.cost_analysis(compiled)
     text = compiled.as_text()
     # XLA's cost_analysis counts while bodies ONCE; analyze_hlo scales by
     # known_trip_count and derives dot flops / collective payload bytes

@@ -1,11 +1,21 @@
-"""Serving launcher: batched requests through the FastForward engine.
+"""Serving launcher: static batch or continuous-batching request stream.
+
+Static one-shot batch (legacy behaviour):
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --requests 4 --max-new 16
+
+Continuous-batching stream simulator (Poisson arrivals; reports TTFT
+p50/p99, tokens/sec, slot churn, and asserts zero jit recompilation
+after warmup):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --stream --requests 16 --rate 20 --slots 4
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import numpy as np
 import jax
@@ -13,8 +23,96 @@ import jax
 from repro.configs import ALL, get_config
 from repro.models.registry import get_model
 from repro.nn.param import init_params
-from repro.serving.engine import Engine
+from repro.serving import (ContinuousBatchingScheduler, Request,
+                           StaticEngine, drive_stream)
+from repro.serving.runtime import make_runtime
 from repro.training.checkpoint import load_checkpoint
+
+
+def build_params(cfg, checkpoint=None):
+    model = get_model(cfg)
+    if checkpoint:
+        params, meta = load_checkpoint(checkpoint)
+        print(f"loaded checkpoint ({meta})")
+        return params
+    return init_params(model.specs(cfg), jax.random.key(0))
+
+
+def make_prompts(cfg, n, prompt_len, rng):
+    return [list(rng.integers(0, cfg.vocab,
+                              size=rng.integers(max(1, prompt_len // 2),
+                                                prompt_len + 1)))
+            for _ in range(n)]
+
+
+def serve_static(cfg, params, args):
+    rng = np.random.default_rng(0)
+    prompts = make_prompts(cfg, args.requests, args.prompt_len, rng)
+    eng = StaticEngine(cfg, params)
+    res = eng.generate(prompts, max_new=args.max_new,
+                       temperature=args.temperature)
+    print(f"mode={'dense' if args.dense else 'fastforward'} "
+          f"sparsity={0.0 if args.dense else cfg.ff.sparsity}")
+    print(f"prefill: {res.prefill_seconds*1e3:.1f} ms "
+          f"({res.prompt_tokens} prompt tokens)")
+    print(f"decode:  {res.decode_seconds*1e3:.1f} ms "
+          f"({res.generated_tokens} tokens)")
+    for i, row in enumerate(res.tokens):
+        print(f"req{i}: {row.tolist()}")
+
+
+def serve_stream(cfg, params, args):
+    """Poisson request stream through the continuous-batching scheduler."""
+    rng = np.random.default_rng(args.seed)
+    runtime = make_runtime(cfg, params)
+    N = runtime.block_size
+    max_blocks = -(-args.prompt_len // N)
+    cache_len = max_blocks * N + max(args.max_new, 2)
+    sched = ContinuousBatchingScheduler(
+        runtime, n_slots=args.slots, cache_len=cache_len, seed=args.seed)
+
+    # warmup compiles both entry points through the scheduler's own pool
+    counts0 = sched.warmup()
+    check_compiles = None not in counts0.values()
+    print(f"warmup done, jit compile counts: {counts0}")
+
+    # ---- Poisson arrival plan ----------------------------------------
+    prompts = make_prompts(cfg, args.requests, args.prompt_len, rng)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
+                                         size=args.requests))
+    max_news = rng.integers(max(1, args.max_new // 4),
+                            args.max_new + 1, size=args.requests)
+    requests = [
+        Request(rid=i, prompt=prompts[i], max_new=int(max_news[i]),
+                temperature=args.temperature, arrival_time=arrivals[i])
+        for i in range(args.requests)]
+
+    wall = drive_stream(sched, requests)
+
+    counts1 = runtime.compile_counts()
+    if check_compiles and counts1 != counts0:
+        raise AssertionError(
+            f"jit recompilation during serving: {counts0} -> {counts1}")
+
+    outs = sched.finished
+    ttfts = np.array([o.ttft_seconds for o in outs.values()])
+    gen = sum(len(o.tokens) for o in outs.values())
+    print(f"served {len(outs)} requests in {wall:.2f}s wall "
+          f"({args.rate:.1f} req/s offered)")
+    print(f"TTFT p50 {np.percentile(ttfts, 50)*1e3:8.1f} ms | "
+          f"p99 {np.percentile(ttfts, 99)*1e3:8.1f} ms")
+    print(f"throughput {gen / wall:8.1f} generated tok/s "
+          f"({gen} tokens)")
+    reuse = max(0, sched.pool.total_acquires - args.slots)
+    print(f"slots: {args.slots} | max in use {sched.pool.max_in_use} | "
+          f"acquires {sched.pool.total_acquires} (slot reuse x{reuse})")
+    print(f"ticks {sched.n_ticks} | prefill blocks "
+          f"{sched.n_prefill_blocks} | decode steps {sched.n_decode_steps}")
+    if check_compiles:
+        print(f"no recompilation after warmup: OK {counts1}")
+    else:
+        print("compile-count check unavailable on this JAX "
+              "(no _cache_size) — recompilation NOT verified")
 
 
 def main():
@@ -28,34 +126,27 @@ def main():
     p.add_argument("--dense", action="store_true",
                    help="disable FastForward sparsity (baseline)")
     p.add_argument("--checkpoint", default=None)
+    p.add_argument("--stream", action="store_true",
+                   help="continuous-batching Poisson request stream")
+    p.add_argument("--rate", type=float, default=20.0,
+                   help="stream mode: mean arrival rate (req/s)")
+    p.add_argument("--slots", type=int, default=4,
+                   help="stream mode: KV slot pool capacity")
+    p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
+    if args.max_new < 1:
+        p.error("--max-new must be >= 1")
+    if args.requests < 1:
+        p.error("--requests must be >= 1")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.dense:
         cfg = cfg.with_ff(enabled=False)
-    model = get_model(cfg)
-    if args.checkpoint:
-        params, meta = load_checkpoint(args.checkpoint)
-        print(f"loaded checkpoint ({meta})")
+    params = build_params(cfg, args.checkpoint)
+    if args.stream:
+        serve_stream(cfg, params, args)
     else:
-        params = init_params(model.specs(cfg), jax.random.key(0))
-
-    rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(0, cfg.vocab,
-                                 size=rng.integers(args.prompt_len // 2,
-                                                   args.prompt_len + 1)))
-               for _ in range(args.requests)]
-    eng = Engine(cfg, params)
-    res = eng.generate(prompts, max_new=args.max_new,
-                       temperature=args.temperature)
-    print(f"mode={'dense' if args.dense else 'fastforward'} "
-          f"sparsity={0.0 if args.dense else cfg.ff.sparsity}")
-    print(f"prefill: {res.prefill_seconds*1e3:.1f} ms "
-          f"({res.prompt_tokens} prompt tokens)")
-    print(f"decode:  {res.decode_seconds*1e3:.1f} ms "
-          f"({res.generated_tokens} tokens)")
-    for i, row in enumerate(res.tokens):
-        print(f"req{i}: {row.tolist()}")
+        serve_static(cfg, params, args)
 
 
 if __name__ == "__main__":

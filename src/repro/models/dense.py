@@ -125,6 +125,61 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
 # ---------------------------------------------------------------- prefill
 
 
+def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
+                  is_dense=None, lengths=None, shards: int = 1,
+                  k_tiles=None, mesh=None):
+    """One N-token FastForward block at sequence offset `pos0`.
+
+    This is the schedulable unit of prefill work used both by the
+    full-prompt `prefill` scan below and by the continuous-batching
+    runtime (repro.serving.runtime), which interleaves single blocks of
+    different requests with batched decode.
+
+    tok_blk: [B, N]; cache: KV pytree with leaves [L, B, S, Kv, dh];
+    pos0: scalar int32 (may be traced) — every row processes the block
+    at the same offset (per-request chunked prefill uses B == 1);
+    is_dense: traced bool forcing the dense FFN path (paper's dense
+    first/last block), None when FastForward is disabled;
+    lengths: optional [B] true prompt lengths (right-pad masking).
+    Returns (cache, hidden [B, N, D]) with hidden pre-final-norm."""
+    ff = cfg.ff
+    if k_tiles is None:
+        k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    N = tok_blk.shape[1]
+    x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
+    positions = pos0 + jnp.arange(N)[None, :]
+
+    def layer_body(x, layer_in):
+        lp, kc, vc = layer_in
+        xn = apply_norm(cfg, lp["ln1"], x)
+        k_new, v_new = A.project_kv(lp["attn"], xn, positions,
+                                    cfg.rope_theta)
+        kc, vc = A.write_kv_block(kc, vc, k_new, v_new, pos0)
+        h = A.attend_block_cached(lp["attn"], xn, kc, vc, pos0,
+                                  window=cfg.sliding_window,
+                                  rope_theta=cfg.rope_theta,
+                                  lengths=lengths)
+        x = x + h
+        xn2 = apply_norm(cfg, lp["ln2"], x)
+        if ff.enabled and cfg.shardmap_ffn and mesh is not None:
+            from repro.core.sparse_ffn import ffn_block_sparse_shardmap
+            y = jax.lax.cond(
+                is_dense,
+                lambda xx: FF.ff_dense(lp["ffn"], cfg, xx),
+                lambda xx: ffn_block_sparse_shardmap(
+                    lp["ffn"], cfg, xx, k_tiles, mesh), xn2)
+        elif ff.enabled:
+            y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, k_tiles,
+                                   shards, is_dense)
+        else:
+            y = FF.ff_dense(lp["ffn"], cfg, xn2)
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    return {"k": ks, "v": vs}, x
+
+
 def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
             lengths=None, collect_hidden: bool = False, mesh=None):
     """Blockwise prompt processing (paper §3.1): scan over N-token blocks.
@@ -145,45 +200,16 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
 
     def block_step(cache, blk_in):
         blk_idx, tok_blk = blk_in
-        pos0 = blk_idx * N
-        x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
-        positions = pos0 + jnp.arange(N)[None, :]
         is_dense = jnp.zeros((), bool)
         if ff.dense_first_block:
             is_dense = is_dense | (blk_idx == 0)
         if ff.dense_last_block:
             is_dense = is_dense | (blk_idx == nb - 1)
-
-        def layer_body(x, layer_in):
-            lp, kc, vc = layer_in
-            xn = apply_norm(cfg, lp["ln1"], x)
-            k_new, v_new = A.project_kv(lp["attn"], xn, positions,
-                                        cfg.rope_theta)
-            kc, vc = A.write_kv_block(kc, vc, k_new, v_new, pos0)
-            h = A.attend_block_cached(lp["attn"], xn, kc, vc, pos0,
-                                      window=cfg.sliding_window,
-                                      rope_theta=cfg.rope_theta,
-                                      lengths=lengths)
-            x = x + h
-            xn2 = apply_norm(cfg, lp["ln2"], x)
-            if ff.enabled and cfg.shardmap_ffn and mesh is not None:
-                from repro.core.sparse_ffn import ffn_block_sparse_shardmap
-                y = jax.lax.cond(
-                    is_dense,
-                    lambda xx: FF.ff_dense(lp["ffn"], cfg, xx),
-                    lambda xx: ffn_block_sparse_shardmap(
-                        lp["ffn"], cfg, xx, k_tiles, mesh), xn2)
-            elif ff.enabled:
-                y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, k_tiles,
-                                       shards, is_dense)
-            else:
-                y = FF.ff_dense(lp["ffn"], cfg, xn2)
-            return x + y, (kc, vc)
-
-        x, (ks, vs) = jax.lax.scan(
-            layer_body, x, (params["layers"], cache["k"], cache["v"]))
+        cache, x = prefill_block(
+            params, cfg, tok_blk, cache, blk_idx * N, is_dense=is_dense,
+            lengths=lengths, shards=shards, k_tiles=k_tiles, mesh=mesh)
         out = x if collect_hidden else x[:, -1, :]
-        return {"k": ks, "v": vs}, out
+        return cache, out
 
     cache, outs = jax.lax.scan(
         block_step, cache, (jnp.arange(nb), blocks))
@@ -272,10 +298,15 @@ def prefill_fused(params, cfg: ModelConfig, batch, cache, shards: int = 1,
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, position,
-                shards: int = 1, window: Optional[int] = None):
+                shards: int = 1, window: Optional[int] = None,
+                active=None):
     """token: [B] int32; cache from init_cache; position: scalar int32
     OR [B] int32 for ragged batches (per-sequence decode positions).
-    window: ring-buffer size when the cache is a sliding window."""
+    window: ring-buffer size when the cache is a sliding window.
+    active: optional [B] bool (ragged path only) — rows with
+    active[b] == False never write their KV (their logits are garbage
+    and must be ignored); used by the serving slot pool so one
+    fixed-capacity jitted step serves a churning request set."""
     ff = cfg.ff
     B = token.shape[0]
     ragged = jnp.ndim(position) == 1
@@ -291,8 +322,12 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
         if ragged:
-            kc, vc = A.write_kv_tok(kc, vc, k_new, v_new, position)
+            # full-length cache: `window` is an attention mask here, not
+            # a ring-buffer size (writes stay at absolute positions)
+            kc, vc = A.write_kv_tok(kc, vc, k_new, v_new, position,
+                                    active=active)
             h = A.attend_decode_ragged(lp["attn"], xn, kc, vc, position,
+                                       window=window,
                                        rope_theta=cfg.rope_theta)
         else:
             if window:

@@ -72,11 +72,15 @@ def capacity(n_tokens: int, cfg: ModelConfig) -> int:
     return max(8, -(-c // 8) * 8)  # round up to 8 for layout friendliness
 
 
-def routed_experts(params, cfg: ModelConfig, x):
+def routed_experts(params, cfg: ModelConfig, x, token_mask=None):
     """x: [B, T, D] -> (y [B, T, D], aux_loss scalar).
 
     Scatter-based capacity dispatch; drops overflow tokens (their routed
     contribution is zero — the shared expert/residual still carries them).
+    token_mask: optional [B, T] bool — masked-out tokens neither occupy
+    expert capacity nor receive routed output (serving: inactive KV
+    slots ride along in the fixed decode batch and must not steal
+    capacity from live requests).
     """
     B, T, Dm = x.shape
     N = B * T
@@ -100,6 +104,9 @@ def routed_experts(params, cfg: ModelConfig, x):
     flat_tok = jnp.arange(N * K) // K
 
     onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # [N*K, E]
+    if token_mask is not None:
+        onehot = onehot * token_mask.reshape(N)[flat_tok].astype(
+            jnp.int32)[:, None]
     # sharding probe (EXPERIMENTS.md §Perf K1): explicit constraint is a
     # no-op — GSPMD already keeps the bookkeeping token-sharded; the MoE
     # collective cost is the scatter-add into the [E,C,D] buffer below.
@@ -130,10 +137,10 @@ def routed_experts(params, cfg: ModelConfig, x):
 
 
 def moe_block(params, cfg: ModelConfig, x, budget=None, mode="train",
-              k_tiles=0, shards=1, is_dense=None):
+              k_tiles=0, shards=1, is_dense=None, token_mask=None):
     """Full MoE FFN: routed experts + (FastForward-sparsified) shared
     expert. mode: train (mask path) | block (gather path) | dense."""
-    y, aux = routed_experts(params, cfg, x)
+    y, aux = routed_experts(params, cfg, x, token_mask=token_mask)
     if cfg.n_shared_experts:
         sp = params["shared"]
         if cfg.ff.enabled and mode == "train":
@@ -201,7 +208,46 @@ cache_spec = D.cache_spec
 init_cache = D.init_cache
 
 
-def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
+def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
+                  is_dense=None, lengths=None, shards: int = 1,
+                  k_tiles=None):
+    """One N-token block at offset `pos0` (MoE twin of
+    repro.models.dense.prefill_block — the schedulable prefill unit of
+    the continuous-batching runtime). Note: capacity-based routing
+    dispatches per block, so token-drop patterns differ from the
+    full-sequence `forward` (see test_models_smoke xfail note).
+    Returns (cache, hidden [B, N, D]) pre-final-norm."""
+    ff = cfg.ff
+    if k_tiles is None:
+        k_tiles = shared_k_tiles(cfg, shards)
+    N = tok_blk.shape[1]
+    x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
+    positions = pos0 + jnp.arange(N)[None, :]
+
+    def layer_body(x, layer_in):
+        lp, kc, vc = layer_in
+        xn = D.apply_norm(cfg, lp["ln1"], x)
+        k_new, v_new = A.project_kv(lp["attn"], xn, positions,
+                                    cfg.rope_theta)
+        kc, vc = A.write_kv_block(kc, vc, k_new, v_new, pos0)
+        h = A.attend_block_cached(lp["attn"], xn, kc, vc, pos0,
+                                  window=cfg.sliding_window,
+                                  rope_theta=cfg.rope_theta,
+                                  lengths=lengths)
+        x = x + h
+        xn2 = D.apply_norm(cfg, lp["ln2"], x)
+        y, _ = moe_block(lp["moe"], cfg, xn2, mode="block",
+                         k_tiles=k_tiles, shards=shards,
+                         is_dense=is_dense)
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    return {"k": ks, "v": vs}, x
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
+            lengths=None):
     tokens = batch["tokens"]
     ff = cfg.ff
     B, T = tokens.shape
@@ -212,34 +258,15 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
 
     def block_step(cache, blk_in):
         blk_idx, tok_blk = blk_in
-        pos0 = blk_idx * N
-        x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
-        positions = pos0 + jnp.arange(N)[None, :]
         is_dense = jnp.zeros((), bool)
         if ff.dense_first_block:
             is_dense = is_dense | (blk_idx == 0)
         if ff.dense_last_block:
             is_dense = is_dense | (blk_idx == nb - 1)
-
-        def layer_body(x, layer_in):
-            lp, kc, vc = layer_in
-            xn = D.apply_norm(cfg, lp["ln1"], x)
-            k_new, v_new = A.project_kv(lp["attn"], xn, positions,
-                                        cfg.rope_theta)
-            kc, vc = A.write_kv_block(kc, vc, k_new, v_new, pos0)
-            h = A.attend_block_cached(lp["attn"], xn, kc, vc, pos0,
-                                      window=cfg.sliding_window,
-                                      rope_theta=cfg.rope_theta)
-            x = x + h
-            xn2 = D.apply_norm(cfg, lp["ln2"], x)
-            y, _ = moe_block(lp["moe"], cfg, xn2, mode="block",
-                             k_tiles=k_tiles, shards=shards,
-                             is_dense=is_dense)
-            return x + y, (kc, vc)
-
-        x, (ks, vs) = jax.lax.scan(
-            layer_body, x, (params["layers"], cache["k"], cache["v"]))
-        return {"k": ks, "v": vs}, x[:, -1, :]
+        cache, x = prefill_block(
+            params, cfg, tok_blk, cache, blk_idx * N, is_dense=is_dense,
+            lengths=lengths, shards=shards, k_tiles=k_tiles)
+        return cache, x[:, -1, :]
 
     cache, lasts = jax.lax.scan(block_step, cache, (jnp.arange(nb), blocks))
     x_last = D.apply_norm(cfg, params["ln_f"], lasts[-1])
@@ -247,29 +274,45 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, position,
-                shards: int = 1, window=None):
+                shards: int = 1, window=None, active=None):
+    """position: scalar int32 OR [B] int32 (ragged per-sequence decode);
+    active: optional [B] bool mask for the ragged path (see
+    repro.models.dense.decode_step)."""
     ff = cfg.ff
     B = token.shape[0]
+    ragged = jnp.ndim(position) == 1
     x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
-    positions = jnp.full((B, 1), position)
+    positions = (position[:, None] if ragged
+                 else jnp.full((B, 1), position))
     k_tiles = shared_k_tiles(cfg, shards) if ff.apply_to_decode else 0
+    # inactive slots must not occupy routed-expert capacity: a live
+    # request's routing would otherwise depend on dead slot contents
+    token_mask = None if active is None else active[:, None]
 
     def layer_body(x, layer_in):
         lp, kc, vc = layer_in
         xn = D.apply_norm(cfg, lp["ln1"], x)
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
-        if window:
+        if ragged:
+            kc, vc = A.write_kv_tok(kc, vc, k_new, v_new, position,
+                                    active=active)
+            h = A.attend_decode_ragged(lp["attn"], xn, kc, vc, position,
+                                       window=window,
+                                       rope_theta=cfg.rope_theta)
+        elif window:
             kc, vc = A.write_kv_ring(kc, vc, k_new, v_new, position, window)
+            h = A.attend_decode(lp["attn"], xn, kc, vc, position,
+                                window=window, rope_theta=cfg.rope_theta)
         else:
             kc, vc = A.write_kv_block(kc, vc, k_new, v_new, position)
-        h = A.attend_decode(lp["attn"], xn, kc, vc, position, window=window,
-                            rope_theta=cfg.rope_theta)
+            h = A.attend_decode(lp["attn"], xn, kc, vc, position,
+                                window=window, rope_theta=cfg.rope_theta)
         x = x + h
         xn2 = D.apply_norm(cfg, lp["ln2"], x)
         mode = "block" if k_tiles else "dense"
         y, _ = moe_block(lp["moe"], cfg, xn2, mode=mode, k_tiles=k_tiles,
-                         shards=shards)
+                         shards=shards, token_mask=token_mask)
         return x + y, (kc, vc)
 
     x, (ks, vs) = jax.lax.scan(

@@ -227,24 +227,38 @@ def write_kv_block(k_cache, v_cache, k_new, v_new, pos0):
     return k_cache, v_cache
 
 
-def write_kv_tok(k_cache, v_cache, k_new, v_new, positions):
-    """Per-sequence single-token write (ragged decode). positions: [B]."""
+def write_kv_tok(k_cache, v_cache, k_new, v_new, positions, active=None):
+    """Per-sequence single-token write (ragged decode). positions: [B].
+    active: optional [B] bool — inactive rows keep their cache unchanged
+    (serving slot pool: freed/prefilling slots ride along in the fixed
+    decode batch without corrupting their KV)."""
     B = k_cache.shape[0]
     bidx = jnp.arange(B)
-    k_cache = k_cache.at[bidx, positions].set(k_new[:, 0].astype(k_cache.dtype))
-    v_cache = v_cache.at[bidx, positions].set(v_new[:, 0].astype(v_cache.dtype))
+    k_w = k_new[:, 0].astype(k_cache.dtype)
+    v_w = v_new[:, 0].astype(v_cache.dtype)
+    if active is not None:
+        sel = active[:, None, None]
+        k_w = jnp.where(sel, k_w, k_cache[bidx, positions])
+        v_w = jnp.where(sel, v_w, v_cache[bidx, positions])
+    k_cache = k_cache.at[bidx, positions].set(k_w)
+    v_cache = v_cache.at[bidx, positions].set(v_w)
     return k_cache, v_cache
 
 
 def attend_decode_ragged(params, x_tok, k_cache, v_cache, positions, *,
-                         rope_theta=10000.0, use_rope=True):
+                         window=None, rope_theta=10000.0, use_rope=True):
     """Per-sequence decode positions [B]; cache row b valid through
-    positions[b] (inclusive)."""
+    positions[b] (inclusive). window: optional sliding-window size —
+    unlike the ring-buffer scalar path, the cache here is full-length
+    (absolute positions), so the window is a pure attention mask."""
     S = k_cache.shape[1]
     theta = rope_theta if use_rope else None
     q = project_q(params, x_tok, positions[:, None], theta)
     kj = jnp.arange(S)[None, :]
-    mask = (kj <= positions[:, None])[:, None, None, None, :]
+    valid = kj <= positions[:, None]
+    if window:
+        valid = valid & (kj > positions[:, None] - window)
+    mask = valid[:, None, None, None, :]
     o = dot_attention(q, k_cache, v_cache, mask)
     return output_proj(params, o)
 

@@ -1,0 +1,24 @@
+"""Serving stack: continuous-batching runtime over FastForward models.
+
+Layering (see ROADMAP.md "Serving architecture"):
+
+  engine.Engine                 user-facing API (generate + scheduler())
+    scheduler.ContinuousBatchingScheduler
+                                admit / chunked prefill / batched decode
+      cache_pool.KVSlotPool     slot reuse, free list, per-slot lengths
+      runtime.ModelRuntime      jitted prefill_block / decode_step per
+                                model family (dense, MoE)
+"""
+from repro.serving.cache_pool import KVSlotPool
+from repro.serving.engine import Engine, GenerationResult, StaticEngine
+from repro.serving.runtime import (DenseRuntime, ModelRuntime, MoeRuntime,
+                                   make_runtime)
+from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
+                                     RequestOutput, drive_stream)
+
+__all__ = [
+    "ContinuousBatchingScheduler", "DenseRuntime", "Engine",
+    "GenerationResult", "KVSlotPool", "ModelRuntime", "MoeRuntime",
+    "Request", "RequestOutput", "StaticEngine", "drive_stream",
+    "make_runtime",
+]

@@ -1,0 +1,78 @@
+"""Slot-based KV cache pool with free-list reuse.
+
+One fixed-capacity device allocation ([n_layers, n_slots, cache_len,
+n_kv_heads, head_dim] per K/V) serves a churning request set: a request
+is admitted into a free slot, its prefill blocks and decode tokens write
+only that slot's rows, and on completion the slot returns to the free
+list without touching device memory — stale KV past a row's live length
+is never attended (ragged masks) and gets overwritten by the next
+occupant's prefill. Because the buffer shapes never change, the jitted
+decode step compiled for the pool serves every future request mix with
+zero recompilation.
+
+Host-side metadata (free list, per-slot lengths, reuse stats) lives in
+plain Python/numpy; only the KV pytree is on device.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+class KVSlotPool:
+    """Fixed-capacity pool of per-request KV cache slots."""
+
+    def __init__(self, cache, n_slots: int, cache_len: int):
+        self.cache = cache                # device pytree, slot axis = 1
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self._free = deque(range(n_slots))
+        # tokens currently materialized in each slot (prompt + generated)
+        self.lengths = np.zeros(n_slots, np.int64)
+        # stats (exercised by tests: reuse after completion)
+        self.total_acquires = 0
+        self.total_releases = 0
+        self.max_in_use = 0
+
+    @classmethod
+    def create(cls, runtime, n_slots: int, cache_len: int) -> "KVSlotPool":
+        return cls(runtime.init_cache(n_slots, cache_len), n_slots,
+                   cache_len)
+
+    # ------------------------------------------------------------ slots
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_in_use(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        """Claim a free slot (FIFO reuse order), or None when full."""
+        if not self._free:
+            return None
+        slot = self._free.popleft()
+        self.lengths[slot] = 0
+        self.total_acquires += 1
+        self.max_in_use = max(self.max_in_use, self.n_in_use)
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Return a slot to the free list. The device KV rows are left
+        as-is; the next occupant's prefill overwrites them."""
+        if slot in self._free:
+            raise ValueError(f"slot {slot} is already free")
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+        self.lengths[slot] = 0
+        self._free.append(slot)
+        self.total_releases += 1
+
+    def fits(self, n_tokens: int) -> bool:
+        """Whether a request needing n_tokens cache positions can ever
+        be served by this pool."""
+        return n_tokens <= self.cache_len

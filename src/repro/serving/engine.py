@@ -1,19 +1,21 @@
-"""Serving engine: blockwise FastForward prefill + batched decode.
+"""Serving engines: continuous batching (default) + legacy static batch.
 
-The request path follows the paper's deployment story:
-  1. requests are batched and right-padded to a multiple of the
-     128-token block size;
-  2. the prompt is processed block-by-block with predictive FFN sparsity
-     (dense first/last blocks, expert predictor, compensator);
-  3. generation proceeds token-by-token, reusing the same predictor /
-     compensator (paper Table 3), with ragged per-sequence positions.
+`Engine` is the continuous-batching engine built on the ModelRuntime /
+KVSlotPool / ContinuousBatchingScheduler stack (see those modules for
+the architecture). Its `generate()` keeps the original static-batch
+signature as a thin compatibility wrapper: submit every prompt at once,
+run the scheduler to drain, reassemble a GenerationResult.
+
+`StaticEngine` is the original single-shot engine — one right-padded
+batch, full-batch blockwise prefill, lockstep Python decode loop. It is
+kept as the baseline the continuous engine is benchmarked against
+(benchmarks/continuous_batching.py) and bit-compared with in tests.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 import jax
@@ -21,6 +23,8 @@ import jax.numpy as jnp
 
 from repro.models.base import ModelConfig
 from repro.models.registry import get_model
+from repro.serving.runtime import make_runtime
+from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 
 
 @dataclasses.dataclass
@@ -33,20 +37,78 @@ class GenerationResult:
 
 
 class Engine:
-    """Single-host serving engine (dense-family models).
+    """Continuous-batching serving engine (dense family + MoE).
 
-    greedy or temperature sampling; prompt batches are right-padded to
-    the block size with per-sequence length masking.
+    generate() is the backward-compatible static-style entry point;
+    streaming workloads should drive a ContinuousBatchingScheduler
+    directly (see launch/serve.py --stream).
     """
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 2048,
+                 n_slots: Optional[int] = None):
+        if cfg.arch not in ("dense", "vlm", "moe"):
+            raise ValueError("Engine drives dense-family and MoE models; "
+                             "use the model modules directly for other "
+                             "archs")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.n_slots = n_slots
+        self.runtime = make_runtime(cfg, params)
+
+    def scheduler(self, n_slots: int, cache_len: int, seed: int = 0
+                  ) -> ContinuousBatchingScheduler:
+        return ContinuousBatchingScheduler(
+            self.runtime, n_slots=n_slots, cache_len=cache_len, seed=seed)
+
+    def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
+                 temperature: float = 0.0, seed: int = 0
+                 ) -> GenerationResult:
+        N = self.runtime.block_size
+        B = len(prompts)
+        lens = np.array([len(p) for p in prompts], np.int64)
+        if max_new < 1:      # legacy API tolerated max_new=0: no work
+            return GenerationResult(
+                tokens=np.zeros((B, 0), np.int32), prefill_seconds=0.0,
+                decode_seconds=0.0, prompt_tokens=int(lens.sum()),
+                generated_tokens=0)
+        cache_len = int(-(-lens.max() // N) * N) + max_new
+        n_slots = self.n_slots or B
+        sched = self.scheduler(n_slots, cache_len, seed=seed)
+
+        t0 = time.perf_counter()
+        for rid, p in enumerate(prompts):
+            sched.submit(Request(rid=rid, prompt=list(p), max_new=max_new,
+                                 temperature=temperature, arrival_time=t0))
+        outs = sched.run()
+        t2 = time.perf_counter()
+
+        out = np.zeros((B, max_new), np.int32)
+        for rid in range(B):
+            toks = outs[rid].tokens
+            out[rid, :len(toks)] = toks
+        last_ttft = max(o.ttft_seconds for o in outs.values())
+        return GenerationResult(
+            tokens=out, prefill_seconds=last_ttft,
+            decode_seconds=(t2 - t0) - last_ttft,
+            prompt_tokens=int(lens.sum()),
+            generated_tokens=int(sum(len(o.tokens) for o in outs.values())))
+
+
+class StaticEngine:
+    """Legacy single-shot engine (dense-family models): one right-padded
+    batch through full-batch blockwise prefill, then a lockstep decode
+    loop. No mid-flight admission — kept as the continuous-batching
+    baseline."""
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 2048):
         if cfg.arch not in ("dense", "vlm"):
-            raise ValueError("Engine drives dense-family models; use the "
-                             "model modules directly for other archs")
+            raise ValueError("StaticEngine drives dense-family models")
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
         self.max_len = max_len
+        self.runtime = make_runtime(cfg, params)
         # cfg is a static python dataclass -> close over it, don't trace it
         self._prefill = jax.jit(
             lambda params, batch, cache, lengths: self.model.prefill(
@@ -54,37 +116,38 @@ class Engine:
                 collect_hidden=True))
         self._decode = jax.jit(
             lambda params, token, cache, position: self.model.decode_step(
-                params, cfg, token, cache, position))
-        self._logits_at = jax.jit(self._logits_at_impl)
-
-    def _logits_at_impl(self, hidden, lengths):
-        from repro.models.dense import apply_norm
-        from repro.nn import layers as L
-        idx = jnp.clip(lengths - 1, 0, hidden.shape[1] - 1)
-        h = jnp.take_along_axis(
-            hidden, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
-        h = apply_norm(self.cfg, self.params["ln_f"], h)
-        return L.unembed(self.params["lm_head"], h)
+                params, cfg, token, cache, position,
+                window=cfg.sliding_window))
 
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
-                 temperature: float = 0.0, seed: int = 0
-                 ) -> GenerationResult:
+                 temperature: float = 0.0, seed: int = 0,
+                 pad_to: Optional[int] = None,
+                 cache_len: Optional[int] = None) -> GenerationResult:
+        """pad_to / cache_len pin the padded prompt length and KV length
+        so repeated calls with varying batches hit one jit executable
+        (benchmarks: compile-stable static baseline)."""
         cfg = self.cfg
         N = cfg.ff.block_size
         B = len(prompts)
         lens = np.array([len(p) for p in prompts], np.int32)
-        L_pad = int(-(-lens.max() // N) * N)
+        L_pad = pad_to or int(-(-lens.max() // N) * N)
+        if L_pad % N or L_pad < lens.max():
+            raise ValueError(f"pad_to={L_pad} must be a block multiple "
+                             f">= the longest prompt ({lens.max()})")
         toks = np.zeros((B, L_pad), np.int32)
         for i, p in enumerate(prompts):
             toks[i, :len(p)] = np.asarray(p, np.int32)
-        cache_len = L_pad + max_new
+        if cache_len is not None and cache_len < L_pad + max_new:
+            raise ValueError(f"cache_len={cache_len} cannot hold "
+                             f"{L_pad} prompt + {max_new} new tokens")
+        cache_len = cache_len or (L_pad + max_new)
         cache = self.model.init_cache(cfg, B, cache_len)
 
         t0 = time.perf_counter()
         cache, _, hidden = self._prefill(
             self.params, {"tokens": jnp.asarray(toks)}, cache,
             jnp.asarray(lens))
-        logits = self._logits_at(hidden, jnp.asarray(lens))
+        logits = self.runtime.logits_at(hidden, lens)
         jax.block_until_ready(logits)
         t1 = time.perf_counter()
 

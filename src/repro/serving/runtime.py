@@ -1,0 +1,220 @@
+"""ModelRuntime: the uniform jitted interface the serving stack drives.
+
+The continuous-batching scheduler (repro.serving.scheduler) never
+touches model internals — it sees four operations:
+
+  init_cache(n_slots, cache_len)  allocate the pooled KV buffers
+  prefill_block(...)              one 128-token FastForward block of ONE
+                                  request, written into its slot
+  decode_step(...)                one token for ALL slots (active mask)
+  logits_at(hidden, lengths)      read logits at each row's last prompt
+                                  token (static-batch path)
+
+Every operation is jitted once with fixed shapes — `prefill_block`
+traces over (slot, pos0, is_dense, length) as *values*, so a churning
+request set never triggers recompilation: the same two executables
+serve the whole stream (asserted via `compile_counts`).
+
+Adapters: `DenseRuntime` (dense family incl. VLM text stack) and
+`MoeRuntime`. Both rely on the per-offset single-block prefill step the
+model modules expose (models/dense.py, models/moe.py: `prefill_block`).
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.compat import jit_cache_size
+from repro.models.base import ModelConfig
+from repro.models.registry import get_model
+from repro.nn import layers as L
+
+
+@runtime_checkable
+class ModelRuntime(Protocol):
+    """What the scheduler/engine require of a servable model."""
+
+    cfg: ModelConfig
+    block_size: int
+
+    def init_cache(self, n_slots: int, cache_len: int): ...
+
+    def prefill_block(self, cache, tokens, slot, pos0, is_dense, length):
+        """Process one block-size chunk of one request.
+
+        cache: pooled KV pytree (leaves [L, n_slots, S, Kv, dh]);
+        tokens: [1, N] int32 (zero-padded past `length`); slot/pos0/
+        length: int32 scalars; is_dense: bool scalar (dense first/last
+        block). Returns (cache, logits [V]) — logits are read at token
+        `length-1-pos0` within the block and only meaningful on the
+        request's final block."""
+        ...
+
+    def decode_step(self, cache, tokens, positions, active):
+        """One generation step for the whole slot pool. tokens/positions:
+        [n_slots] int32; active: [n_slots] bool (inactive rows neither
+        write KV nor produce meaningful logits). Returns
+        (logits [n_slots, V], greedy [n_slots] int32, cache)."""
+        ...
+
+    def logits_at(self, hidden, lengths):
+        """hidden: [B, T, D] pre-final-norm; lengths: [B]. -> [B, V]."""
+        ...
+
+    def compile_counts(self) -> dict: ...
+
+
+class _JittedRuntime:
+    """Shared jit plumbing for model modules exposing the
+    prefill_block/decode_step/init_cache triple."""
+
+    def __init__(self, cfg: ModelConfig, params, shards: int = 1):
+        self.cfg = cfg
+        self.params = params
+        self.model = get_model(cfg)
+        self.shards = shards
+        self.block_size = cfg.ff.block_size
+        # the scheduler always replaces its cache reference with the
+        # returned one, so the pooled KV buffers are donated: on
+        # accelerators the update is in-place instead of a full-pool
+        # copy per tick (CPU ignores donation)
+        self._prefill_block = jax.jit(self._prefill_block_impl,
+                                      donate_argnums=(1,))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._logits_at = jax.jit(self._logits_at_impl)
+
+    # -- model hooks (overridable per family) -------------------------
+
+    def _model_prefill_block(self, params, tokens, sub_cache, pos0,
+                             is_dense, lengths):
+        return self.model.prefill_block(
+            params, self.cfg, tokens, sub_cache, pos0, is_dense=is_dense,
+            lengths=lengths, shards=self.shards)
+
+    def _model_decode_step(self, params, tokens, cache, positions, active):
+        # slot caches hold absolute positions, so sliding-window models
+        # get the window as an attention mask in the ragged decode path
+        return self.model.decode_step(
+            params, self.cfg, tokens, cache, positions,
+            shards=self.shards, window=self.cfg.sliding_window,
+            active=active)
+
+    # -- jitted impls --------------------------------------------------
+
+    def _prefill_block_impl(self, params, cache, tokens, slot, pos0,
+                            is_dense, length):
+        kc = jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1)
+        sub, hidden = self._model_prefill_block(
+            params, tokens, {"k": kc, "v": vc}, pos0, is_dense,
+            jnp.reshape(length, (1,)))
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], sub["k"], slot, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], sub["v"], slot, axis=1),
+        }
+        # logits at the request's last prompt token — only meaningful
+        # when this block is the final one (length-1 falls inside it)
+        idx = jnp.clip(length - 1 - pos0, 0, hidden.shape[1] - 1)
+        h = self._final_norm(params, hidden[0, idx])
+        return cache, L.unembed(params["lm_head"], h)
+
+    def _decode_impl(self, params, cache, tokens, positions, active):
+        logits, cache = self._model_decode_step(
+            params, tokens, cache, positions, active)
+        # device-side greedy argmax: the scheduler's hot loop transfers
+        # [n_slots] token ids, not [n_slots, V] logits (logits are only
+        # pulled to host when a request samples with temperature > 0)
+        return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def _logits_at_impl(self, params, hidden, lengths):
+        idx = jnp.clip(lengths - 1, 0, hidden.shape[1] - 1)
+        h = jnp.take_along_axis(
+            hidden, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        h = self._final_norm(params, h)
+        return L.unembed(params["lm_head"], h)
+
+    def _final_norm(self, params, h):
+        from repro.models.dense import apply_norm
+        return apply_norm(self.cfg, params["ln_f"], h)
+
+    # -- public API ----------------------------------------------------
+
+    def init_cache(self, n_slots: int, cache_len: int):
+        return self.model.init_cache(self.cfg, n_slots, cache_len)
+
+    def prefill_block(self, cache, tokens, slot, pos0, is_dense, length):
+        return self._prefill_block(
+            self.params, cache, jnp.asarray(tokens, jnp.int32),
+            np.int32(slot), np.int32(pos0), np.bool_(is_dense),
+            np.int32(length))
+
+    def decode_step(self, cache, tokens, positions, active):
+        return self._decode(
+            self.params, cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(positions, jnp.int32),
+            jnp.asarray(active, bool))
+
+    def logits_at(self, hidden, lengths):
+        return self._logits_at(self.params, hidden,
+                               jnp.asarray(lengths, jnp.int32))
+
+    def compile_counts(self) -> dict:
+        """Distinct compilations per jitted entry point. After warmup
+        (one prefill block + one decode step) these must not grow —
+        the serving loop's zero-recompilation invariant."""
+        return {
+            "prefill_block": jit_cache_size(self._prefill_block),
+            "decode_step": jit_cache_size(self._decode),
+            "logits_at": jit_cache_size(self._logits_at),
+        }
+
+
+class DenseRuntime(_JittedRuntime):
+    """Dense llama-family models (and the VLM text stack)."""
+
+    ARCHS = ("dense", "vlm")
+
+    def __init__(self, cfg: ModelConfig, params, shards: int = 1,
+                 mesh=None):
+        if cfg.arch not in self.ARCHS:
+            raise ValueError(f"DenseRuntime cannot drive arch={cfg.arch}")
+        self.mesh = mesh
+        super().__init__(cfg, params, shards)
+
+    def _model_prefill_block(self, params, tokens, sub_cache, pos0,
+                             is_dense, lengths):
+        from repro.models import dense
+        return dense.prefill_block(
+            params, self.cfg, tokens, sub_cache, pos0, is_dense=is_dense,
+            lengths=lengths, shards=self.shards, mesh=self.mesh)
+
+
+class MoeRuntime(_JittedRuntime):
+    """Mixture-of-experts models (qwen2-moe, kimi-k2). Routed-expert
+    capacity is computed per dispatch group, so the fixed [n_slots, 1]
+    decode batch and [1, N] prefill block shapes also pin expert-buffer
+    shapes — no recompilation as requests churn."""
+
+    ARCHS = ("moe",)
+
+    def __init__(self, cfg: ModelConfig, params, shards: int = 1):
+        if cfg.arch not in self.ARCHS:
+            raise ValueError(f"MoeRuntime cannot drive arch={cfg.arch}")
+        super().__init__(cfg, params, shards)
+
+
+def make_runtime(cfg: ModelConfig, params, shards: int = 1,
+                 mesh=None) -> ModelRuntime:
+    """Dispatch cfg.arch -> runtime adapter."""
+    if cfg.arch in DenseRuntime.ARCHS:
+        return DenseRuntime(cfg, params, shards=shards, mesh=mesh)
+    if cfg.arch in MoeRuntime.ARCHS:
+        return MoeRuntime(cfg, params, shards=shards)
+    raise ValueError(
+        f"no serving runtime for arch={cfg.arch}; supported: "
+        f"{DenseRuntime.ARCHS + MoeRuntime.ARCHS}")

@@ -1,0 +1,284 @@
+"""Continuous-batching scheduler: chunked FastForward prefill
+interleaved with batched decode over a KV slot pool.
+
+The paper's 128-token prefill block is exactly one schedulable unit of
+work, so each scheduler tick does
+
+  1. ADMIT   — move queued requests into free KV slots (mid-flight:
+               a slot freed by a finishing request is re-filled on the
+               very next tick, while other requests keep decoding);
+  2. PREFILL — process ONE FastForward block of the oldest request
+               still prefilling (dense-first/last semantics preserved
+               *per sequence*, unlike the static right-padded batch
+               where the padded batch's last block is dense instead);
+  3. DECODE  — one batched decode step over every slot in the decode
+               phase (fixed batch = n_slots, active-slot mask).
+
+All device work goes through the two jitted ModelRuntime entry points,
+so after the first tick of each kind there is zero recompilation —
+`ModelRuntime.compile_counts()` is the enforcement hook.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.cache_pool import KVSlotPool
+from repro.serving.runtime import ModelRuntime
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    arrival_time: Optional[float] = None   # None -> stamped at submit()
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+    ttft_seconds: float          # arrival -> first token
+    finish_seconds: float        # arrival -> last token
+
+
+@dataclasses.dataclass
+class _ActiveState:
+    req: Request
+    slot: int
+    seq: int                     # admission order (FIFO prefill)
+    n_blocks: int
+    blocks_done: int = 0
+    phase: str = "prefill"       # prefill | decode
+    out: List[int] = dataclasses.field(default_factory=list)
+    next_token: int = 0          # last sampled token (decode input)
+    pos: int = 0                 # next KV write position
+    first_token_time: Optional[float] = None
+
+
+class ContinuousBatchingScheduler:
+    """Admits requests from a queue into KV slots mid-flight and
+    interleaves chunked blockwise prefill with batched decode."""
+
+    def __init__(self, runtime: ModelRuntime, n_slots: int = 8,
+                 cache_len: int = 2048, seed: int = 0,
+                 clock=time.perf_counter):
+        self.runtime = runtime
+        self.pool = KVSlotPool.create(runtime, n_slots, cache_len)
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.clock = clock
+        self._rng = np.random.default_rng(seed)
+        self.queue: deque[Request] = deque()
+        self.active: Dict[int, _ActiveState] = {}   # slot -> state
+        self.finished: Dict[int, RequestOutput] = {}
+        self._admit_seq = 0
+        # tick counters (benchmarks / tests)
+        self.n_ticks = 0
+        self.n_prefill_blocks = 0
+        self.n_decode_steps = 0
+
+    # --------------------------------------------------------- submit
+
+    def submit(self, req: Request) -> None:
+        need = max(self._n_blocks(req) * self.runtime.block_size,
+                   len(req.prompt) + req.max_new)
+        if not self.pool.fits(need):
+            raise ValueError(
+                f"request {req.rid} needs {need} cache positions but the "
+                f"pool's cache_len is {self.cache_len}")
+        if not req.prompt:
+            raise ValueError(f"request {req.rid} has an empty prompt")
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1 "
+                             f"(the first token is sampled from prefill "
+                             f"logits and always emitted)")
+        if req.arrival_time is None:
+            req.arrival_time = self.clock()
+        self.queue.append(req)
+
+    def _n_blocks(self, req: Request) -> int:
+        N = self.runtime.block_size
+        return -(-len(req.prompt) // N)
+
+    # ----------------------------------------------------------- tick
+
+    @property
+    def drained(self) -> bool:
+        return not self.queue and not self.active
+
+    def tick(self) -> int:
+        """One scheduling step; returns the number of tokens emitted."""
+        self.n_ticks += 1
+        self._admit()
+        emitted = self._prefill_one_block()
+        emitted += self._decode_all()
+        return emitted
+
+    def run(self, max_ticks: int = 1_000_000) -> Dict[int, RequestOutput]:
+        """Drive ticks until every submitted request has finished."""
+        for _ in range(max_ticks):
+            if self.drained:
+                break
+            self.tick()
+        if not self.drained:
+            raise RuntimeError(f"scheduler not drained after {max_ticks} "
+                               f"ticks")
+        return self.finished
+
+    def warmup(self) -> dict:
+        """Compile the prefill-block and decode executables by running
+        one throwaway request through this scheduler's own pool (no
+        second KV allocation), then reset counters/stats. Returns the
+        post-warmup compile counts."""
+        if self.active or self.queue or self.finished:
+            raise RuntimeError("warmup() must run before real traffic")
+        N = self.runtime.block_size
+        self.submit(Request(rid=-1, prompt=[1] * min(N, self.cache_len - 2),
+                            max_new=2))
+        self.run()
+        self.finished.clear()
+        self._admit_seq = 0
+        self.n_ticks = self.n_prefill_blocks = self.n_decode_steps = 0
+        self.pool.total_acquires = self.pool.total_releases = 0
+        self.pool.max_in_use = 0
+        return self.runtime.compile_counts()
+
+    # ------------------------------------------------------- internals
+
+    def _admit(self) -> None:
+        while self.queue:
+            slot = self.pool.acquire()
+            if slot is None:
+                return
+            req = self.queue.popleft()
+            self.active[slot] = _ActiveState(
+                req=req, slot=slot, seq=self._admit_seq,
+                n_blocks=self._n_blocks(req))
+            self._admit_seq += 1
+
+    def _prefill_one_block(self) -> int:
+        states = [s for s in self.active.values() if s.phase == "prefill"]
+        if not states:
+            return 0
+        st = min(states, key=lambda s: s.seq)           # FIFO
+        N = self.runtime.block_size
+        ff = self.runtime.cfg.ff
+        b = st.blocks_done
+        chunk = st.req.prompt[b * N:(b + 1) * N]
+        tok_blk = np.zeros((1, N), np.int32)
+        tok_blk[0, :len(chunk)] = chunk
+        is_dense = ((ff.dense_first_block and b == 0) or
+                    (ff.dense_last_block and b == st.n_blocks - 1))
+        self.pool.cache, logits = self.runtime.prefill_block(
+            self.pool.cache, tok_blk, st.slot, b * N, is_dense,
+            len(st.req.prompt))
+        st.blocks_done += 1
+        self.n_prefill_blocks += 1
+        self.pool.lengths[st.slot] = min(st.blocks_done * N,
+                                         len(st.req.prompt))
+        if st.blocks_done < st.n_blocks:
+            return 0
+        # final block -> first token (TTFT)
+        tok = self._sample(np.asarray(logits), st.req)
+        st.first_token_time = self.clock()
+        st.out.append(tok)
+        st.next_token = tok
+        st.pos = len(st.req.prompt)
+        st.phase = "decode"
+        self._maybe_finish(st)
+        return 1
+
+    def _decode_all(self) -> int:
+        decoding = [s for s in self.active.values() if s.phase == "decode"]
+        if not decoding:
+            return 0
+        tokens = np.zeros(self.n_slots, np.int32)
+        positions = np.zeros(self.n_slots, np.int32)
+        active = np.zeros(self.n_slots, bool)
+        for st in decoding:
+            tokens[st.slot] = st.next_token
+            positions[st.slot] = st.pos
+            active[st.slot] = True
+        logits, greedy, self.pool.cache = self.runtime.decode_step(
+            self.pool.cache, tokens, positions, active)
+        self.n_decode_steps += 1
+        greedy = np.asarray(greedy)
+        # logits cross to host only if someone actually samples
+        logits_np = (np.asarray(logits)
+                     if any(s.req.temperature > 0 for s in decoding)
+                     else None)
+        emitted = 0
+        for st in decoding:
+            tok = (int(greedy[st.slot]) if st.req.temperature <= 0
+                   else self._sample(logits_np[st.slot], st.req))
+            st.out.append(tok)
+            st.next_token = tok
+            st.pos += 1
+            self.pool.lengths[st.slot] = st.pos
+            emitted += 1
+            self._maybe_finish(st)
+        return emitted
+
+    def _maybe_finish(self, st: _ActiveState) -> None:
+        done = (len(st.out) >= st.req.max_new or
+                (st.req.eos_id is not None and
+                 st.out and st.out[-1] == st.req.eos_id))
+        if not done:
+            return
+        now = self.clock()
+        self.finished[st.req.rid] = RequestOutput(
+            rid=st.req.rid, tokens=list(st.out),
+            prompt_len=len(st.req.prompt),
+            ttft_seconds=st.first_token_time - st.req.arrival_time,
+            finish_seconds=now - st.req.arrival_time)
+        del self.active[st.slot]
+        self.pool.release(st.slot)
+
+    def _sample(self, logits: np.ndarray, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(np.argmax(logits))
+        # Gumbel-max with the scheduler's host RNG (per-stream seed)
+        g = self._rng.gumbel(size=logits.shape)
+        return int(np.argmax(logits.astype(np.float64)
+                             / req.temperature + g))
+
+
+def drive_stream(sched: ContinuousBatchingScheduler,
+                 requests: List[Request]) -> float:
+    """Drive a timed request stream to completion.
+
+    Each request's `arrival_time` is an OFFSET in seconds from stream
+    start; requests are submitted as their arrival time passes (the
+    scheduler keeps ticking — mid-flight admission), and the loop
+    sleeps instead of spinning while the pool is idle between
+    arrivals. The caller's Request objects are never mutated (absolute
+    deadlines are stamped onto copies), so the same list can drive
+    several schedulers for A/B runs. Returns the wall-clock seconds
+    for the whole stream. Used by launch/serve.py --stream and the
+    continuous-batching benchmark so both exercise the identical
+    serving loop."""
+    clock = sched.clock
+    t0 = clock()
+    # ascending stable sort + popleft keeps FIFO order for tied arrivals
+    pending = deque(
+        dataclasses.replace(r, prompt=list(r.prompt),
+                            arrival_time=t0 + (r.arrival_time or 0.0))
+        for r in sorted(requests, key=lambda r: r.arrival_time or 0.0))
+    while pending or not sched.drained:
+        now = clock()
+        while pending and pending[0].arrival_time <= now:
+            sched.submit(pending.popleft())
+        if sched.drained:
+            time.sleep(max(0.0, pending[0].arrival_time - clock()))
+            continue
+        sched.tick()
+    return clock() - t0

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import cost_analysis
 from repro.kernels.sparse_ffn.kernel import sparse_ffn, dense_ffn
 from repro.kernels.sparse_ffn.ref import sparse_ffn_ref, dense_ffn_ref
 from repro.kernels.sparse_ffn.ops import sparse_ffn_op
@@ -74,8 +75,8 @@ def test_kernel_flop_scaling():
     ids8 = jnp.arange(8, dtype=jnp.int32)
     # interpret-mode pallas doesn't expose cost; compare against the
     # analytical count through the ref path lowering instead.
-    c2 = jax.jit(lambda *a: sparse_ffn_ref(*a, 128)).lower(
-        x, wg, wu, wd, ids2).compile().cost_analysis()
-    c8 = jax.jit(lambda *a: sparse_ffn_ref(*a, 128)).lower(
-        x, wg, wu, wd, ids8).compile().cost_analysis()
+    c2 = cost_analysis(jax.jit(lambda *a: sparse_ffn_ref(*a, 128)).lower(
+        x, wg, wu, wd, ids2).compile())
+    c8 = cost_analysis(jax.jit(lambda *a: sparse_ffn_ref(*a, 128)).lower(
+        x, wg, wu, wd, ids8).compile())
     assert c8["flops"] > 3.5 * c2["flops"]

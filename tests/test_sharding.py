@@ -76,6 +76,7 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
     from repro.distributed.sharding import param_shardings
     from repro.launch.mesh import make_host_mesh
     from repro.training.train import make_loss_fn
+    from repro import compat
 
     cfg = get_config("{arch}", reduced=True)
     mesh = make_host_mesh(2, 4)
@@ -88,11 +89,11 @@ SUBPROCESS_SCRIPT = textwrap.dedent("""
         "tokens": jax.ShapeDtypeStruct((4, 64), jnp.int32),
         "labels": jax.ShapeDtypeStruct((4, 64), jnp.int32),
     }}
-    with jax.sharding.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         lowered = jax.jit(lambda p, b: loss_fn(p, b)[0]).lower(
             aparams, batch)
         compiled = lowered.compile()
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     print(json.dumps({{"flops": ca["flops"],
                        "devices": len(jax.devices())}}))
 """)
