@@ -6,6 +6,7 @@ accuracy-proxy benchmark (Tables 2/4/5/6/7 analogs) reads from here.
 """
 from __future__ import annotations
 
+import json
 import os
 
 import numpy as np
@@ -25,6 +26,27 @@ from repro.data.synthetic import batches
 
 CACHE = os.path.join(os.path.dirname(__file__), "..", "results",
                      "bench_cache")
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "BENCH_prefill.json")
+
+
+def write_bench_json(section: str, payload: dict, path: str = None) -> str:
+    """Merge `payload` under `section` of results/BENCH_prefill.json —
+    the machine-readable perf artifact tracked PR-over-PR (checked into
+    results/ and uploaded by CI). Each benchmark owns one section, so
+    partial runs never clobber the others'."""
+    path = path or BENCH_JSON
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data[section] = payload
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 # Low-entropy corpus + FFN-dominant geometry: the model trains to a
 # meaningful perplexity in ~400 CPU steps and the FFN is ~6x the

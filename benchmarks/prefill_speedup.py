@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks.common import write_bench_json
 from benchmarks.flops_crossover import GEOMETRIES, layer_flops
 
 
@@ -75,6 +76,17 @@ def run(csv=True):
     if csv:
         for r in rows:
             print(",".join(str(x) for x in r))
+    # machine-readable section: compute-bound speedup vs dense (the
+    # paper's Fig 6-7 metric) per geometry at 50% sparsity
+    write_bench_json("analytical_speedup_vs_dense", {
+        "e2e_peak_s50": {name: round(peak[(name, 0.5)], 3)
+                         for name, _ in GEOMETRIES.items()},
+        "ffn_module_s50_4k": {
+            name: round(ffn_module_speedup(d, dff, 4096, 0.5), 3)
+            for name, (d, dff, L) in GEOMETRIES.items()},
+        "note": "FLOPs(dense)/FLOPs(sparse) incl. dense first/last "
+                "blocks, predictor, compensator (paper Fig. 7)",
+    })
     # paper-claim validation: up to ~1.45x at 50% on the 8B model,
     # peaking mid-context, decaying at 32K
     p8 = peak[("llama-8b", 0.5)]

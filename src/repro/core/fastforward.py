@@ -73,11 +73,16 @@ def ff_masked_sequence(params, cfg: ModelConfig, x, keep_frac,
         force = force | (blk == nb - 1)
     mask = jnp.where(force[None, :, None], jnp.ones_like(mask), mask)
     y = S.ffn_masked(params, xb, mask[:, :, None, :], cfg.act)
-    y = _compensate(params, cfg, xb, y)
-    # compensator must not fire on dense blocks (they have zero error)
-    if cfg.ff.use_compensator and "comp" in params:
-        y_dense_blocks = S.ffn_masked(params, xb, jnp.ones_like(mask)[:, :, None, :], cfg.act)
-        y = jnp.where(force[None, :, None, None], y_dense_blocks, y)
+    # forced blocks already run with an all-ones mask (== dense FFN), so
+    # only the compensator needs per-block gating: it must not fire on
+    # dense blocks (they have zero sparsification error). Gating the
+    # compensator term — instead of re-running a full dense FFN pass
+    # over every block just to overwrite the forced ones — halves the
+    # mask-path FLOPs whenever use_compensator is on.
+    if cfg.ff.enabled and cfg.ff.use_compensator and "comp" in params:
+        comp = C.compensate(params["comp"], xb)
+        y = y + jnp.where(force[None, :, None, None],
+                          jnp.zeros_like(comp), comp)
     return y.reshape(B, T, D)
 
 
@@ -90,8 +95,13 @@ def ff_block_sparse(params, cfg: ModelConfig, x_block, k_tiles: int,
 
     k_tiles is static (jit shape). `is_dense` (traced bool) switches to
     the dense FFN via lax.cond — used for the always-dense first/last
-    blocks inside the blockwise-prefill scan.
+    blocks inside the blockwise-prefill scan. A [B] is_dense VECTOR
+    (rows from distinct requests, each at its own boundary) delegates
+    to the per-row `ff_blocks_sparse` path.
     """
+    if is_dense is not None and jnp.ndim(is_dense) == 1:
+        return ff_blocks_sparse(params, cfg, x_block, k_tiles, shards,
+                                is_dense)
     ff = cfg.ff
     scores = jax.nn.sigmoid(P.neuron_scores(params["pred"], x_block))
     ids = S.balanced_topk_tiles(scores, k_tiles, ff.tile, shards)  # [B, K]
@@ -105,6 +115,38 @@ def ff_block_sparse(params, cfg: ModelConfig, x_block, k_tiles: int,
     return jax.lax.cond(is_dense,
                         lambda x: S.ffn_dense(params, x, cfg.act),
                         sparse, x_block)
+
+
+def ff_blocks_sparse(params, cfg: ModelConfig, x_blocks, k_tiles: int,
+                     shards: int = 1, is_dense=None):
+    """Gather path for a batch of blocks from DISTINCT requests with
+    per-row dense forcing: x_blocks [P, N, D], is_dense [P] bool.
+
+    The batched-prefill twin of `ff_block_sparse`: each row selects its
+    own K tiles (batched kernel / gather path via ffn_sparse_batched),
+    and the paper's dense-first/last semantics hold PER ROW — a row
+    whose block is a sequence boundary takes the dense FFN while its
+    batchmates stay sparse. Each path runs under a `lax.cond` on
+    whether ANY row needs it, so an all-sparse steady-state batch never
+    pays dense FLOPs (and an all-dense batch skips predictor + gather).
+    The compensator fires only on sparse rows.
+    """
+    ff = cfg.ff
+
+    def sparse(x):
+        scores = jax.nn.sigmoid(P.neuron_scores(params["pred"], x))
+        ids = S.balanced_topk_tiles(scores, k_tiles, ff.tile, shards)
+        y = S.ffn_sparse_batched(params, x, ids, ff.tile, cfg.act)
+        return _compensate(params, cfg, x, y)
+
+    if is_dense is None:
+        return sparse(x_blocks)
+    zeros = lambda x: jnp.zeros(x.shape, x.dtype)
+    y_sp = jax.lax.cond(jnp.any(~is_dense), sparse, zeros, x_blocks)
+    y_dn = jax.lax.cond(jnp.any(is_dense),
+                        lambda x: S.ffn_dense(params, x, cfg.act),
+                        zeros, x_blocks)
+    return jnp.where(is_dense[:, None, None], y_dn, y_sp)
 
 
 def ff_decode_sparse(params, cfg: ModelConfig, x_tok, k_tiles: int,

@@ -78,6 +78,71 @@ def sparse_ffn(x, wg, wu, wd, tile_ids, *, tile: int = 128,
     return kernel(tile_ids, x, wg, wu, wd)
 
 
+def _sparse_ffn_batched_kernel(ids_ref, x_ref, wg_ref, wu_ref, wd_ref,
+                               o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0].astype(jnp.float32)
+    hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    hu = jax.lax.dot(x, wu_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    h = hg * jax.nn.sigmoid(hg) * hu
+    y = jax.lax.dot(h, wd_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    o_ref[0] += y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "block_n", "interpret"))
+def sparse_ffn_batched(x, wg, wu, wd, tile_ids, *, tile: int = 128,
+                       block_n: int = 128, interpret: bool = False):
+    """Batched twin of `sparse_ffn` for multi-request prefill: every
+    batch row selects its OWN K weight tiles.
+
+    x: [B, N, D]; wg/wu: [D, F]; wd: [F, D]; tile_ids: [B, K] int32
+    (global tile ids, per row). Returns [B, N, D] float32.
+
+    Grid (B, N//block_n, K): the whole [B, K] id matrix is scalar-
+    prefetched, and each grid step's BlockSpec index_map reads
+    ids[b, k] — so the W_gate/W_up/W_down slab DMAs are redirected per
+    batch row, exactly the serving layout where the scheduler packs one
+    128-token block of B distinct requests into one jitted call.
+    """
+    B, N, D = x.shape
+    F = wg.shape[1]
+    K = tile_ids.shape[1]
+    assert tile_ids.shape[0] == B
+    assert N % block_n == 0 and F % tile == 0
+
+    grid = (B, N // block_n, K)
+
+    kernel = pl.pallas_call(
+        _sparse_ffn_batched_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_n, D), lambda b, n, k, ids: (b, n, 0)),
+                pl.BlockSpec((D, tile), lambda b, n, k, ids: (0, ids[b, k])),
+                pl.BlockSpec((D, tile), lambda b, n, k, ids: (0, ids[b, k])),
+                pl.BlockSpec((tile, D), lambda b, n, k, ids: (ids[b, k], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_n, D),
+                                   lambda b, n, k, ids: (b, n, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, N, D), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    return kernel(tile_ids, x, wg, wu, wd)
+
+
 def _dense_ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
     f = pl.program_id(1)
 

@@ -30,6 +30,30 @@ def sparse_ffn_ref(x, wg, wu, wd, tile_ids, tile: int):
     return h @ d.astype(jnp.float32)
 
 
+def sparse_ffn_batched_ref(x, wg, wu, wd, tile_ids, tile: int):
+    """Batched oracle: x [B, N, D]; tile_ids [B, K] — each row selects
+    its own tiles. Returns [B, N, D] float32.
+
+    One take per weight over the whole [B, K] id matrix; the gathered
+    tiles stay in [K, tile] layout — the einsums contract over (k, t)
+    directly, no [D, K*tile] reshape copies. (Fusing wg|wu into one
+    concatenated take materializes the full weights per call — measured
+    slower; see repro.core.sparse_ffn.ffn_sparse_gather.)"""
+    D, F = wg.shape
+    n_tiles = F // tile
+    g = jnp.take(wg.reshape(D, n_tiles, tile), tile_ids,
+                 axis=1).astype(jnp.float32)              # [D, B, K, tile]
+    u = jnp.take(wu.reshape(D, n_tiles, tile), tile_ids,
+                 axis=1).astype(jnp.float32)
+    d = jnp.take(wd.reshape(n_tiles, tile, D), tile_ids,
+                 axis=0).astype(jnp.float32)              # [B, K, tile, D]
+    x32 = x.astype(jnp.float32)
+    hg = jnp.einsum("bnd,dbkt->bnkt", x32, g)
+    hu = jnp.einsum("bnd,dbkt->bnkt", x32, u)
+    h = hg * jax.nn.sigmoid(hg) * hu
+    return jnp.einsum("bnkt,bktd->bnd", h, d)
+
+
 def dense_ffn_ref(x, wg, wu, wd):
     """Full (non-sparse) gated FFN oracle, f32 accumulation."""
     x32 = x.astype(jnp.float32)

@@ -5,12 +5,20 @@ Static one-shot batch (legacy behaviour):
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --requests 4 --max-new 16
 
-Continuous-batching stream simulator (Poisson arrivals; reports TTFT
-p50/p99, tokens/sec, slot churn, and asserts zero jit recompilation
-after warmup):
+Continuous-batching stream simulator (Poisson arrivals; batched
+multi-request prefill ticks; reports TTFT p50/p99, tokens/sec, slot
+churn, and asserts zero jit recompilation after warmup):
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-      --reduced --stream --requests 16 --rate 20 --slots 4
+      --reduced --stream --requests 16 --rate 20 --slots 4 \
+      --prefill-batch 4
+
+EOS workload (--eos-id): every request stops the moment it greedily
+emits that token — mid-generation — so slots free early and admission
+churns under the batched prefill path:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --stream --requests 16 --eos-id 7
 """
 from __future__ import annotations
 
@@ -69,7 +77,8 @@ def serve_stream(cfg, params, args):
     max_blocks = -(-args.prompt_len // N)
     cache_len = max_blocks * N + max(args.max_new, 2)
     sched = ContinuousBatchingScheduler(
-        runtime, n_slots=args.slots, cache_len=cache_len, seed=args.seed)
+        runtime, n_slots=args.slots, cache_len=cache_len, seed=args.seed,
+        prefill_batch=args.prefill_batch)
 
     # warmup compiles both entry points through the scheduler's own pool
     counts0 = sched.warmup()
@@ -84,7 +93,8 @@ def serve_stream(cfg, params, args):
                             args.max_new + 1, size=args.requests)
     requests = [
         Request(rid=i, prompt=prompts[i], max_new=int(max_news[i]),
-                temperature=args.temperature, arrival_time=arrivals[i])
+                temperature=args.temperature, arrival_time=arrivals[i],
+                eos_id=args.eos_id)
         for i in range(args.requests)]
 
     wall = drive_stream(sched, requests)
@@ -107,7 +117,12 @@ def serve_stream(cfg, params, args):
     print(f"slots: {args.slots} | max in use {sched.pool.max_in_use} | "
           f"acquires {sched.pool.total_acquires} (slot reuse x{reuse})")
     print(f"ticks {sched.n_ticks} | prefill blocks "
-          f"{sched.n_prefill_blocks} | decode steps {sched.n_decode_steps}")
+          f"{sched.n_prefill_blocks} in {sched.n_prefill_ticks} prefill "
+          f"ticks (P<={sched.prefill_batch}) | decode steps "
+          f"{sched.n_decode_steps}")
+    if args.eos_id is not None:
+        print(f"eos_id={args.eos_id}: {sched.n_eos_stops} of {len(outs)} "
+              f"requests stopped early (slots freed mid-generation)")
     if check_compiles:
         print(f"no recompilation after warmup: OK {counts1}")
     else:
@@ -132,6 +147,14 @@ def main():
                    help="stream mode: mean arrival rate (req/s)")
     p.add_argument("--slots", type=int, default=4,
                    help="stream mode: KV slot pool capacity")
+    p.add_argument("--prefill-batch", type=int, default=4,
+                   help="stream mode: max requests advancing one "
+                        "prefill block per tick in one jitted call "
+                        "(1 = PR-1 single-block ticks)")
+    p.add_argument("--eos-id", type=int, default=None,
+                   help="stream mode: requests stop at this token "
+                        "mid-generation, freeing their slot early "
+                        "(EOS admission-churn workload)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
     if args.max_new < 1:

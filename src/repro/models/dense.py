@@ -180,6 +180,58 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
     return {"k": ks, "v": vs}, x
 
 
+def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
+                   is_dense=None, lengths=None, active=None,
+                   shards: int = 1, k_tiles=None, mesh=None):
+    """One N-token FastForward block of EACH of P distinct requests, at
+    per-row sequence offsets — the batched schedulable prefill unit of
+    the continuous-batching runtime (serving/runtime.py
+    `prefill_blocks`).
+
+    Unlike `prefill_block` (one request, scalar pos0), every per-row
+    quantity is a vector: tok_blks [P, N]; cache: KV pytree with leaves
+    [L, P, S, Kv, dh] (row p = request p's slot rows, gathered by the
+    runtime); pos0s [P] int32 per-row block offsets (vectorized RoPE
+    positions); is_dense [P] bool — the paper's dense first/last block
+    PER SEQUENCE (rows mix dense and sparse within one call, see
+    FF.ff_blocks_sparse); lengths [P] true prompt lengths (right-pad
+    masking of the final partial block). active: optional [P] bool —
+    accepted for hook uniformity with the MoE twin; dense rows are
+    mutually independent, so inactive padding rows just compute garbage
+    that the RUNTIME discards at scatter-back.
+    Returns (cache, hidden [P, N, D]) with hidden pre-final-norm."""
+    del active  # rows are independent in the dense family
+    ff = cfg.ff
+    if k_tiles is None:
+        k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    N = tok_blks.shape[1]
+    x = L.embed(params["embed"], tok_blks).astype(cfg.dtype)
+
+    def layer_body(x, layer_in):
+        lp, kc, vc = layer_in
+        xn = apply_norm(cfg, lp["ln1"], x)
+        positions = pos0s[:, None] + jnp.arange(N)[None, :]
+        k_new, v_new = A.project_kv(lp["attn"], xn, positions,
+                                    cfg.rope_theta)
+        kc, vc = A.write_kv_rows(kc, vc, k_new, v_new, pos0s)
+        h = A.attend_block_rows(lp["attn"], xn, kc, vc, pos0s,
+                                window=cfg.sliding_window,
+                                rope_theta=cfg.rope_theta,
+                                lengths=lengths)
+        x = x + h
+        xn2 = apply_norm(cfg, lp["ln2"], x)
+        if ff.enabled:
+            y = FF.ff_blocks_sparse(lp["ffn"], cfg, xn2, k_tiles,
+                                    shards, is_dense)
+        else:
+            y = FF.ff_dense(lp["ffn"], cfg, xn2)
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    return {"k": ks, "v": vs}, x
+
+
 def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
             lengths=None, collect_hidden: bool = False, mesh=None):
     """Blockwise prompt processing (paper §3.1): scan over N-token blocks.

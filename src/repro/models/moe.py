@@ -246,6 +246,51 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
     return {"k": ks, "v": vs}, x
 
 
+def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
+                   is_dense=None, lengths=None, active=None,
+                   shards: int = 1, k_tiles=None):
+    """Batched per-row-offset block prefill (MoE twin of
+    repro.models.dense.prefill_blocks): one N-token block of EACH of P
+    distinct requests per call. tok_blks [P, N]; cache leaves
+    [L, P, S, Kv, dh]; pos0s/lengths [P]; is_dense [P] bool (per-row
+    dense forcing of the shared expert — see FF.ff_blocks_sparse).
+
+    active: optional [P] bool — inactive padding rows must not occupy
+    routed-expert capacity (same hazard as inactive decode slots): a
+    live row's routing would otherwise depend on pad-row contents.
+    Their KV writes are discarded by the runtime at scatter-back.
+    Returns (cache, hidden [P, N, D]) pre-final-norm."""
+    ff = cfg.ff
+    if k_tiles is None:
+        k_tiles = shared_k_tiles(cfg, shards)
+    N = tok_blks.shape[1]
+    x = L.embed(params["embed"], tok_blks).astype(cfg.dtype)
+    token_mask = None if active is None else (
+        jnp.broadcast_to(active[:, None], tok_blks.shape))
+
+    def layer_body(x, layer_in):
+        lp, kc, vc = layer_in
+        xn = D.apply_norm(cfg, lp["ln1"], x)
+        positions = pos0s[:, None] + jnp.arange(N)[None, :]
+        k_new, v_new = A.project_kv(lp["attn"], xn, positions,
+                                    cfg.rope_theta)
+        kc, vc = A.write_kv_rows(kc, vc, k_new, v_new, pos0s)
+        h = A.attend_block_rows(lp["attn"], xn, kc, vc, pos0s,
+                                window=cfg.sliding_window,
+                                rope_theta=cfg.rope_theta,
+                                lengths=lengths)
+        x = x + h
+        xn2 = D.apply_norm(cfg, lp["ln2"], x)
+        y, _ = moe_block(lp["moe"], cfg, xn2, mode="block",
+                         k_tiles=k_tiles, shards=shards,
+                         is_dense=is_dense, token_mask=token_mask)
+        return x + y, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    return {"k": ks, "v": vs}, x
+
+
 def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
             lengths=None):
     tokens = batch["tokens"]

@@ -201,6 +201,35 @@ def attend_block_cached(params, x_block, k_cache, v_cache, pos0, *,
     return output_proj(params, o)
 
 
+def attend_block_rows(params, x_block, k_cache, v_cache, pos0s, *,
+                      window=None, rope_theta=10000.0, use_rope=True,
+                      lengths=None):
+    """Per-row-offset blockwise prefill: row b's query block sits at
+    absolute positions [pos0s[b], pos0s[b]+N) of ITS OWN sequence.
+
+    The batched twin of `attend_block_cached` used by the continuous-
+    batching scheduler to prefill one block of B distinct requests in a
+    single call: each row carries its own offset, so the causal /
+    sliding-window / length masks are built per row. x_block: [B,N,D];
+    k_cache/v_cache: [B,S,Kv,dh] (current block already written);
+    pos0s: [B] int32; lengths: optional [B] true prompt lengths.
+    Returns [B,N,D]."""
+    B, N, _ = x_block.shape
+    S = k_cache.shape[1]
+    positions = pos0s[:, None] + jnp.arange(N)[None, :]       # [B, N]
+    theta = rope_theta if use_rope else None
+    q = project_q(params, x_block, positions, theta)
+    kj = jnp.arange(S)[None, None, :]
+    valid = kj <= positions[:, :, None]                       # [B, N, S]
+    if window:
+        valid = valid & (kj > positions[:, :, None] - window)
+    if lengths is not None:
+        valid = valid & (kj < lengths[:, None, None])
+    mask = valid[:, None, None]                               # [B,1,1,N,S]
+    o = dot_attention(q, k_cache, v_cache, mask)
+    return output_proj(params, o)
+
+
 def attend_decode(params, x_tok, k_cache, v_cache, position, *,
                   window=None, rope_theta=10000.0, use_rope=True):
     """One-token decode: x_tok [B,1,D]; cache holds `position` valid slots
@@ -224,6 +253,18 @@ def write_kv_block(k_cache, v_cache, k_new, v_new, pos0):
     """Insert a block of K/V at [pos0, pos0+N) (static N, dynamic pos0)."""
     k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos0, axis=1)
     v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos0, axis=1)
+    return k_cache, v_cache
+
+
+def write_kv_rows(k_cache, v_cache, k_new, v_new, pos0s):
+    """Per-row block write: row b's [N] new K/V land at [pos0s[b],
+    pos0s[b]+N) of row b (static N, dynamic per-row offsets). The
+    batched twin of `write_kv_block` for multi-request prefill."""
+    def row(kc, kn, p):
+        return jax.lax.dynamic_update_slice_in_dim(
+            kc, kn.astype(kc.dtype), p, axis=0)
+    k_cache = jax.vmap(row)(k_cache, k_new, pos0s)
+    v_cache = jax.vmap(row)(v_cache, v_new, pos0s)
     return k_cache, v_cache
 
 

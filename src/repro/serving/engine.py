@@ -45,7 +45,7 @@ class Engine:
     """
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 2048,
-                 n_slots: Optional[int] = None):
+                 n_slots: Optional[int] = None, prefill_batch: int = 4):
         if cfg.arch not in ("dense", "vlm", "moe"):
             raise ValueError("Engine drives dense-family and MoE models; "
                              "use the model modules directly for other "
@@ -54,12 +54,14 @@ class Engine:
         self.params = params
         self.max_len = max_len
         self.n_slots = n_slots
+        self.prefill_batch = prefill_batch
         self.runtime = make_runtime(cfg, params)
 
     def scheduler(self, n_slots: int, cache_len: int, seed: int = 0
                   ) -> ContinuousBatchingScheduler:
         return ContinuousBatchingScheduler(
-            self.runtime, n_slots=n_slots, cache_len=cache_len, seed=seed)
+            self.runtime, n_slots=n_slots, cache_len=cache_len, seed=seed,
+            prefill_batch=self.prefill_batch)
 
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
                  temperature: float = 0.0, seed: int = 0

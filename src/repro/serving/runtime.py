@@ -4,20 +4,29 @@ The continuous-batching scheduler (repro.serving.scheduler) never
 touches model internals — it sees four operations:
 
   init_cache(n_slots, cache_len)  allocate the pooled KV buffers
-  prefill_block(...)              one 128-token FastForward block of ONE
-                                  request, written into its slot
+  prefill_blocks(...)             one 128-token FastForward block of EACH
+                                  of P requests (fixed [P, N] batch with
+                                  per-row slot/pos0/is_dense/length and
+                                  an `active` pad mask) — the batched
+                                  prefill hot path
+  prefill_block(...)              one block of ONE request (the original
+                                  one-block-per-tick entry; kept as the
+                                  P=1 path and the batched path's
+                                  equivalence baseline)
   decode_step(...)                one token for ALL slots (active mask)
   logits_at(hidden, lengths)      read logits at each row's last prompt
                                   token (static-batch path)
 
-Every operation is jitted once with fixed shapes — `prefill_block`
-traces over (slot, pos0, is_dense, length) as *values*, so a churning
-request set never triggers recompilation: the same two executables
-serve the whole stream (asserted via `compile_counts`).
+Every operation is jitted once with fixed shapes — the prefill entries
+trace over (slot, pos0, is_dense, length, active) as *values* and P is
+a static batch width (inactive rows pad short ticks), so a churning
+request set never triggers recompilation: the same executables serve
+the whole stream (asserted via `compile_counts`).
 
 Adapters: `DenseRuntime` (dense family incl. VLM text stack) and
-`MoeRuntime`. Both rely on the per-offset single-block prefill step the
-model modules expose (models/dense.py, models/moe.py: `prefill_block`).
+`MoeRuntime`. Both rely on the per-row-offset block prefill steps the
+model modules expose (models/dense.py, models/moe.py: `prefill_block`
+and the batched `prefill_blocks`).
 """
 from __future__ import annotations
 
@@ -53,6 +62,22 @@ class ModelRuntime(Protocol):
         request's final block."""
         ...
 
+    def prefill_blocks(self, cache, tokens, slots, pos0s, is_dense,
+                       lengths, active):
+        """Process one block-size chunk of EACH of P distinct requests
+        in a single jitted call (the batched prefill hot path).
+
+        cache: pooled KV pytree (leaves [L, n_slots, S, Kv, dh]);
+        tokens: [P, N] int32 (row p zero-padded past lengths[p]);
+        slots/pos0s/lengths: [P] int32; is_dense: [P] bool (dense
+        first/last block PER SEQUENCE); active: [P] bool — P is static,
+        so short ticks pad with inactive rows whose slot ids are unused
+        by the live rows of THIS call (their KV writes become self-
+        copies at scatter-back). Returns (cache, logits [P, V]) —
+        row p's logits are read at its token `lengths[p]-1-pos0s[p]`
+        and only meaningful on that request's final block."""
+        ...
+
     def decode_step(self, cache, tokens, positions, active):
         """One generation step for the whole slot pool. tokens/positions:
         [n_slots] int32; active: [n_slots] bool (inactive rows neither
@@ -83,6 +108,8 @@ class _JittedRuntime:
         # copy per tick (CPU ignores donation)
         self._prefill_block = jax.jit(self._prefill_block_impl,
                                       donate_argnums=(1,))
+        self._prefill_blocks = jax.jit(self._prefill_blocks_impl,
+                                       donate_argnums=(1,))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._logits_at = jax.jit(self._logits_at_impl)
 
@@ -93,6 +120,12 @@ class _JittedRuntime:
         return self.model.prefill_block(
             params, self.cfg, tokens, sub_cache, pos0, is_dense=is_dense,
             lengths=lengths, shards=self.shards)
+
+    def _model_prefill_blocks(self, params, tokens, sub_cache, pos0s,
+                              is_dense, lengths, active):
+        return self.model.prefill_blocks(
+            params, self.cfg, tokens, sub_cache, pos0s, is_dense=is_dense,
+            lengths=lengths, active=active, shards=self.shards)
 
     def _model_decode_step(self, params, tokens, cache, positions, active):
         # slot caches hold absolute positions, so sliding-window models
@@ -121,6 +154,34 @@ class _JittedRuntime:
         # when this block is the final one (length-1 falls inside it)
         idx = jnp.clip(length - 1 - pos0, 0, hidden.shape[1] - 1)
         h = self._final_norm(params, hidden[0, idx])
+        return cache, L.unembed(params["lm_head"], h)
+
+    def _prefill_blocks_impl(self, params, cache, tokens, slots, pos0s,
+                             is_dense, lengths, active):
+        # gather each live row's slot from the pool, run one batched
+        # per-row-offset block step, then scatter the updated rows back.
+        # Slot ids within one call are DISTINCT (the scheduler pads
+        # inactive rows with slots unused by this call's live rows), so
+        # the scatter is write-disjoint; inactive rows write back their
+        # own gathered KV — a deterministic self-copy.
+        kc = jnp.take(cache["k"], slots, axis=1)
+        vc = jnp.take(cache["v"], slots, axis=1)
+        sub, hidden = self._model_prefill_blocks(
+            params, tokens, {"k": kc, "v": vc}, pos0s, is_dense, lengths,
+            active)
+        sel = active[None, :, None, None, None]
+        cache = {
+            "k": cache["k"].at[:, slots].set(
+                jnp.where(sel, sub["k"], kc)),
+            "v": cache["v"].at[:, slots].set(
+                jnp.where(sel, sub["v"], vc)),
+        }
+        # per-row logits at each request's last prompt token — only
+        # meaningful for rows whose final block is this one
+        idx = jnp.clip(lengths - 1 - pos0s, 0, hidden.shape[1] - 1)
+        h = jnp.take_along_axis(
+            hidden, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        h = self._final_norm(params, h)
         return cache, L.unembed(params["lm_head"], h)
 
     def _decode_impl(self, params, cache, tokens, positions, active):
@@ -153,6 +214,14 @@ class _JittedRuntime:
             np.int32(slot), np.int32(pos0), np.bool_(is_dense),
             np.int32(length))
 
+    def prefill_blocks(self, cache, tokens, slots, pos0s, is_dense,
+                       lengths, active):
+        return self._prefill_blocks(
+            self.params, cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(slots, jnp.int32), jnp.asarray(pos0s, jnp.int32),
+            jnp.asarray(is_dense, bool), jnp.asarray(lengths, jnp.int32),
+            jnp.asarray(active, bool))
+
     def decode_step(self, cache, tokens, positions, active):
         return self._decode(
             self.params, cache, jnp.asarray(tokens, jnp.int32),
@@ -165,10 +234,14 @@ class _JittedRuntime:
 
     def compile_counts(self) -> dict:
         """Distinct compilations per jitted entry point. After warmup
-        (one prefill block + one decode step) these must not grow —
-        the serving loop's zero-recompilation invariant."""
+        (one prefill tick + one decode step) these must not grow —
+        the serving loop's zero-recompilation invariant. The batched
+        `prefill_blocks` entry is covered too: its [P, N] batch width
+        is static, so a churning mix of requests, offsets, and pad rows
+        reuses one executable."""
         return {
             "prefill_block": jit_cache_size(self._prefill_block),
+            "prefill_blocks": jit_cache_size(self._prefill_blocks),
             "decode_step": jit_cache_size(self._decode),
             "logits_at": jit_cache_size(self._logits_at),
         }
@@ -192,6 +265,14 @@ class DenseRuntime(_JittedRuntime):
         return dense.prefill_block(
             params, self.cfg, tokens, sub_cache, pos0, is_dense=is_dense,
             lengths=lengths, shards=self.shards, mesh=self.mesh)
+
+    def _model_prefill_blocks(self, params, tokens, sub_cache, pos0s,
+                              is_dense, lengths, active):
+        from repro.models import dense
+        return dense.prefill_blocks(
+            params, self.cfg, tokens, sub_cache, pos0s, is_dense=is_dense,
+            lengths=lengths, active=active, shards=self.shards,
+            mesh=self.mesh)
 
 
 class MoeRuntime(_JittedRuntime):

@@ -7,16 +7,28 @@ work, so each scheduler tick does
   1. ADMIT   — move queued requests into free KV slots (mid-flight:
                a slot freed by a finishing request is re-filled on the
                very next tick, while other requests keep decoding);
-  2. PREFILL — process ONE FastForward block of the oldest request
-               still prefilling (dense-first/last semantics preserved
-               *per sequence*, unlike the static right-padded batch
-               where the padded batch's last block is dense instead);
+  2. PREFILL — process one FastForward block of EACH of up to
+               `prefill_batch` requests still prefilling (oldest
+               first), in ONE jitted `prefill_blocks` call with
+               per-row slot/offset/is_dense/length vectors
+               (dense-first/last semantics preserved *per sequence*,
+               unlike the static right-padded batch where the padded
+               batch's last block is dense instead). The batch width P
+               is static: short ticks pad with inactive rows whose
+               slot ids are unused by this call's live rows.
+               prefill_batch=1 keeps the original one-block-per-tick
+               `prefill_block` path (baseline for benchmarks/tests);
   3. DECODE  — one batched decode step over every slot in the decode
                phase (fixed batch = n_slots, active-slot mask).
 
-All device work goes through the two jitted ModelRuntime entry points,
-so after the first tick of each kind there is zero recompilation —
+All device work goes through the jitted ModelRuntime entry points, so
+after the first tick of each kind there is zero recompilation —
 `ModelRuntime.compile_counts()` is the enforcement hook.
+
+Requests carrying an `eos_id` finish the moment they emit it —
+mid-generation — and their slot returns to the free list on the same
+tick, so EOS-heavy streams churn admission under the batched prefill
+path (`n_eos_stops` counts early exits).
 """
 from __future__ import annotations
 
@@ -70,11 +82,25 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, runtime: ModelRuntime, n_slots: int = 8,
                  cache_len: int = 2048, seed: int = 0,
-                 clock=time.perf_counter):
+                 prefill_batch: int = 4, clock=time.perf_counter):
         self.runtime = runtime
         self.pool = KVSlotPool.create(runtime, n_slots, cache_len)
         self.n_slots = n_slots
         self.cache_len = cache_len
+        # max width of the batched prefill entry: up to this many
+        # requests advance one block per tick in ONE jitted call. Must
+        # not exceed n_slots (pad rows need distinct unused slot ids).
+        self.prefill_batch = max(1, min(prefill_batch, n_slots))
+        # width buckets (powers of two up to prefill_batch): each tick
+        # picks the smallest bucket holding its live rows, so a thin
+        # backlog never pays the full P-wide padded batch. One
+        # executable per bucket, all pre-compiled by warmup().
+        self.prefill_widths = []
+        w = 1
+        while w < self.prefill_batch:
+            self.prefill_widths.append(w)
+            w *= 2
+        self.prefill_widths.append(self.prefill_batch)
         self.clock = clock
         self._rng = np.random.default_rng(seed)
         self.queue: deque[Request] = deque()
@@ -84,7 +110,9 @@ class ContinuousBatchingScheduler:
         # tick counters (benchmarks / tests)
         self.n_ticks = 0
         self.n_prefill_blocks = 0
+        self.n_prefill_ticks = 0
         self.n_decode_steps = 0
+        self.n_eos_stops = 0
 
     # --------------------------------------------------------- submit
 
@@ -119,7 +147,7 @@ class ContinuousBatchingScheduler:
         """One scheduling step; returns the number of tokens emitted."""
         self.n_ticks += 1
         self._admit()
-        emitted = self._prefill_one_block()
+        emitted = self._prefill_blocks()
         emitted += self._decode_all()
         return emitted
 
@@ -135,9 +163,13 @@ class ContinuousBatchingScheduler:
         return self.finished
 
     def warmup(self) -> dict:
-        """Compile the prefill-block and decode executables by running
-        one throwaway request through this scheduler's own pool (no
-        second KV allocation), then reset counters/stats. Returns the
+        """Compile every serving executable by running one throwaway
+        request through this scheduler's own pool (no second KV
+        allocation) — the single-block prefill + decode pair — and then
+        one ALL-INACTIVE `prefill_blocks` call per batched width bucket
+        (inactive rows scatter back their own gathered KV, so the pool
+        is untouched), then reset counters/stats. After this, a
+        churning request mix never compiles again. Returns the
         post-warmup compile counts."""
         if self.active or self.queue or self.finished:
             raise RuntimeError("warmup() must run before real traffic")
@@ -145,9 +177,18 @@ class ContinuousBatchingScheduler:
         self.submit(Request(rid=-1, prompt=[1] * min(N, self.cache_len - 2),
                             max_new=2))
         self.run()
+        for w in self.prefill_widths:
+            if w == 1:
+                continue          # compiled by the throwaway request
+            self.pool.cache, _ = self.runtime.prefill_blocks(
+                self.pool.cache, np.zeros((w, N), np.int32),
+                np.arange(w, dtype=np.int32), np.zeros(w, np.int32),
+                np.zeros(w, bool), np.ones(w, np.int32),
+                np.zeros(w, bool))
         self.finished.clear()
         self._admit_seq = 0
         self.n_ticks = self.n_prefill_blocks = self.n_decode_steps = 0
+        self.n_prefill_ticks = self.n_eos_stops = 0
         self.pool.total_acquires = self.pool.total_releases = 0
         self.pool.max_in_use = 0
         return self.runtime.compile_counts()
@@ -165,30 +206,27 @@ class ContinuousBatchingScheduler:
                 n_blocks=self._n_blocks(req))
             self._admit_seq += 1
 
-    def _prefill_one_block(self) -> int:
-        states = [s for s in self.active.values() if s.phase == "prefill"]
-        if not states:
-            return 0
-        st = min(states, key=lambda s: s.seq)           # FIFO
+    def _block_meta(self, st: _ActiveState):
+        """(chunk tokens, pos0, is_dense) for a state's next block."""
         N = self.runtime.block_size
         ff = self.runtime.cfg.ff
         b = st.blocks_done
-        chunk = st.req.prompt[b * N:(b + 1) * N]
-        tok_blk = np.zeros((1, N), np.int32)
-        tok_blk[0, :len(chunk)] = chunk
         is_dense = ((ff.dense_first_block and b == 0) or
                     (ff.dense_last_block and b == st.n_blocks - 1))
-        self.pool.cache, logits = self.runtime.prefill_block(
-            self.pool.cache, tok_blk, st.slot, b * N, is_dense,
-            len(st.req.prompt))
+        return st.req.prompt[b * N:(b + 1) * N], b * N, is_dense
+
+    def _finish_block(self, st: _ActiveState, logits_row) -> int:
+        """Book-keeping after a state's block was processed; samples the
+        first token (TTFT) when it was the final prompt block. Returns
+        tokens emitted (0 or 1)."""
+        N = self.runtime.block_size
         st.blocks_done += 1
         self.n_prefill_blocks += 1
         self.pool.lengths[st.slot] = min(st.blocks_done * N,
                                          len(st.req.prompt))
         if st.blocks_done < st.n_blocks:
             return 0
-        # final block -> first token (TTFT)
-        tok = self._sample(np.asarray(logits), st.req)
+        tok = self._sample(logits_row(), st.req)
         st.first_token_time = self.clock()
         st.out.append(tok)
         st.next_token = tok
@@ -196,6 +234,90 @@ class ContinuousBatchingScheduler:
         st.phase = "decode"
         self._maybe_finish(st)
         return 1
+
+    def _prefill_one_block(self) -> int:
+        """Original one-block-per-tick path (PR-1): one request, one
+        [1, N] jitted call. Kept as the prefill_batch=1 baseline the
+        batched path is benchmarked and bit-compared against."""
+        states = [s for s in self.active.values() if s.phase == "prefill"]
+        if not states:
+            return 0
+        st = min(states, key=lambda s: s.seq)           # FIFO
+        N = self.runtime.block_size
+        chunk, pos0, is_dense = self._block_meta(st)
+        tok_blk = np.zeros((1, N), np.int32)
+        tok_blk[0, :len(chunk)] = chunk
+        self.pool.cache, logits = self.runtime.prefill_block(
+            self.pool.cache, tok_blk, st.slot, pos0, is_dense,
+            len(st.req.prompt))
+        self.n_prefill_ticks += 1
+        return self._finish_block(st, lambda: np.asarray(logits))
+
+    def _prefill_blocks(self) -> int:
+        """Batched prefill: drain one block of EACH of up to
+        `prefill_batch` distinct prefilling requests (oldest first) in
+        one jitted `prefill_blocks` call.
+
+        Two batch-shaping policies keep the batched tick cheap:
+
+          * density-homogeneous batching — only rows whose next block
+            needs the SAME FFN branch as the oldest request's ride in
+            one call (skipped rows go next tick; the oldest is always
+            included, so no starvation). The per-row is_dense vector is
+            then all-equal and `ff_blocks_sparse`'s any()-gated conds
+            execute exactly ONE branch — a mixed batch would pay for
+            both;
+          * width bucketing — the batch is padded up to the smallest
+            pre-compiled width bucket (not always to P) with inactive
+            rows parked on slot ids unused by this call's live rows
+            (their KV writes are discarded device-side), so a backlog
+            of 1-2 requests doesn't pay a P-wide padded call.
+        """
+        states = sorted(
+            (s for s in self.active.values() if s.phase == "prefill"),
+            key=lambda s: s.seq)                        # FIFO
+        if not states:
+            return 0
+        lead_dense = self._block_meta(states[0])[2]
+        batch = [s for s in states
+                 if self._block_meta(s)[2] == lead_dense]
+        batch = batch[:self.prefill_batch]
+        if len(batch) == 1:
+            return self._prefill_one_block()            # width-1 bucket
+        P = next(w for w in self.prefill_widths if w >= len(batch))
+        N = self.runtime.block_size
+        tokens = np.zeros((P, N), np.int32)
+        slots = np.zeros(P, np.int32)
+        pos0s = np.zeros(P, np.int32)
+        is_dense = np.full(P, lead_dense, bool)
+        lengths = np.ones(P, np.int32)
+        active = np.zeros(P, bool)
+        for i, st in enumerate(batch):
+            chunk, pos0, _ = self._block_meta(st)
+            tokens[i, :len(chunk)] = chunk
+            slots[i] = st.slot
+            pos0s[i] = pos0
+            lengths[i] = len(st.req.prompt)
+            active[i] = True
+        used = {st.slot for st in batch}
+        spare = (s for s in range(self.n_slots) if s not in used)
+        for i in range(len(batch), P):
+            slots[i] = next(spare)
+        self.pool.cache, logits = self.runtime.prefill_blocks(
+            self.pool.cache, tokens, slots, pos0s, is_dense, lengths,
+            active)
+        self.n_prefill_ticks += 1
+        logits_np = [None]        # pull [P, V] to host at most once
+
+        def row(i):
+            def get():
+                if logits_np[0] is None:
+                    logits_np[0] = np.asarray(logits)
+                return logits_np[0][i]
+            return get
+
+        return sum(self._finish_block(st, row(i))
+                   for i, st in enumerate(batch))
 
     def _decode_all(self) -> int:
         decoding = [s for s in self.active.values() if s.phase == "decode"]
@@ -229,11 +351,13 @@ class ContinuousBatchingScheduler:
         return emitted
 
     def _maybe_finish(self, st: _ActiveState) -> None:
-        done = (len(st.out) >= st.req.max_new or
-                (st.req.eos_id is not None and
-                 st.out and st.out[-1] == st.req.eos_id))
+        hit_eos = (st.req.eos_id is not None and st.out
+                   and st.out[-1] == st.req.eos_id)
+        done = len(st.out) >= st.req.max_new or hit_eos
         if not done:
             return
+        if hit_eos and len(st.out) < st.req.max_new:
+            self.n_eos_stops += 1     # early exit frees the slot now
         now = self.clock()
         self.finished[st.req.rid] = RequestOutput(
             rid=st.req.rid, tokens=list(st.out),

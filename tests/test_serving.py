@@ -153,24 +153,117 @@ def test_sliding_window_decode_semantics(dense_setup):
 
 
 def test_no_recompilation_after_warmup(dense_setup):
-    """After one request has compiled the prefill-block and decode
-    executables, any mix of prompt lengths, slots, offsets, and
-    mid-flight churn reuses them — the pool's shapes are the contract."""
+    """After one request has compiled the batched prefill-blocks and
+    decode executables, any mix of prompt lengths, slots, offsets, pad
+    rows, and mid-flight churn reuses them — the pool's shapes and the
+    static prefill batch width are the contract."""
     cfg, params = dense_setup
     runtime = make_runtime(cfg, params)
-    N = runtime.block_size
-    warm = ContinuousBatchingScheduler(runtime, n_slots=3, cache_len=160)
-    warm.submit(Request(rid=0, prompt=list(range(1, N + 1)), max_new=2))
-    warm.run()
-    counts = runtime.compile_counts()
-    assert counts["prefill_block"] == 1 and counts["decode_step"] == 1
-
     sched = ContinuousBatchingScheduler(runtime, n_slots=3, cache_len=160)
+    assert sched.prefill_batch > 1        # batched entry is the default
+    counts = sched.warmup()
+    assert counts["prefill_block"] == 1 and counts["decode_step"] == 1
+    # one executable per batched width bucket (widths 2..P)
+    assert counts["prefill_blocks"] == len(sched.prefill_widths) - 1
+
     prompts = make_prompts(cfg, [10, 70, 64, 31, 100, 5], seed=6)
     for i, p in enumerate(prompts):
         sched.submit(Request(rid=i, prompt=p, max_new=5))
     sched.run()
     assert runtime.compile_counts() == counts
+
+
+def test_no_recompilation_single_block_path(dense_setup):
+    """prefill_batch=1 keeps the original one-block-per-tick entry
+    compiled once as well (the batched path's baseline)."""
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    sched = ContinuousBatchingScheduler(runtime, n_slots=3, cache_len=160,
+                                        prefill_batch=1)
+    prompts = make_prompts(cfg, [70, 31, 100], seed=6)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p, max_new=4))
+    sched.run()
+    counts = runtime.compile_counts()
+    assert counts["prefill_block"] == 1 and counts["prefill_blocks"] == 0
+
+
+# ------------------------------------------------- batched prefill ticks
+
+
+def test_batched_prefill_matches_single_block_loop(dense_setup):
+    """The batched prefill_blocks tick (P=4, ragged offsets, pad rows)
+    must generate exactly the tokens of the PR-1 one-block-per-tick
+    loop on the same workload — FastForward ON, so per-row dense
+    first/last forcing and per-row tile selection are both exercised."""
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    N = runtime.block_size
+    prompts = make_prompts(cfg, [3 * N, 2 * N, 17, N + 5, 4 * N], seed=9)
+
+    def run(prefill_batch):
+        sched = ContinuousBatchingScheduler(
+            runtime, n_slots=4, cache_len=6 * N,
+            prefill_batch=prefill_batch)
+        for i, p in enumerate(prompts):
+            sched.submit(Request(rid=i, prompt=p, max_new=6))
+        return sched.run(), sched
+
+    single, s1 = run(1)
+    batched, s4 = run(4)
+    assert s1.n_prefill_ticks > s4.n_prefill_ticks   # ticks were drained
+    assert s1.n_prefill_blocks == s4.n_prefill_blocks
+    for rid in single:
+        assert single[rid].tokens == batched[rid].tokens
+
+
+def test_batched_prefill_fewer_ticks(dense_setup):
+    """P pending requests advance one block EACH per tick: prefill of
+    P single-block prompts completes in one tick, not P."""
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    N = runtime.block_size
+    sched = ContinuousBatchingScheduler(runtime, n_slots=4,
+                                        cache_len=2 * N, prefill_batch=4)
+    prompts = make_prompts(cfg, [N, N - 3, N // 2, N], seed=10)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p, max_new=2))
+    sched.tick()
+    assert sched.n_prefill_blocks == 4               # one tick, 4 blocks
+    assert all(s.phase == "decode" for s in sched.active.values())
+    sched.run()
+
+
+# ------------------------------------------------------------- eos stops
+
+
+def test_eos_frees_slot_early(dense_setup):
+    """A request hitting its eos_id mid-generation finishes immediately
+    (output truncated at eos), frees its slot for the queue, and the
+    scheduler counts the early exit."""
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    N = runtime.block_size
+    prompts = make_prompts(cfg, [40, 25, 33], seed=12)
+
+    # reference run: find what token the first request emits at step 2
+    # (greedy decode may revisit it earlier — stop at FIRST occurrence)
+    ref = ContinuousBatchingScheduler(runtime, n_slots=1, cache_len=4 * N)
+    ref.submit(Request(rid=0, prompt=prompts[0], max_new=32))
+    ref_tokens = ref.run()[0].tokens
+    eos = ref_tokens[2]
+    expect_len = ref_tokens.index(eos) + 1
+
+    sched = ContinuousBatchingScheduler(runtime, n_slots=1,
+                                        cache_len=4 * N)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p, max_new=32, eos_id=int(eos)))
+    outs = sched.run()
+    assert outs[0].tokens[-1] == eos and len(outs[0].tokens) == expect_len
+    assert sched.n_eos_stops >= 1
+    # early exits recycled the single slot through all three requests
+    assert sched.pool.total_acquires == 3
+    assert sorted(outs) == [0, 1, 2]
 
 
 # ------------------------------------------------------------ moe + misc
