@@ -199,6 +199,14 @@ def run(csv=True, requests=REQUESTS):
                                   / max(sched.n_prefill_ticks, 1), 2)),
         "continuous_batched_dense": dense,
         "ratios": ratios,
+        # the caveat the CSV output prints, carried into the artifact:
+        # single-run wall-clock on a shared CPU swings this ratio well
+        # below/above 1.0 run-to-run (PR-over-PR values 0.9-1.2x are
+        # machine noise, not regressions)
+        "ratios_note": (
+            "fastforward_vs_dense_tokens_per_s is overhead-bound and "
+            "noisy on the reduced CPU config; the compute-bound speedup "
+            "is the analytical_speedup_vs_dense section"),
         "compile_counts_flat": flat,
     })
 

@@ -1,0 +1,34 @@
+"""XLA reference oracle for the grouped (per-expert segment) matmul.
+
+The dropless MoE dispatch sorts the (token, expert) pairs by expert id
+and multiplies each contiguous segment of rows by its own expert's
+weight matrix. This module is the portable fallback used when
+``jax.lax.ragged_dot`` is unavailable and for cross-checking the Pallas
+kernel: one masked dense matmul per expert (E x the active FLOPs — an
+oracle, not a fast path).
+
+Semantics match ``jax.lax.ragged_dot``: row m belongs to group g iff
+``offsets[g] <= m < offsets[g+1]`` with ``offsets = [0, cumsum(sizes)]``,
+and rows past ``sum(group_sizes)`` (sentinel-routed masked tokens,
+padding) produce zeros.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(lhs, rhs, group_sizes):
+    """lhs: [M, D] rows sorted by group; rhs: [E, D, F];
+    group_sizes: [E] int32 (sum <= M). Returns [M, F] float32."""
+    M = lhs.shape[0]
+    E = rhs.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(M)
+    out = jnp.zeros((M, rhs.shape[2]), jnp.float32)
+    for e in range(E):
+        keep = (row >= starts[e]) & (row < ends[e])
+        y = jnp.einsum("md,df->mf", lhs, rhs[e],
+                       preferred_element_type=jnp.float32)
+        out = out + jnp.where(keep[:, None], y, 0.0)
+    return out

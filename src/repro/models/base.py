@@ -58,6 +58,12 @@ class ModelConfig:
     d_ff_expert: int = 0
     capacity_factor: float = 1.25
     router_aux_weight: float = 0.01
+    # routed-expert dispatch: "dropless" (sort-based grouped dispatch,
+    # dispatch-group invariant — blockwise prefill == full forward) or
+    # "capacity" (GShard-style token-drop; opt-in training mode only:
+    # capacity depends on the dispatch-group size, so chunked serving
+    # paths would route differently than the full-sequence forward)
+    moe_dispatch: str = "dropless"
     # --- SSM / hybrid ---
     ssm_state: int = 0             # N (mamba2 state dim)
     ssm_head_dim: int = 64         # P (mamba2) / xLSTM head width driver

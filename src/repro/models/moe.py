@@ -1,8 +1,14 @@
 """Mixture-of-Experts decoder LM (qwen2-moe, kimi-k2).
 
-Routed experts: top-k routing with capacity-based scatter dispatch
-(GShard-style position-in-expert via cumsum, token drop beyond capacity)
-— batched expert einsum keeps HLO FLOPs ≈ active FLOPs × capacity factor.
+Routed experts: top-k routing with dropless sort-based grouped dispatch
+(default, `cfg.moe_dispatch="dropless"`): every selected (token, expert)
+pair is computed via grouped matmuls over expert-sorted segments
+(kernels/grouped_matmul: Pallas on TPU, jax.lax.ragged_dot on XLA), so
+a token's routed output depends only on that token — blockwise prefill,
+batched multi-request blocks, ragged decode, and the full-sequence
+forward are dispatch-group invariant. `cfg.moe_dispatch="capacity"`
+keeps the GShard-style capacity scatter dispatch (position-in-expert
+via cumsum, token drop beyond capacity) as an opt-in training mode.
 Shared experts: a dense always-on FFN path; FastForward applies HERE
 (the routed experts are already contextually sparse — see DESIGN.md §4).
 """
@@ -20,6 +26,7 @@ from repro.nn import layers as L
 from repro.nn import attention as A
 from repro.core import fastforward as FF
 from repro.core import sparse_ffn as S
+from repro.kernels.grouped_matmul import ops as GM
 from repro.models import dense as D
 from repro.distributed.sharding import constrain
 
@@ -72,41 +79,119 @@ def capacity(n_tokens: int, cfg: ModelConfig) -> int:
     return max(8, -(-c // 8) * 8)  # round up to 8 for layout friendliness
 
 
-def routed_experts(params, cfg: ModelConfig, x, token_mask=None):
-    """x: [B, T, D] -> (y [B, T, D], aux_loss scalar).
+def _route(params, cfg: ModelConfig, xf, live):
+    """Shared router head: xf [N, D], live optional [N] bool ->
+    (top_p [N, K] f32 renormalized, top_e [N, K] int32, aux scalar).
 
-    Scatter-based capacity dispatch; drops overflow tokens (their routed
-    contribution is zero — the shared expert/residual still carries them).
-    token_mask: optional [B, T] bool — masked-out tokens neither occupy
-    expert capacity nor receive routed output (serving: inactive KV
-    slots ride along in the fixed decode batch and must not steal
-    capacity from live requests).
-    """
-    B, T, Dm = x.shape
-    N = B * T
+    The Switch-style load-balance loss excludes masked tokens from both
+    statistics — inactive pad rows (dead KV slots, short prefill ticks)
+    would otherwise skew me/ce toward whatever experts dead inputs
+    happen to score highest."""
     E, K = cfg.n_experts, cfg.top_k
-    C = capacity(N, cfg)
-    xf = x.reshape(N, Dm)
     logits = jnp.einsum("nd,de->ne", xf, params["router"],
                         preferred_element_type=jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)                      # [N, E]
     top_p, top_e = jax.lax.top_k(probs, K)                       # [N, K]
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
 
-    # load-balance auxiliary loss (Switch-style)
-    me = jnp.mean(probs, axis=0)                                 # [E]
-    ce = jnp.mean(
-        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1), axis=0)
+    # load-balance auxiliary loss (Switch-style), live tokens only
+    hot = jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1)
+    if live is None:
+        me = jnp.mean(probs, axis=0)                             # [E]
+        ce = jnp.mean(hot, axis=0)
+    else:
+        w = live.astype(jnp.float32)
+        n_live = jnp.maximum(w.sum(), 1.0)
+        me = jnp.sum(probs * w[:, None], axis=0) / n_live
+        ce = jnp.sum(hot * w[:, None], axis=0) / n_live
     aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+    return top_p, top_e, aux
+
+
+def routed_experts(params, cfg: ModelConfig, x, token_mask=None):
+    """x: [B, T, D] -> (y [B, T, D], aux_loss scalar).
+
+    token_mask: optional [B, T] bool — masked-out tokens neither enter
+    the dispatch nor receive routed output (serving: inactive KV slots
+    ride along in fixed-shape batches).
+
+    Dispatch mode (cfg.moe_dispatch): "dropless" computes every
+    selected (token, expert) pair — dispatch-group invariant, the
+    serving default; "capacity" is the GShard-style token-drop scatter
+    path, kept as an opt-in training mode."""
+    if cfg.moe_dispatch == "dropless":
+        return _routed_dropless(params, cfg, x, token_mask)
+    if cfg.moe_dispatch == "capacity":
+        return _routed_capacity(params, cfg, x, token_mask)
+    raise ValueError(f"unknown moe_dispatch={cfg.moe_dispatch!r}; "
+                     f"expected 'dropless' or 'capacity'")
+
+
+def _routed_dropless(params, cfg: ModelConfig, x, token_mask):
+    """Dropless sort-based grouped dispatch: argsort the flattened
+    (token, expert) assignments by expert id (stable), compute per-
+    expert segment sizes, run grouped matmuls over the sorted rows
+    (kernels.grouped_matmul: Pallas on TPU, jax.lax.ragged_dot on XLA
+    — verified row-invariant to the surrounding group sizes), then
+    unsort and combine in fixed top-k order. No token is ever dropped,
+    so the routed output of a token is identical whichever
+    batch/block/dispatch group it shipped with — the invariant the
+    blockwise serving stack asserts against the full forward.
+
+    Masked tokens route to a sentinel id E that sorts PAST every real
+    expert segment: they contribute zero group length and fall in the
+    leftover tail the grouped matmul zeroes out."""
+    B, T, Dm = x.shape
+    N = B * T
+    E, K = cfg.n_experts, cfg.top_k
+    xf = x.reshape(N, Dm)
+    live = None if token_mask is None else token_mask.reshape(N)
+    top_p, top_e, aux = _route(params, cfg, xf, live)
+
+    flat_e = top_e.reshape(-1)                                   # [N*K]
+    if live is not None:
+        flat_e = jnp.where(jnp.repeat(live, K), flat_e, E)       # sentinel
+    order = jnp.argsort(flat_e)        # stable: ties keep token order
+    inv = jnp.argsort(order)           # inverse permutation (unsort)
+    xs = xf[order // K]                                          # [N*K, D]
+    # sentinel ids fall outside length=E and are dropped from the count
+    group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+
+    h_g = GM.grouped_matmul_op(xs, params["wg_e"], group_sizes)
+    h_u = GM.grouped_matmul_op(xs, params["wu_e"], group_sizes)
+    h = L.swiglu(h_g.astype(x.dtype), h_u.astype(x.dtype))
+    out = GM.grouped_matmul_op(h, params["wd_e"], group_sizes)   # [N*K, D]
+
+    w = top_p.astype(jnp.float32)                                # [N, K]
+    if live is not None:
+        w = w * live.astype(jnp.float32)[:, None]
+    y = jnp.sum(out[inv].reshape(N, K, Dm) * w[:, :, None], axis=1)
+    return y.reshape(B, T, Dm).astype(x.dtype), aux
+
+
+def _routed_capacity(params, cfg: ModelConfig, x, token_mask):
+    """GShard-style scatter dispatch (opt-in via
+    cfg.moe_dispatch="capacity"): position-in-expert via cumsum, tokens
+    beyond capacity are DROPPED (their routed contribution is zero —
+    the shared expert/residual still carries them). Capacity depends on
+    the dispatch-group size, so this path is dispatch-group DEPENDENT:
+    chunked/blockwise serving would route differently than the full
+    forward. Training only."""
+    B, T, Dm = x.shape
+    N = B * T
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(N, cfg)
+    xf = x.reshape(N, Dm)
+    live = None if token_mask is None else token_mask.reshape(N)
+    top_p, top_e, aux = _route(params, cfg, xf, live)
 
     flat_e = top_e.reshape(-1)                                   # [N*K]
     flat_w = top_p.reshape(-1).astype(jnp.float32)
     flat_tok = jnp.arange(N * K) // K
 
     onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # [N*K, E]
-    if token_mask is not None:
-        onehot = onehot * token_mask.reshape(N)[flat_tok].astype(
-            jnp.int32)[:, None]
+    if live is not None:
+        onehot = onehot * live[flat_tok].astype(jnp.int32)[:, None]
     # sharding probe (EXPERIMENTS.md §Perf K1): explicit constraint is a
     # no-op — GSPMD already keeps the bookkeeping token-sharded; the MoE
     # collective cost is the scatter-add into the [E,C,D] buffer below.
@@ -213,9 +298,9 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
                   k_tiles=None):
     """One N-token block at offset `pos0` (MoE twin of
     repro.models.dense.prefill_block — the schedulable prefill unit of
-    the continuous-batching runtime). Note: capacity-based routing
-    dispatches per block, so token-drop patterns differ from the
-    full-sequence `forward` (see test_models_smoke xfail note).
+    the continuous-batching runtime). Dropless routed dispatch is
+    dispatch-group invariant, so the blockwise scan reproduces the
+    full-sequence `forward` routing token-for-token.
     Returns (cache, hidden [B, N, D]) pre-final-norm."""
     ff = cfg.ff
     if k_tiles is None:
@@ -255,10 +340,11 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
     [L, P, S, Kv, dh]; pos0s/lengths [P]; is_dense [P] bool (per-row
     dense forcing of the shared expert — see FF.ff_blocks_sparse).
 
-    active: optional [P] bool — inactive padding rows must not occupy
-    routed-expert capacity (same hazard as inactive decode slots): a
-    live row's routing would otherwise depend on pad-row contents.
-    Their KV writes are discarded by the runtime at scatter-back.
+    active: optional [P] bool — inactive padding rows are routed to the
+    dropless dispatch's sentinel group (zero group length), so they
+    neither receive routed output nor perturb live rows, and they are
+    excluded from the router's load-balance statistics. Their KV
+    writes are discarded by the runtime at scatter-back.
     Returns (cache, hidden [P, N, D]) pre-final-norm."""
     ff = cfg.ff
     if k_tiles is None:
@@ -292,7 +378,11 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
 
 
 def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
-            lengths=None):
+            lengths=None, collect_hidden: bool = False):
+    """Blockwise prompt processing (MoE twin of
+    repro.models.dense.prefill). collect_hidden: also return the full
+    hidden sequence [B, T, D] pre-final-norm so the static engine can
+    read logits at lengths-1 for right-padded batches."""
     tokens = batch["tokens"]
     ff = cfg.ff
     B, T = tokens.shape
@@ -311,10 +401,15 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
         cache, x = prefill_block(
             params, cfg, tok_blk, cache, blk_idx * N, is_dense=is_dense,
             lengths=lengths, shards=shards, k_tiles=k_tiles)
-        return cache, x[:, -1, :]
+        out = x if collect_hidden else x[:, -1, :]
+        return cache, out
 
-    cache, lasts = jax.lax.scan(block_step, cache, (jnp.arange(nb), blocks))
-    x_last = D.apply_norm(cfg, params["ln_f"], lasts[-1])
+    cache, outs = jax.lax.scan(block_step, cache, (jnp.arange(nb), blocks))
+    if collect_hidden:
+        hidden = outs.transpose(1, 0, 2, 3).reshape(B, T, -1)
+        x_last = D.apply_norm(cfg, params["ln_f"], hidden[:, -1, :])
+        return cache, L.unembed(params["lm_head"], x_last), hidden
+    x_last = D.apply_norm(cfg, params["ln_f"], outs[-1])
     return cache, L.unembed(params["lm_head"], x_last)
 
 
@@ -330,8 +425,8 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
     positions = (position[:, None] if ragged
                  else jnp.full((B, 1), position))
     k_tiles = shared_k_tiles(cfg, shards) if ff.apply_to_decode else 0
-    # inactive slots must not occupy routed-expert capacity: a live
-    # request's routing would otherwise depend on dead slot contents
+    # inactive slots route to the dropless sentinel group: they receive
+    # no routed output and stay out of the load-balance statistics
     token_mask = None if active is None else active[:, None]
 
     def layer_body(x, layer_in):

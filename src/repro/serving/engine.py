@@ -98,14 +98,18 @@ class Engine:
 
 
 class StaticEngine:
-    """Legacy single-shot engine (dense-family models): one right-padded
+    """Legacy single-shot engine (dense family + MoE): one right-padded
     batch through full-batch blockwise prefill, then a lockstep decode
     loop. No mid-flight admission — kept as the continuous-batching
-    baseline."""
+    baseline. MoE models run dropless routed dispatch, so the padded
+    static batch routes each token identically to the continuous
+    engine's per-request blocks (the bit-equivalence tests rely on
+    this)."""
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 2048):
-        if cfg.arch not in ("dense", "vlm"):
-            raise ValueError("StaticEngine drives dense-family models")
+        if cfg.arch not in ("dense", "vlm", "moe"):
+            raise ValueError("StaticEngine drives dense-family and MoE "
+                             "models")
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)

@@ -276,10 +276,13 @@ class DenseRuntime(_JittedRuntime):
 
 
 class MoeRuntime(_JittedRuntime):
-    """Mixture-of-experts models (qwen2-moe, kimi-k2). Routed-expert
-    capacity is computed per dispatch group, so the fixed [n_slots, 1]
-    decode batch and [1, N] prefill block shapes also pin expert-buffer
-    shapes — no recompilation as requests churn."""
+    """Mixture-of-experts models (qwen2-moe, kimi-k2). Dropless routed
+    dispatch is dispatch-group invariant: a token routes identically in
+    the [1, N] single-block, [P, N] batched-prefill, and [n_slots, 1]
+    decode entries, so blockwise serving reproduces the full-sequence
+    forward token-for-token. The sorted-segment buffers are sized by
+    the fixed batch shapes (N*K rows) — no recompilation as requests
+    churn, same contract as the dense runtime."""
 
     ARCHS = ("moe",)
 

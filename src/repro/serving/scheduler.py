@@ -82,7 +82,8 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, runtime: ModelRuntime, n_slots: int = 8,
                  cache_len: int = 2048, seed: int = 0,
-                 prefill_batch: int = 4, clock=time.perf_counter):
+                 prefill_batch: int = 4, clock=time.perf_counter,
+                 sleep=time.sleep):
         self.runtime = runtime
         self.pool = KVSlotPool.create(runtime, n_slots, cache_len)
         self.n_slots = n_slots
@@ -102,6 +103,11 @@ class ContinuousBatchingScheduler:
             w *= 2
         self.prefill_widths.append(self.prefill_batch)
         self.clock = clock
+        # idle wait between stream arrivals (drive_stream). Injected
+        # alongside `clock` so a fake/simulated clock brings a matching
+        # sleep: waiting on wall time for a delta measured on a fake
+        # clock would block a deterministic stream test on real seconds.
+        self.sleep = sleep
         self._rng = np.random.default_rng(seed)
         self.queue: deque[Request] = deque()
         self.active: Dict[int, _ActiveState] = {}   # slot -> state
@@ -235,16 +241,13 @@ class ContinuousBatchingScheduler:
         self._maybe_finish(st)
         return 1
 
-    def _prefill_one_block(self) -> int:
+    def _prefill_one_block(self, st: _ActiveState, meta) -> int:
         """Original one-block-per-tick path (PR-1): one request, one
-        [1, N] jitted call. Kept as the prefill_batch=1 baseline the
-        batched path is benchmarked and bit-compared against."""
-        states = [s for s in self.active.values() if s.phase == "prefill"]
-        if not states:
-            return 0
-        st = min(states, key=lambda s: s.seq)           # FIFO
+        [1, N] jitted call. Kept as the prefill_batch=1 / width-1 bucket
+        the batched path is benchmarked and bit-compared against.
+        `meta` is the state's precomputed `_block_meta` for this tick."""
         N = self.runtime.block_size
-        chunk, pos0, is_dense = self._block_meta(st)
+        chunk, pos0, is_dense = meta
         tok_blk = np.zeros((1, N), np.int32)
         tok_blk[0, :len(chunk)] = chunk
         self.pool.cache, logits = self.runtime.prefill_block(
@@ -278,12 +281,15 @@ class ContinuousBatchingScheduler:
             key=lambda s: s.seq)                        # FIFO
         if not states:
             return 0
-        lead_dense = self._block_meta(states[0])[2]
-        batch = [s for s in states
-                 if self._block_meta(s)[2] == lead_dense]
+        # one _block_meta per state per tick: the same meta drives both
+        # the density filter and the batch fill (re-deriving it would
+        # re-slice each prompt chunk)
+        metas = [(s, self._block_meta(s)) for s in states]
+        lead_dense = metas[0][1][2]
+        batch = [(s, m) for s, m in metas if m[2] == lead_dense]
         batch = batch[:self.prefill_batch]
         if len(batch) == 1:
-            return self._prefill_one_block()            # width-1 bucket
+            return self._prefill_one_block(*batch[0])   # width-1 bucket
         P = next(w for w in self.prefill_widths if w >= len(batch))
         N = self.runtime.block_size
         tokens = np.zeros((P, N), np.int32)
@@ -292,14 +298,13 @@ class ContinuousBatchingScheduler:
         is_dense = np.full(P, lead_dense, bool)
         lengths = np.ones(P, np.int32)
         active = np.zeros(P, bool)
-        for i, st in enumerate(batch):
-            chunk, pos0, _ = self._block_meta(st)
+        for i, (st, (chunk, pos0, _)) in enumerate(batch):
             tokens[i, :len(chunk)] = chunk
             slots[i] = st.slot
             pos0s[i] = pos0
             lengths[i] = len(st.req.prompt)
             active[i] = True
-        used = {st.slot for st in batch}
+        used = {st.slot for st, _ in batch}
         spare = (s for s in range(self.n_slots) if s not in used)
         for i in range(len(batch), P):
             slots[i] = next(spare)
@@ -317,7 +322,7 @@ class ContinuousBatchingScheduler:
             return get
 
         return sum(self._finish_block(st, row(i))
-                   for i, st in enumerate(batch))
+                   for i, (st, _) in enumerate(batch))
 
     def _decode_all(self) -> int:
         decoding = [s for s in self.active.values() if s.phase == "decode"]
@@ -402,7 +407,11 @@ def drive_stream(sched: ContinuousBatchingScheduler,
         while pending and pending[0].arrival_time <= now:
             sched.submit(pending.popleft())
         if sched.drained:
-            time.sleep(max(0.0, pending[0].arrival_time - clock()))
+            # route the idle wait through the scheduler's injected sleep:
+            # the delta is measured on sched.clock, so a simulated clock
+            # must come with a simulated sleep (time.sleep on a fake-
+            # clock delta would block on real wall time)
+            sched.sleep(max(0.0, pending[0].arrival_time - clock()))
             continue
         sched.tick()
     return clock() - t0

@@ -81,17 +81,13 @@ def test_decode_smoke(arch):
 
 @pytest.mark.parametrize("arch", [
     "tinyllama-1.1b", "zamba2-2.7b",
-    pytest.param("qwen2-moe-a2.7b", marks=pytest.mark.xfail(
-        strict=False, reason=(
-            "capacity-based MoE token dropping is dispatch-group "
-            "dependent: forward routes all B*T tokens in one group "
-            "(capacity=ceil(B*T*K*cf/E)) while blockwise prefill routes "
-            "each B*N block separately with a smaller per-block capacity, "
-            "so overflow tokens drop differently and logits diverge "
-            "beyond tolerance. Not a bug in either path — an intrinsic "
-            "property of GShard-style capacity routing under chunking; a "
-            "dropless inference dispatch would remove it (ROADMAP open "
-            "item)."))),
+    # MoE archs run dropless routed dispatch (cfg.moe_dispatch), which
+    # is dispatch-group invariant — the per-block prefill routes every
+    # token exactly as the full-sequence forward does. (Under the
+    # opt-in "capacity" training mode this equivalence does NOT hold:
+    # capacity = ceil(group_tokens*K*cf/E) differs per dispatch group,
+    # so overflow tokens drop differently — see test_moe_dispatch.py.)
+    "qwen2-moe-a2.7b", "kimi-k2-1t-a32b",
 ])
 def test_prefill_matches_forward(arch):
     """Blockwise-cached prefill must reproduce the fused forward exactly

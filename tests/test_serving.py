@@ -270,12 +270,13 @@ def test_eos_frees_slot_early(dense_setup):
 
 
 def test_moe_routing_ignores_masked_tokens():
-    """Masked (inactive-slot) tokens must not occupy routed-expert
-    capacity: a live token's routed output is identical to serving it
-    alone. The fixture makes the hazard deterministic — 32 identical
-    rows all route to the same top-k experts, exceeding capacity
-    (C = 24 < 32), so WITHOUT the mask the last row is capacity-dropped
-    by the dead rows ahead of it."""
+    """Masked (inactive-slot) tokens must not perturb a live token's
+    routed output: it is identical to serving that token alone. The
+    fixture makes the capacity hazard deterministic — 32 identical rows
+    all route to the same top-k experts, exceeding capacity (C = 24 <
+    32) — so under CAPACITY dispatch the mask is what keeps dead rows
+    from evicting the live one, while under DROPLESS dispatch no token
+    can evict another in the first place (mask or not)."""
     from repro.models.moe import capacity, moe_ffn_spec, routed_experts
     cfg = get_config("qwen2-moe-a2.7b", reduced=True)
     mp = init_params(moe_ffn_spec(cfg, cfg.dtype), jax.random.key(2))
@@ -286,15 +287,30 @@ def test_moe_routing_ignores_masked_tokens():
     mask = np.zeros((B, 1), bool)
     mask[-1] = True                 # only the last row is live
 
-    y_solo, _ = routed_experts(mp, cfg, x[-1:])
-    y_masked, _ = routed_experts(mp, cfg, x, token_mask=jnp.asarray(mask))
-    y_unmasked, _ = routed_experts(mp, cfg, x)
+    cap = cfg.with_(moe_dispatch="capacity")
+    y_solo, _ = routed_experts(mp, cap, x[-1:])
+    y_masked, _ = routed_experts(mp, cap, x, token_mask=jnp.asarray(mask))
+    y_unmasked, _ = routed_experts(mp, cap, x)
     np.testing.assert_allclose(np.asarray(y_masked[-1]),
                                np.asarray(y_solo[0]), rtol=1e-6, atol=1e-6)
     # sanity: without the mask the dead rows really do evict the live
-    # row (otherwise this test would pass vacuously)
+    # row under capacity dispatch (otherwise the mask assertions above
+    # would pass vacuously)
     assert not np.allclose(np.asarray(y_unmasked[-1]),
                            np.asarray(y_solo[0]), rtol=1e-3, atol=1e-4)
+
+    # dropless (serving default): the overflow that evicts under
+    # capacity dispatch cannot happen — the live row matches solo with
+    # and WITHOUT the mask; masked rows get exactly zero routed output
+    assert cfg.moe_dispatch == "dropless"
+    d_solo, _ = routed_experts(mp, cfg, x[-1:])
+    d_masked, _ = routed_experts(mp, cfg, x, token_mask=jnp.asarray(mask))
+    d_unmasked, _ = routed_experts(mp, cfg, x)
+    np.testing.assert_array_equal(np.asarray(d_masked[-1]),
+                                  np.asarray(d_solo[0]))
+    np.testing.assert_array_equal(np.asarray(d_unmasked[-1]),
+                                  np.asarray(d_solo[0]))
+    np.testing.assert_array_equal(np.asarray(d_masked[:-1]), 0.0)
 
 
 def test_moe_runtime_serves():
