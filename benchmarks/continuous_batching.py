@@ -17,10 +17,13 @@ call, instead of PR-1's one-block-of-one-request tick — under a
 backlog, prefill wall-clock per block drops and TTFT with it.
 
 Emits ``name,value,derived`` CSV rows (harness contract) and writes
-the machine-readable ``results/BENCH_prefill.json`` section
+the machine-readable ``results/BENCH_prefill.json`` sections
 ``serving`` (tok/s, TTFT p50/p99, continuous-vs-static and
 batched-vs-single-prefill ratios, measured FastForward-vs-dense
-speedup) so the perf trajectory is tracked PR-over-PR.
+speedup) and ``kv_memory`` (slot vs paged KV pool at equal device
+bytes: peak concurrent requests, peak pages, stranded tokens at the
+occupancy peak, preemptions) so the perf trajectory is tracked
+PR-over-PR.
 """
 from __future__ import annotations
 
@@ -151,6 +154,106 @@ def _stats(tok, wall, ttft):
     }
 
 
+# ------------------------------------------------- kv memory (paged pool)
+
+KV_SLOTS = 4                  # slot-pool capacity the byte budget buys
+KV_PAGE = 16                  # tokens per page (divides block_size 32)
+KV_PROMPT_RANGE = (48, 112)   # short-heavy: the fragmentation regime —
+                              # every slot strands cache_len - need
+KV_MAX_NEW_RANGE = (4, 32)
+KV_REQUESTS = 20
+
+
+def _kv_memory_workload(cfg, seed=2):
+    """One deep burst of short-heavy requests: everyone arrives at once,
+    so concurrency is limited ONLY by the KV pool — exactly the
+    capacity question the slot-vs-paged comparison asks."""
+    rng = np.random.default_rng(seed)
+    prompts = [list(rng.integers(0, cfg.vocab,
+                                 rng.integers(*KV_PROMPT_RANGE)))
+               for _ in range(KV_REQUESTS)]
+    max_news = [int(v) for v in rng.integers(*KV_MAX_NEW_RANGE,
+                                             size=KV_REQUESTS)]
+    arrivals = np.sort(rng.exponential(0.002, size=KV_REQUESTS))
+    return prompts, max_news, arrivals
+
+
+def _run_kv_memory(cfg, params):
+    """Slot vs paged pool at EQUAL device pool bytes.
+
+    The byte budget is KV_SLOTS full-length slots. The slot engine can
+    therefore hold at most KV_SLOTS requests in flight however short
+    they are; the paged engine spends the same bytes as a page heap
+    ((n_pages - 1) * page_size == KV_SLOTS * cache_len tokens; the
+    reserved null page is paid on top honestly) across up to 4x as many
+    table slots, so in-flight concurrency tracks the LIVE footprint.
+    Writes the `kv_memory` section: peak concurrency, peak pages,
+    stranded (allocated-but-dead) tokens at the occupancy peak, and
+    throughput for both layouts."""
+    prompts, max_news, arrivals = _kv_memory_workload(cfg)
+    N = cfg.ff.block_size
+    cache_len = -(-max(len(p) for p in prompts) // N) * N + max(max_news)
+    cache_len = -(-cache_len // KV_PAGE) * KV_PAGE       # page-aligned
+    pool_tokens = KV_SLOTS * cache_len
+    requests = [Request(rid=i, prompt=prompts[i], max_new=max_news[i],
+                        arrival_time=arrivals[i])
+                for i in range(len(prompts))]
+
+    def drive(cfg_run, n_slots, n_pages=None):
+        runtime = make_runtime(cfg_run, params)
+        sched = ContinuousBatchingScheduler(
+            runtime, n_slots=n_slots, cache_len=cache_len,
+            prefill_batch=PREFILL_BATCH, page_size=KV_PAGE,
+            n_pages=n_pages)
+        sched.warmup()
+        wall = drive_stream(sched, requests)
+        outs = sched.finished
+        assert len(outs) == len(requests)
+        gen = sum(len(o.tokens) for o in outs.values())
+        return sched, wall, gen
+
+    s_sched, s_wall, s_gen = drive(cfg, KV_SLOTS)
+    p_sched, p_wall, p_gen = drive(
+        cfg.with_(kv_layout="paged"), n_slots=4 * KV_SLOTS,
+        n_pages=pool_tokens // KV_PAGE + 1)
+
+    pool = p_sched.pool
+    section = {
+        "config": {"pool_tokens": pool_tokens, "cache_len": cache_len,
+                   "page_size": KV_PAGE, "slot_n_slots": KV_SLOTS,
+                   "paged_n_slots": 4 * KV_SLOTS,
+                   "paged_usable_pages": pool.n_pages - 1,
+                   "requests": len(requests),
+                   "prompt_range": list(KV_PROMPT_RANGE),
+                   "max_new_range": list(KV_MAX_NEW_RANGE)},
+        "slot": {
+            "max_concurrent_requests": s_sched.pool.max_in_use,
+            "stranded_tokens_at_peak": s_sched.pool.stranded_tokens_at_peak,
+            "tokens_per_s": round(s_gen / s_wall, 1),
+        },
+        "paged": {
+            "max_concurrent_requests": pool.max_in_use,
+            "peak_pages_in_use": pool.max_pages_in_use,
+            "stranded_tokens_at_peak": pool.stranded_tokens_at_peak,
+            "page_allocs": pool.total_page_allocs,
+            "page_frees": pool.total_page_frees,
+            "preemptions": p_sched.n_preemptions,
+            "tokens_per_s": round(p_gen / p_wall, 1),
+        },
+        # acceptance: block-granular allocation must buy strictly more
+        # in-flight requests from the same device bytes
+        "paged_more_concurrent":
+            bool(pool.max_in_use > s_sched.pool.max_in_use),
+        "note": (
+            "capacity comparison at equal pool bytes; paged tokens_per_s "
+            "on CPU pays the gather-based page-table attention copy and "
+            "the 4x wider decode batch — the TPU side of that path is "
+            "the kernels/paged_attention Pallas kernel"),
+    }
+    write_bench_json("kv_memory", section)
+    return section
+
+
 def run(csv=True, requests=REQUESTS):
     cfg = get_config("tinyllama-1.1b", reduced=True)
     params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
@@ -210,6 +313,8 @@ def run(csv=True, requests=REQUESTS):
         "compile_counts_flat": flat,
     })
 
+    kv = _run_kv_memory(cfg, params)
+
     rows = [
         ("static_tokens_per_s", f"{static['tokens_per_s']:.1f}",
          f"{len(prompts)} reqs, {SLOTS}-wide rounds, lockstep decode"),
@@ -240,6 +345,19 @@ def run(csv=True, requests=REQUESTS):
          "sparse/dense tok/s, batched serving path (noisy on the "
          "overhead-bound CPU reduced config; the compute-bound "
          "speedup is the analytical_speedup_vs_dense section)"),
+        ("kv_slot_max_concurrent",
+         f"{kv['slot']['max_concurrent_requests']}",
+         f"{kv['config']['pool_tokens']}-token pool as "
+         f"{kv['config']['slot_n_slots']} full-length slots; "
+         f"stranded@peak {kv['slot']['stranded_tokens_at_peak']} tok"),
+        ("kv_paged_max_concurrent",
+         f"{kv['paged']['max_concurrent_requests']}",
+         f"same bytes as {kv['config']['paged_usable_pages']} x "
+         f"{kv['config']['page_size']}-token pages; peak "
+         f"{kv['paged']['peak_pages_in_use']} pages, stranded@peak "
+         f"{kv['paged']['stranded_tokens_at_peak']} tok, "
+         f"{kv['paged']['preemptions']} preemptions "
+         f"(target: > slot concurrency)"),
     ]
     if csv:
         for r in rows:

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: paged KV-cache decode attention.
+
+vLLM-style PagedAttention adapted to the TPU dataflow (see
+kernels/sparse_ffn for the pattern): the per-row page tables and decode
+positions are scalar-prefetched, and each grid step's BlockSpec
+index_map redirects the K/V slab DMA to page ``table[b, j]`` of the
+pooled [n_pages, page_size, Kv, dh] buffers — the kernel never sees a
+gathered contiguous cache, so decode attention reads exactly the pages
+a row owns straight out of the shared pool.
+
+Grid: (B, max_pages), online softmax over the page axis with running
+max / sum / accumulator scratch in VMEM (flash-attention recurrence).
+Pages entirely past a row's decode position are skipped via pl.when (no
+MXU work; their DMA still lands — a production version wants DMA
+skipping, same note as the grouped-matmul kernel). GQA is computed
+grouped: q [H, dh] reshaped to [Kv, rep, dh] against the page's
+[psz, Kv, dh] keys.
+
+VMEM working set per step: q (1, H, dh), one K page + one V page
+(1, psz, Kv, dh), scratch m/l (H, 1) + acc (H, dh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, psz, kv_heads, scale,
+                         window):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[b]
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [H, dh]
+        H, dh = q.shape
+        rep = H // kv_heads
+        qg = q.reshape(kv_heads, rep, dh)
+        k = k_ref[0].astype(jnp.float32)                  # [psz, Kv, dh]
+        s = jnp.einsum("grd,tgd->grt", qg, k)             # [Kv, rep, psz]
+        kpos = j * psz + jax.lax.broadcasted_iota(
+            jnp.int32, (kv_heads, rep, psz), 2)
+        valid = kpos <= pos
+        if window:
+            valid = valid & (kpos > pos - window)
+        s = jnp.where(valid, s, NEG_INF).reshape(H, psz)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # [H, psz]
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                  # [psz, Kv, dh]
+        pv = jnp.einsum("grt,tgd->grd",
+                        p.reshape(kv_heads, rep, psz), v)
+        acc_scr[...] = acc_scr[...] * corr + pv.reshape(H, dh)
+        m_scr[...] = m_new
+
+    # skip pages whose first key is already past the decode position
+    # (the row's unallocated null-page tail) or fully behind the window
+    relevant = j * psz <= pos
+    if window:
+        relevant = relevant & ((j + 1) * psz - 1 > pos - window)
+    pl.when(relevant)(compute)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, page_table, positions, *,
+                           window: int | None = None,
+                           interpret: bool = False):
+    """q: [B, H, dh] (RoPE applied); k_pages/v_pages:
+    [n_pages, psz, Kv, dh]; page_table: [B, max_pages] int32 (page j of
+    row b holds that row's absolute positions [j*psz, (j+1)*psz), unused
+    tail entries point at the reserved null page 0); positions: [B]
+    int32 decode positions (inclusive — the just-written token).
+    Returns [B, H, dh] float32."""
+    B, H, dh = q.shape
+    n_pages, psz, Kv, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    assert page_table.shape[0] == B and positions.shape == (B,)
+    assert H % Kv == 0
+
+    grid = (B, max_pages)
+    kernel = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, psz=psz, kv_heads=Kv,
+                          scale=1.0 / (dh ** 0.5), window=window),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, dh), lambda b, j, tbl, pos: (b, 0, 0)),
+                pl.BlockSpec((1, psz, Kv, dh),
+                             lambda b, j, tbl, pos: (tbl[b, j], 0, 0, 0)),
+                pl.BlockSpec((1, psz, Kv, dh),
+                             lambda b, j, tbl, pos: (tbl[b, j], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, dh),
+                                   lambda b, j, tbl, pos: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    return kernel(jnp.asarray(page_table, jnp.int32),
+                  jnp.asarray(positions, jnp.int32), q, k_pages, v_pages)

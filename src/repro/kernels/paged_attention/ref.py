@@ -1,0 +1,94 @@
+"""Reference oracles for paged KV-cache decode attention.
+
+Two oracles, one contract:
+
+  * ``paged_attention_ref`` — the gather-based page-table path: gather
+    each row's pages into a contiguous [B, S, Kv, dh] view (S =
+    max_pages * page_size) and run the exact ragged-decode GQA core
+    (``repro.nn.attention.dot_attention`` with the kj <= position /
+    sliding-window masks). This IS the XLA serving path dispatched by
+    ops.py off-TPU, and because the gathered view holds bit-identical
+    values at every attended position, its output is bit-identical to
+    the slot-pool ``attend_decode_ragged`` — the paged-vs-slot greedy
+    equivalence the serving tests assert.
+  * ``paged_attention_dense_ref`` — the masked dense oracle: attention
+    over the RAW page pool with a per-(row, page, offset) validity mask
+    built from the page table, never materializing a gathered view.
+    Structurally independent of the gather path (no shared indexing
+    code), so the two cross-check each other and the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# the gather is shared with the prefill path (nn.attention): ONE
+# table-directed gather implementation backs the paged-vs-slot
+# bit-identity contract on both the block and decode sides
+from repro.nn.attention import NEG_INF, dot_attention, gather_pages
+
+
+def _decode_mask(positions, S, window):
+    """[B, 1, 1, 1, S] validity mask of the ragged decode step: key j of
+    row b is attended iff j <= positions[b] (and inside the window)."""
+    kj = jnp.arange(S)[None, :]
+    valid = kj <= positions[:, None]
+    if window:
+        valid = valid & (kj > positions[:, None] - window)
+    return valid[:, None, None, None, :]
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, positions, *,
+                        window=None):
+    """Gather-based page-table decode attention (the XLA serving path).
+
+    q: [B, H, dh] (RoPE already applied); k_pages/v_pages:
+    [n_pages, psz, Kv, dh]; page_table: [B, max_pages] int32 (unused
+    tail entries point at the reserved null page — never attended, the
+    position mask caps keys at positions[b]); positions: [B] int32
+    (each row's decode position, inclusive). Returns [B, H, dh]."""
+    kc = gather_pages(k_pages, page_table)
+    vc = gather_pages(v_pages, page_table)
+    mask = _decode_mask(positions, kc.shape[1], window)
+    o = dot_attention(q[:, None], kc, vc, mask)
+    return o[:, 0]
+
+
+def paged_attention_dense_ref(q, k_pages, v_pages, page_table, positions,
+                              *, window=None):
+    """Masked dense oracle: softmax over ALL (page, offset) pairs of the
+    raw pool, masked down to the pages each row's table actually owns.
+
+    Builds scores [B, Kv, rep, n_pages * psz] directly against the pool
+    and masks entry (p, t) of row b unless page_table[b, j] == p for the
+    j covering absolute position j*psz + t <= positions[b]. O(B * pool)
+    — validation only."""
+    B, mp = page_table.shape
+    n_pages, psz, Kv, dh = k_pages.shape
+    H = q.shape[1]
+    rep = H // Kv
+    qg = q.reshape(B, Kv, rep, dh).astype(jnp.float32)
+    kf = k_pages.reshape(n_pages * psz, Kv, dh)
+    vf = v_pages.reshape(n_pages * psz, Kv, dh)
+    scores = jnp.einsum("bgrk,sgk->bgrs", qg, kf.astype(jnp.float32))
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+
+    # owner[b, p] = absolute position of page p's first token in row b's
+    # sequence, or -1 when row b does not own page p
+    owner = jnp.full((B, n_pages), -1, jnp.int32)
+    rows = jnp.repeat(jnp.arange(B), mp)
+    owner = owner.at[rows, page_table.reshape(-1)].set(
+        jnp.tile(jnp.arange(mp, dtype=jnp.int32) * psz, B))
+    # the null page (id 0) is a write sink shared by every table's
+    # unallocated tail — nobody attends it
+    owner = owner.at[:, 0].set(-1)
+    base = jnp.repeat(owner, psz, axis=1)                  # [B, n_pages*psz]
+    kpos = base + jnp.tile(jnp.arange(psz, dtype=jnp.int32), n_pages)[None]
+    valid = (base >= 0) & (kpos <= positions[:, None])
+    if window:
+        valid = valid & (kpos > positions[:, None] - window)
+
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    o = jnp.einsum("bgrs,sgk->bgrk", probs, vf.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(v_pages.dtype)

@@ -19,6 +19,22 @@ churns under the batched prefill path:
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --stream --requests 16 --eos-id 7
+
+Paged KV cache (--kv-layout paged): requests hold page tables into a
+shared page heap instead of max-length slots — admission gates on free
+pages, allocation is lazy per prefill block, and an oversubscribed heap
+(--pool-pages) preempts the youngest request when dry:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --stream --requests 16 --kv-layout paged \
+      --page-size 16 --slots 8 --pool-pages 48
+
+Real-traffic trace replay (--trace): arrival-time / prompt-len /
+gen-len records (jsonl, see repro.serving.trace) drive the SAME stream
+loop as the Poisson simulator:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --stream --trace benchmarks/traces/sample_trace.jsonl
 """
 from __future__ import annotations
 
@@ -32,8 +48,9 @@ from repro.configs import ALL, get_config
 from repro.models.registry import get_model
 from repro.nn.param import init_params
 from repro.serving import (ContinuousBatchingScheduler, Request,
-                           StaticEngine, drive_stream)
+                           StaticEngine, drive_stream, load_trace)
 from repro.serving.runtime import make_runtime
+from repro.serving.trace import trace_stats
 from repro.training.checkpoint import load_checkpoint
 
 
@@ -70,32 +87,44 @@ def serve_static(cfg, params, args):
 
 
 def serve_stream(cfg, params, args):
-    """Poisson request stream through the continuous-batching scheduler."""
+    """Request stream (Poisson plan or trace replay) through the
+    continuous-batching scheduler."""
     rng = np.random.default_rng(args.seed)
     runtime = make_runtime(cfg, params)
     N = runtime.block_size
-    max_blocks = -(-args.prompt_len // N)
-    cache_len = max_blocks * N + max(args.max_new, 2)
+
+    if args.trace:
+        requests = load_trace(args.trace, cfg.vocab, seed=args.seed,
+                              eos_id=args.eos_id,
+                              temperature=args.temperature)
+        tstats = trace_stats(requests)
+        print(f"trace {args.trace}: {tstats}")
+        max_prompt = max(len(r.prompt) for r in requests)
+        cache_len = (-(-max_prompt // N) * N
+                     + max(max(r.max_new for r in requests), 2))
+    else:
+        prompts = make_prompts(cfg, args.requests, args.prompt_len, rng)
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
+                                             size=args.requests))
+        max_news = rng.integers(max(1, args.max_new // 4),
+                                args.max_new + 1, size=args.requests)
+        requests = [
+            Request(rid=i, prompt=prompts[i], max_new=int(max_news[i]),
+                    temperature=args.temperature, arrival_time=arrivals[i],
+                    eos_id=args.eos_id)
+            for i in range(args.requests)]
+        max_blocks = -(-args.prompt_len // N)
+        cache_len = max_blocks * N + max(args.max_new, 2)
+
     sched = ContinuousBatchingScheduler(
         runtime, n_slots=args.slots, cache_len=cache_len, seed=args.seed,
-        prefill_batch=args.prefill_batch)
+        prefill_batch=args.prefill_batch, page_size=args.page_size,
+        n_pages=args.pool_pages)
 
-    # warmup compiles both entry points through the scheduler's own pool
+    # warmup compiles every entry point through the scheduler's own pool
     counts0 = sched.warmup()
     check_compiles = None not in counts0.values()
     print(f"warmup done, jit compile counts: {counts0}")
-
-    # ---- Poisson arrival plan ----------------------------------------
-    prompts = make_prompts(cfg, args.requests, args.prompt_len, rng)
-    arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
-                                         size=args.requests))
-    max_news = rng.integers(max(1, args.max_new // 4),
-                            args.max_new + 1, size=args.requests)
-    requests = [
-        Request(rid=i, prompt=prompts[i], max_new=int(max_news[i]),
-                temperature=args.temperature, arrival_time=arrivals[i],
-                eos_id=args.eos_id)
-        for i in range(args.requests)]
 
     wall = drive_stream(sched, requests)
 
@@ -107,8 +136,9 @@ def serve_stream(cfg, params, args):
     outs = sched.finished
     ttfts = np.array([o.ttft_seconds for o in outs.values()])
     gen = sum(len(o.tokens) for o in outs.values())
+    offered = tstats["offered_rate_req_s"] if args.trace else args.rate
     print(f"served {len(outs)} requests in {wall:.2f}s wall "
-          f"({args.rate:.1f} req/s offered)")
+          f"({offered:.1f} req/s offered)")
     print(f"TTFT p50 {np.percentile(ttfts, 50)*1e3:8.1f} ms | "
           f"p99 {np.percentile(ttfts, 99)*1e3:8.1f} ms")
     print(f"throughput {gen / wall:8.1f} generated tok/s "
@@ -116,6 +146,14 @@ def serve_stream(cfg, params, args):
     reuse = max(0, sched.pool.total_acquires - args.slots)
     print(f"slots: {args.slots} | max in use {sched.pool.max_in_use} | "
           f"acquires {sched.pool.total_acquires} (slot reuse x{reuse})")
+    if sched.paged:
+        pool = sched.pool
+        print(f"paged KV: {pool.n_pages - 1} usable pages x "
+              f"{pool.page_size} tok | peak in use "
+              f"{pool.max_pages_in_use} | allocs "
+              f"{pool.total_page_allocs} / frees {pool.total_page_frees} "
+              f"| stranded@peak {pool.stranded_tokens_at_peak} tok | "
+              f"preemptions {sched.n_preemptions}")
     print(f"ticks {sched.n_ticks} | prefill blocks "
           f"{sched.n_prefill_blocks} in {sched.n_prefill_ticks} prefill "
           f"ticks (P<={sched.prefill_batch}) | decode steps "
@@ -155,6 +193,24 @@ def main():
                    help="stream mode: requests stop at this token "
                         "mid-generation, freeing their slot early "
                         "(EOS admission-churn workload)")
+    p.add_argument("--kv-layout", choices=("slot", "paged"), default=None,
+                   help="KV cache layout: one max-length slot per "
+                        "request (default) or block-granular paged "
+                        "allocation (PagedKVPool)")
+    p.add_argument("--page-size", type=int, default=None,
+                   help="paged layout: tokens per KV page (default "
+                        "cfg.kv_page_size, then the prefill block size; "
+                        "must divide the block size)")
+    p.add_argument("--pool-pages", type=int, default=None,
+                   help="paged layout: total heap pages incl. the "
+                        "reserved null page (default: full backing — "
+                        "smaller values oversubscribe and exercise "
+                        "preemption)")
+    p.add_argument("--trace", default=None,
+                   help="stream mode: replay a jsonl arrival trace "
+                        "(see repro.serving.trace) instead of the "
+                        "Poisson plan; --requests/--rate/--prompt-len/"
+                        "--max-new are ignored")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
     if args.max_new < 1:
@@ -165,6 +221,10 @@ def main():
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.dense:
         cfg = cfg.with_ff(enabled=False)
+    if args.kv_layout:
+        cfg = cfg.with_(kv_layout=args.kv_layout)
+    if args.trace and not args.stream:
+        p.error("--trace requires --stream")
     params = build_params(cfg, args.checkpoint)
     if args.stream:
         serve_stream(cfg, params, args)

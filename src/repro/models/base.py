@@ -81,6 +81,14 @@ class ModelConfig:
     attn_chunk: int = 0            # >0: online-softmax chunked attention
     fused_prefill: bool = False    # parallel-block prefill (beyond-paper)
     shardmap_ffn: bool = False     # shard_map tile-sparse FFN (local gather)
+    # --- serving KV-cache layout (serving/page_pool.py) ---
+    # "slot": one max-cache_len slot per request (KVSlotPool baseline);
+    # "paged": block-granular PagedKVPool — requests hold page tables
+    # into a shared fixed pool of [page_size]-token pages, grown lazily
+    # per prefill block / decode token and released page-granularly
+    kv_layout: str = "slot"
+    kv_page_size: int = 0          # tokens per KV page (0 -> ff.block_size);
+                                   # must divide ff.block_size
     # --- numerics / misc ---
     param_dtype: str = "float32"
     optimizer: str = "adamw"       # adamw | adafactor

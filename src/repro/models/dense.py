@@ -182,7 +182,8 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
 
 def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
                    is_dense=None, lengths=None, active=None,
-                   shards: int = 1, k_tiles=None, mesh=None):
+                   page_tables=None, shards: int = 1, k_tiles=None,
+                   mesh=None):
     """One N-token FastForward block of EACH of P distinct requests, at
     per-row sequence offsets — the batched schedulable prefill unit of
     the continuous-batching runtime (serving/runtime.py
@@ -196,11 +197,18 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
     PER SEQUENCE (rows mix dense and sparse within one call, see
     FF.ff_blocks_sparse); lengths [P] true prompt lengths (right-pad
     masking of the final partial block). active: optional [P] bool —
-    accepted for hook uniformity with the MoE twin; dense rows are
-    mutually independent, so inactive padding rows just compute garbage
-    that the RUNTIME discards at scatter-back.
+    in the slot layout dense rows are mutually independent, so inactive
+    padding rows just compute garbage that the RUNTIME discards at
+    scatter-back; the paged layout uses it to mask page writes.
+
+    page_tables: optional [P, max_pages] int32 — switches to the PAGED
+    KV layout: cache leaves are the whole page pool
+    [L, n_pages, psz, Kv, dh], each row's block K/V scatters onto the
+    pages its table owns, and attention gathers the table-mapped
+    contiguous view (nn/attention paged variants; bit-identical math).
     Returns (cache, hidden [P, N, D]) with hidden pre-final-norm."""
-    del active  # rows are independent in the dense family
+    if page_tables is None:
+        del active  # rows are independent in the dense family
     ff = cfg.ff
     if k_tiles is None:
         k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
@@ -213,11 +221,21 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
         positions = pos0s[:, None] + jnp.arange(N)[None, :]
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
-        kc, vc = A.write_kv_rows(kc, vc, k_new, v_new, pos0s)
-        h = A.attend_block_rows(lp["attn"], xn, kc, vc, pos0s,
-                                window=cfg.sliding_window,
-                                rope_theta=cfg.rope_theta,
-                                lengths=lengths)
+        if page_tables is None:
+            kc, vc = A.write_kv_rows(kc, vc, k_new, v_new, pos0s)
+            h = A.attend_block_rows(lp["attn"], xn, kc, vc, pos0s,
+                                    window=cfg.sliding_window,
+                                    rope_theta=cfg.rope_theta,
+                                    lengths=lengths)
+        else:
+            kc, vc = A.write_kv_rows_paged(kc, vc, k_new, v_new,
+                                           page_tables, pos0s,
+                                           active=active)
+            h = A.attend_block_rows_paged(lp["attn"], xn, kc, vc,
+                                          page_tables, pos0s,
+                                          window=cfg.sliding_window,
+                                          rope_theta=cfg.rope_theta,
+                                          lengths=lengths)
         x = x + h
         xn2 = apply_norm(cfg, lp["ln2"], x)
         if ff.enabled:
@@ -351,14 +369,18 @@ def prefill_fused(params, cfg: ModelConfig, batch, cache, shards: int = 1,
 
 def decode_step(params, cfg: ModelConfig, token, cache, position,
                 shards: int = 1, window: Optional[int] = None,
-                active=None):
+                active=None, page_table=None):
     """token: [B] int32; cache from init_cache; position: scalar int32
     OR [B] int32 for ragged batches (per-sequence decode positions).
     window: ring-buffer size when the cache is a sliding window.
     active: optional [B] bool (ragged path only) — rows with
     active[b] == False never write their KV (their logits are garbage
     and must be ignored); used by the serving slot pool so one
-    fixed-capacity jitted step serves a churning request set."""
+    fixed-capacity jitted step serves a churning request set.
+    page_table: optional [B, max_pages] int32 — paged KV layout (cache
+    leaves [L, n_pages, psz, Kv, dh]): the token writes into the page
+    covering its position and attention indexes the pool through the
+    table (kernels/paged_attention dispatch). Implies ragged."""
     ff = cfg.ff
     B = token.shape[0]
     ragged = jnp.ndim(position) == 1
@@ -373,7 +395,14 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
         xn = apply_norm(cfg, lp["ln1"], x)
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
-        if ragged:
+        if page_table is not None:
+            kc, vc = A.write_kv_tok_paged(kc, vc, k_new, v_new,
+                                          page_table, position,
+                                          active=active)
+            h = A.attend_decode_ragged_paged(
+                lp["attn"], xn, kc, vc, page_table, position,
+                window=window, rope_theta=cfg.rope_theta)
+        elif ragged:
             # full-length cache: `window` is an attention mask here, not
             # a ring-buffer size (writes stay at absolute positions)
             kc, vc = A.write_kv_tok(kc, vc, k_new, v_new, position,

@@ -333,7 +333,7 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
 
 def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
                    is_dense=None, lengths=None, active=None,
-                   shards: int = 1, k_tiles=None):
+                   page_tables=None, shards: int = 1, k_tiles=None):
     """Batched per-row-offset block prefill (MoE twin of
     repro.models.dense.prefill_blocks): one N-token block of EACH of P
     distinct requests per call. tok_blks [P, N]; cache leaves
@@ -344,7 +344,12 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
     dropless dispatch's sentinel group (zero group length), so they
     neither receive routed output nor perturb live rows, and they are
     excluded from the router's load-balance statistics. Their KV
-    writes are discarded by the runtime at scatter-back.
+    writes are discarded by the runtime at scatter-back (slot layout)
+    or masked into null-page self-copies (paged layout).
+
+    page_tables: optional [P, max_pages] int32 — paged KV layout: cache
+    leaves are the whole page pool [L, n_pages, psz, Kv, dh], written
+    and attended through the tables (see the dense twin).
     Returns (cache, hidden [P, N, D]) pre-final-norm."""
     ff = cfg.ff
     if k_tiles is None:
@@ -360,11 +365,21 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
         positions = pos0s[:, None] + jnp.arange(N)[None, :]
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
-        kc, vc = A.write_kv_rows(kc, vc, k_new, v_new, pos0s)
-        h = A.attend_block_rows(lp["attn"], xn, kc, vc, pos0s,
-                                window=cfg.sliding_window,
-                                rope_theta=cfg.rope_theta,
-                                lengths=lengths)
+        if page_tables is None:
+            kc, vc = A.write_kv_rows(kc, vc, k_new, v_new, pos0s)
+            h = A.attend_block_rows(lp["attn"], xn, kc, vc, pos0s,
+                                    window=cfg.sliding_window,
+                                    rope_theta=cfg.rope_theta,
+                                    lengths=lengths)
+        else:
+            kc, vc = A.write_kv_rows_paged(kc, vc, k_new, v_new,
+                                           page_tables, pos0s,
+                                           active=active)
+            h = A.attend_block_rows_paged(lp["attn"], xn, kc, vc,
+                                          page_tables, pos0s,
+                                          window=cfg.sliding_window,
+                                          rope_theta=cfg.rope_theta,
+                                          lengths=lengths)
         x = x + h
         xn2 = D.apply_norm(cfg, lp["ln2"], x)
         y, _ = moe_block(lp["moe"], cfg, xn2, mode="block",
@@ -414,9 +429,11 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, position,
-                shards: int = 1, window=None, active=None):
+                shards: int = 1, window=None, active=None,
+                page_table=None):
     """position: scalar int32 OR [B] int32 (ragged per-sequence decode);
-    active: optional [B] bool mask for the ragged path (see
+    active: optional [B] bool mask for the ragged path; page_table:
+    optional [B, max_pages] int32 for the paged KV layout (see
     repro.models.dense.decode_step)."""
     ff = cfg.ff
     B = token.shape[0]
@@ -434,7 +451,14 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
         xn = D.apply_norm(cfg, lp["ln1"], x)
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
-        if ragged:
+        if page_table is not None:
+            kc, vc = A.write_kv_tok_paged(kc, vc, k_new, v_new,
+                                          page_table, position,
+                                          active=active)
+            h = A.attend_decode_ragged_paged(
+                lp["attn"], xn, kc, vc, page_table, position,
+                window=window, rope_theta=cfg.rope_theta)
+        elif ragged:
             kc, vc = A.write_kv_tok(kc, vc, k_new, v_new, position,
                                     active=active)
             h = A.attend_decode_ragged(lp["attn"], xn, kc, vc, position,

@@ -304,6 +304,134 @@ def attend_decode_ragged(params, x_tok, k_cache, v_cache, positions, *,
     return output_proj(params, o)
 
 
+# --------------------------------------------------- paged KV (page pool)
+#
+# The paged layout replaces each request's contiguous [S, Kv, dh] slot
+# rows with a page table into a pooled [n_pages, page_size, Kv, dh]
+# buffer: table entry j of a row holds the page storing that row's
+# absolute positions [j*psz, (j+1)*psz). Unallocated tail entries point
+# at the reserved null page 0 — a shared write sink that no mask ever
+# lets a query attend. Page tables are TRACED values (fixed
+# [B, max_pages] int32 shapes), so churning tables never recompile.
+
+
+def gather_pages(pages, page_table):
+    """pages: [n_pages, psz, ...]; page_table: [B, max_pages] int32 ->
+    contiguous [B, max_pages * psz, ...] (page j of row b lands at
+    positions [j*psz, (j+1)*psz)). The ONE table-directed gather both
+    the prefill path and the decode oracle build on — the paged-vs-slot
+    bit-identity contract hangs off this single implementation."""
+    B, mp = page_table.shape
+    psz = pages.shape[1]
+    flat = jnp.take(pages, page_table.reshape(-1), axis=0)
+    return flat.reshape((B, mp * psz) + pages.shape[2:])
+
+
+def gather_kv_pages(k_pages, v_pages, page_table):
+    """Gather each row's pages into contiguous [B, max_pages*psz, Kv, dh]
+    views (the XLA page-table attention path: the gathered view holds
+    bit-identical values to a slot-pool cache row at every attended
+    position, so downstream attention math is unchanged)."""
+    return (gather_pages(k_pages, page_table),
+            gather_pages(v_pages, page_table))
+
+
+def write_kv_rows_paged(k_pages, v_pages, k_new, v_new, page_table, pos0s,
+                        active=None):
+    """Per-row paged block write: row b's [N] new K/V land on the
+    N/psz pages its table maps for [pos0s[b], pos0s[b]+N). The paged
+    twin of `write_kv_rows` — but it scatters straight into the POOL
+    (pages are exclusively owned, so live rows never collide), instead
+    of updating a gathered per-row view.
+
+    k_new/v_new: [B, N, Kv, dh]; page_table: [B, max_pages] int32;
+    pos0s: [B] int32 block offsets (block-aligned, so psz | pos0).
+    active: optional [B] bool — inactive pad rows carry all-null tables
+    and write their target pages' own content back (a deterministic
+    self-copy: every pad row writes the identical null-page payload).
+    Requires psz | N."""
+    B, N = k_new.shape[:2]
+    psz = k_pages.shape[1]
+    npb = N // psz                        # pages written per block
+    tpos = pos0s[:, None] // psz + jnp.arange(npb)[None, :]     # [B, npb]
+    pids = jnp.take_along_axis(page_table, tpos, axis=1)        # [B, npb]
+    k_w = k_new.astype(k_pages.dtype).reshape((B, npb, psz)
+                                              + k_new.shape[2:])
+    v_w = v_new.astype(v_pages.dtype).reshape((B, npb, psz)
+                                              + v_new.shape[2:])
+    if active is not None:
+        sel = active[:, None, None, None, None]
+        k_w = jnp.where(sel, k_w, k_pages[pids])
+        v_w = jnp.where(sel, v_w, v_pages[pids])
+    flat = pids.reshape(-1)
+    k_pages = k_pages.at[flat].set(k_w.reshape((B * npb, psz)
+                                               + k_new.shape[2:]))
+    v_pages = v_pages.at[flat].set(v_w.reshape((B * npb, psz)
+                                               + v_new.shape[2:]))
+    return k_pages, v_pages
+
+
+def write_kv_block_paged(k_pages, v_pages, k_new, v_new, page_table, pos0):
+    """Single-request paged block write (scalar pos0, table [max_pages])
+    — the paged twin of `write_kv_block`, a width-1 `write_kv_rows_paged`."""
+    return write_kv_rows_paged(k_pages, v_pages, k_new, v_new,
+                               page_table[None], jnp.reshape(pos0, (1,)))
+
+
+def write_kv_tok_paged(k_pages, v_pages, k_new, v_new, page_table,
+                       positions, active=None):
+    """Per-sequence paged single-token write (ragged decode): row b's
+    token lands at offset positions[b] % psz of page
+    table[b, positions[b] // psz]. active: optional [B] bool — inactive
+    rows write their target cell's own content back (prefilling /
+    freed slots ride along in the fixed decode batch; their tables map
+    distinct pages or the shared null page, so self-copies never race a
+    live write)."""
+    psz = k_pages.shape[1]
+    pid = jnp.take_along_axis(page_table, (positions // psz)[:, None],
+                              axis=1)[:, 0]                     # [B]
+    off = positions % psz
+    k_w = k_new[:, 0].astype(k_pages.dtype)
+    v_w = v_new[:, 0].astype(v_pages.dtype)
+    if active is not None:
+        sel = active[:, None, None]
+        k_w = jnp.where(sel, k_w, k_pages[pid, off])
+        v_w = jnp.where(sel, v_w, v_pages[pid, off])
+    k_pages = k_pages.at[pid, off].set(k_w)
+    v_pages = v_pages.at[pid, off].set(v_w)
+    return k_pages, v_pages
+
+
+def attend_block_rows_paged(params, x_block, k_pages, v_pages, page_table,
+                            pos0s, *, window=None, rope_theta=10000.0,
+                            use_rope=True, lengths=None):
+    """Paged twin of `attend_block_rows`: per-row-offset blockwise
+    prefill attention indexing the KV pool through page tables. The
+    gathered contiguous views feed the identical masked GQA core, so
+    output is bit-identical to the slot layout."""
+    kc, vc = gather_kv_pages(k_pages, v_pages, page_table)
+    return attend_block_rows(params, x_block, kc, vc, pos0s,
+                             window=window, rope_theta=rope_theta,
+                             use_rope=use_rope, lengths=lengths)
+
+
+def attend_decode_ragged_paged(params, x_tok, k_pages, v_pages, page_table,
+                               positions, *, window=None,
+                               rope_theta=10000.0, use_rope=True,
+                               use_kernel=None):
+    """Paged twin of `attend_decode_ragged`, dispatched through
+    kernels/paged_attention: TPU runs the Pallas kernel (scalar-
+    prefetched page ids, no gathered copy), XLA runs the gather-based
+    page-table path (bit-identical to the slot layout)."""
+    from repro.kernels.paged_attention import ops as PA
+    theta = rope_theta if use_rope else None
+    q = project_q(params, x_tok, positions[:, None], theta)
+    o = PA.paged_attention_op(q[:, 0], k_pages, v_pages, page_table,
+                              positions, window=window,
+                              use_kernel=use_kernel)
+    return output_proj(params, o[:, None].astype(v_pages.dtype))
+
+
 def write_kv_ring(k_cache, v_cache, k_new, v_new, position, window: int):
     """Single-token ring-buffer write at position % window."""
     slot = jnp.mod(position, window)

@@ -5,20 +5,29 @@ Layering (see ROADMAP.md "Serving architecture"):
   engine.Engine                 user-facing API (generate + scheduler())
     scheduler.ContinuousBatchingScheduler
                                 admit / chunked prefill / batched decode
+                                (paged: page-gated admission, lazy
+                                per-block allocation, youngest-first
+                                preemption)
       cache_pool.KVSlotPool     slot reuse, free list, per-slot lengths
+                                (cfg.kv_layout="slot", the baseline)
+      page_pool.PagedKVPool     block-granular page heap + per-request
+                                page tables (cfg.kv_layout="paged")
       runtime.ModelRuntime      jitted prefill_block / decode_step per
-                                model family (dense, MoE)
+                                model family (dense, MoE) + paged twins
+      trace.load_trace          real-traffic jsonl trace replay
 """
 from repro.serving.cache_pool import KVSlotPool
 from repro.serving.engine import Engine, GenerationResult, StaticEngine
+from repro.serving.page_pool import PagedKVPool
 from repro.serving.runtime import (DenseRuntime, ModelRuntime, MoeRuntime,
                                    make_runtime)
 from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
                                      RequestOutput, drive_stream)
+from repro.serving.trace import load_trace
 
 __all__ = [
     "ContinuousBatchingScheduler", "DenseRuntime", "Engine",
     "GenerationResult", "KVSlotPool", "ModelRuntime", "MoeRuntime",
-    "Request", "RequestOutput", "StaticEngine", "drive_stream",
-    "make_runtime",
+    "PagedKVPool", "Request", "RequestOutput", "StaticEngine",
+    "drive_stream", "load_trace", "make_runtime",
 ]

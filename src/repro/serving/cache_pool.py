@@ -10,8 +10,21 @@ occupant's prefill. Because the buffer shapes never change, the jitted
 decode step compiled for the pool serves every future request mix with
 zero recompilation.
 
+This is the default baseline layout (`cfg.kv_layout = "slot"`); the
+block-granular `repro.serving.page_pool.PagedKVPool` is its
+fragmentation-free counterpart and shares the acquire/release/fits/
+note_tick surface so the scheduler can drive either.
+
 Host-side metadata (free list, per-slot lengths, reuse stats) lives in
 plain Python/numpy; only the KV pytree is on device.
+
+`release` is IDEMPOTENT per request: scheduler paths that can both try
+to free a slot within one tick (EOS early-stop sampled off prefill
+logits, preemption in the paged twin) previously double-counted
+`total_releases` and could re-append a slot already on the free list —
+now the second release is a no-op and `total_releases ==
+total_acquires` holds after any churny stream (regression-pinned in
+tests/test_serving.py).
 """
 from __future__ import annotations
 
@@ -24,17 +37,21 @@ import numpy as np
 class KVSlotPool:
     """Fixed-capacity pool of per-request KV cache slots."""
 
+    layout = "slot"
+
     def __init__(self, cache, n_slots: int, cache_len: int):
         self.cache = cache                # device pytree, slot axis = 1
         self.n_slots = n_slots
         self.cache_len = cache_len
         self._free = deque(range(n_slots))
+        self._held = np.zeros(n_slots, bool)
         # tokens currently materialized in each slot (prompt + generated)
         self.lengths = np.zeros(n_slots, np.int64)
         # stats (exercised by tests: reuse after completion)
         self.total_acquires = 0
         self.total_releases = 0
         self.max_in_use = 0
+        self.stranded_tokens_at_peak = 0
 
     @classmethod
     def create(cls, runtime, n_slots: int, cache_len: int) -> "KVSlotPool":
@@ -56,6 +73,7 @@ class KVSlotPool:
         if not self._free:
             return None
         slot = self._free.popleft()
+        self._held[slot] = True
         self.lengths[slot] = 0
         self.total_acquires += 1
         self.max_in_use = max(self.max_in_use, self.n_in_use)
@@ -63,11 +81,14 @@ class KVSlotPool:
 
     def release(self, slot: int) -> None:
         """Return a slot to the free list. The device KV rows are left
-        as-is; the next occupant's prefill overwrites them."""
-        if slot in self._free:
-            raise ValueError(f"slot {slot} is already free")
+        as-is; the next occupant's prefill overwrites them. Idempotent:
+        releasing an already-free slot is a no-op (never a stats
+        double-count or a duplicate free-list entry)."""
         if not 0 <= slot < self.n_slots:
             raise ValueError(f"slot {slot} out of range")
+        if not self._held[slot]:
+            return
+        self._held[slot] = False
         self.lengths[slot] = 0
         self._free.append(slot)
         self.total_releases += 1
@@ -76,3 +97,20 @@ class KVSlotPool:
         """Whether a request needing n_tokens cache positions can ever
         be served by this pool."""
         return n_tokens <= self.cache_len
+
+    # ------------------------------------------------------------ stats
+
+    def stranded_tokens(self) -> int:
+        """Reserved-but-dead token positions across held slots: every
+        occupant pins a full cache_len row however short it is — the
+        fragmentation the paged layout removes."""
+        held = self._held
+        return int((self.cache_len - self.lengths[held]).sum())
+
+    def note_tick(self) -> None:
+        """Scheduler hook, called once per tick: refresh the occupancy
+        peak and record stranded bytes at that peak (compared
+        layout-vs-layout by benchmarks/continuous_batching.py)."""
+        if self.n_in_use >= self.max_in_use:
+            self.max_in_use = self.n_in_use
+            self.stranded_tokens_at_peak = self.stranded_tokens()

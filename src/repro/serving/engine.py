@@ -45,7 +45,9 @@ class Engine:
     """
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 2048,
-                 n_slots: Optional[int] = None, prefill_batch: int = 4):
+                 n_slots: Optional[int] = None, prefill_batch: int = 4,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None):
         if cfg.arch not in ("dense", "vlm", "moe"):
             raise ValueError("Engine drives dense-family and MoE models; "
                              "use the model modules directly for other "
@@ -55,13 +57,19 @@ class Engine:
         self.max_len = max_len
         self.n_slots = n_slots
         self.prefill_batch = prefill_batch
+        # paged KV layout knobs (cfg.kv_layout == "paged"): page_size
+        # defaults to cfg.kv_page_size (then the block size), n_pages
+        # to full backing — pass a smaller heap to oversubscribe
+        self.page_size = page_size
+        self.n_pages = n_pages
         self.runtime = make_runtime(cfg, params)
 
     def scheduler(self, n_slots: int, cache_len: int, seed: int = 0
                   ) -> ContinuousBatchingScheduler:
         return ContinuousBatchingScheduler(
             self.runtime, n_slots=n_slots, cache_len=cache_len, seed=seed,
-            prefill_batch=self.prefill_batch)
+            prefill_batch=self.prefill_batch, page_size=self.page_size,
+            n_pages=self.n_pages)
 
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
                  temperature: float = 0.0, seed: int = 0

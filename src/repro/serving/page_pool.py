@@ -1,0 +1,194 @@
+"""Paged KV cache pool: block-granular allocation over a shared page
+heap (the serving memory-side counterpart of the compute-side batched
+prefill — vLLM-style PagedAttention adapted to the fixed-shape jitted
+runtime).
+
+One fixed device allocation ([n_layers, n_pages, page_size, n_kv_heads,
+head_dim] per K/V) backs every request: instead of reserving a
+max-cache_len slot up front (KVSlotPool — a short request strands the
+same memory as a 16K-token one), a request holds a PAGE TABLE — a row
+of the host-side [n_slots, max_pages] int32 array — and claims pages
+from the free heap lazily, one prefill block / decode token at a time.
+On completion (or EOS early-stop, or preemption) its pages return to
+the heap individually, so the device bytes a request pins track its
+LIVE length, not its worst case.
+
+Invariants the jitted runtime relies on:
+
+  * page 0 is the reserved NULL page: never allocated, every
+    unallocated table entry points at it, masked writes self-copy into
+    it, and no attention mask ever reaches it — it is a shared write
+    sink, not data;
+  * a page is owned by at most one slot, so page-table-directed
+    scatters from distinct live rows are write-disjoint;
+  * buffer shapes ([n_pages, psz, Kv, dh] pools, [*, max_pages] tables)
+    are fixed — tables/positions are traced values, so a churning
+    request mix (and preemption churn) reuses one executable per entry
+    point: the zero-recompilation invariant survives the paged layout.
+
+Host-side metadata (page heap, tables, lengths, stats) lives in plain
+Python/numpy; only the KV pytree is on device. `release` is idempotent
+per slot (same hardening as KVSlotPool): scheduler paths that free a
+request mid-tick (EOS early-stop, preemption) cannot double-count
+stats or double-free pages.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+class PagedKVPool:
+    """Fixed page heap + per-slot page tables for a churning request set."""
+
+    layout = "paged"
+
+    def __init__(self, cache, n_pages: int, page_size: int, n_slots: int,
+                 max_pages: int):
+        if n_pages < 2:
+            raise ValueError("need at least one usable page beyond the "
+                             "reserved null page 0")
+        self.cache = cache            # device pytree, page axis = 1
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        self.max_pages = max_pages
+        self.cache_len = max_pages * page_size
+        self._free_slots = deque(range(n_slots))
+        self._free_pages = deque(range(1, n_pages))   # 0 = null page
+        self._held = np.zeros(n_slots, bool)
+        # table entry j of slot s: page holding s's positions
+        # [j*psz, (j+1)*psz); 0 (null) where unallocated
+        self.page_table = np.zeros((n_slots, max_pages), np.int32)
+        self.allocated = np.zeros(n_slots, np.int64)  # pages per slot
+        self.lengths = np.zeros(n_slots, np.int64)    # live tokens per slot
+        # stats (tests + benchmarks/continuous_batching.py kv_memory)
+        self.total_acquires = 0
+        self.total_releases = 0
+        self.max_in_use = 0
+        self.total_page_allocs = 0
+        self.total_page_frees = 0
+        self.max_pages_in_use = 0
+        self.stranded_tokens_at_peak = 0
+
+    @classmethod
+    def create(cls, runtime, n_pages: int, page_size: int, n_slots: int,
+               max_pages: int) -> "PagedKVPool":
+        return cls(runtime.init_cache_paged(n_pages, page_size), n_pages,
+                   page_size, n_slots, max_pages)
+
+    # ------------------------------------------------------------ slots
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_in_use(self) -> int:
+        return self.n_slots - len(self._free_slots)
+
+    @property
+    def n_free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def n_pages_in_use(self) -> int:
+        return (self.n_pages - 1) - len(self._free_pages)
+
+    def acquire(self) -> Optional[int]:
+        """Claim a free slot (its page table starts empty — admission
+        gating on free PAGES is the scheduler's policy, not the
+        pool's), or None when no slot is free."""
+        if not self._free_slots:
+            return None
+        slot = self._free_slots.popleft()
+        self._held[slot] = True
+        self.lengths[slot] = 0
+        self.total_acquires += 1
+        self.max_in_use = max(self.max_in_use, self.n_in_use)
+        return slot
+
+    def release(self, slot: int) -> None:
+        """Return a slot AND all its pages. Idempotent per request: a
+        second release of an already-free slot is a no-op (EOS
+        early-stop and preemption can both try to free mid-tick)."""
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if not self._held[slot]:
+            return
+        self._held[slot] = False
+        n = int(self.allocated[slot])
+        for j in range(n):
+            self._free_pages.append(int(self.page_table[slot, j]))
+        self.total_page_frees += n
+        self.page_table[slot, :] = 0
+        self.allocated[slot] = 0
+        self.lengths[slot] = 0
+        self._free_slots.append(slot)
+        self.total_releases += 1
+
+    # ------------------------------------------------------------ pages
+
+    def ensure(self, slot: int, n_total: int) -> bool:
+        """Grow slot's table to cover n_total pages (lazy per-block /
+        per-token allocation). Returns False — allocating NOTHING — when
+        the heap cannot cover the growth (the scheduler then preempts or
+        skips); True when the slot already covers n_total or after
+        allocating the delta."""
+        if not self._held[slot]:
+            raise ValueError(f"slot {slot} is not held")
+        if n_total > self.max_pages:
+            raise ValueError(f"slot {slot}: {n_total} pages exceeds the "
+                             f"table width {self.max_pages}")
+        delta = n_total - int(self.allocated[slot])
+        if delta <= 0:
+            return True
+        if len(self._free_pages) < delta:
+            return False
+        base = int(self.allocated[slot])
+        for j in range(delta):
+            self.page_table[slot, base + j] = self._free_pages.popleft()
+        self.allocated[slot] = n_total
+        self.total_page_allocs += delta
+        self.max_pages_in_use = max(self.max_pages_in_use,
+                                    self.n_pages_in_use)
+        return True
+
+    def covers(self, slot: int, position: int) -> bool:
+        """Whether slot's table already maps token `position`."""
+        return position < int(self.allocated[slot]) * self.page_size
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def fits(self, n_tokens: int) -> bool:
+        """Whether a request needing n_tokens cache positions can ever
+        be served: its table must hold them and the heap must be able
+        to back them all at once (the oldest request can preempt every
+        younger one, so heap capacity == worst-case guarantee)."""
+        return (n_tokens <= self.cache_len
+                and self.pages_for(n_tokens) <= self.n_pages - 1)
+
+    # ------------------------------------------------------------ stats
+
+    def stranded_tokens(self) -> int:
+        """Allocated-but-dead token positions across held slots (the
+        fragmentation the paged layout exists to shrink: a slot pool
+        strands cache_len - length per request, a page pool at most
+        page_size - 1 plus the lazily-unallocated tail of the current
+        page)."""
+        held = self._held
+        return int((self.allocated[held] * self.page_size
+                    - self.lengths[held]).sum())
+
+    def note_tick(self) -> None:
+        """Scheduler hook, called once per tick: refresh occupancy peaks
+        and record the stranded bytes at the page-occupancy peak (the
+        apples-to-apples fragmentation number the kv_memory benchmark
+        compares across layouts)."""
+        self.max_in_use = max(self.max_in_use, self.n_in_use)
+        if self.n_pages_in_use >= self.max_pages_in_use:
+            self.max_pages_in_use = self.n_pages_in_use
+            self.stranded_tokens_at_peak = self.stranded_tokens()

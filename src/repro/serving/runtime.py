@@ -17,6 +17,13 @@ touches model internals — it sees four operations:
   logits_at(hidden, lengths)      read logits at each row's last prompt
                                   token (static-batch path)
 
+  init_cache_paged / prefill_blocks_paged / decode_step_paged
+                                  paged-KV-layout twins (cfg.kv_layout
+                                  = "paged"): the cache is a shared
+                                  page pool and requests address it
+                                  through traced [*, max_pages] page
+                                  tables (serving/page_pool.py)
+
 Every operation is jitted once with fixed shapes — the prefill entries
 trace over (slot, pos0, is_dense, length, active) as *values* and P is
 a static batch width (inactive rows pad short ticks), so a churning
@@ -85,6 +92,30 @@ class ModelRuntime(Protocol):
         (logits [n_slots, V], greedy [n_slots] int32, cache)."""
         ...
 
+    def init_cache_paged(self, n_pages: int, page_size: int):
+        """Allocate the paged KV pool (leaves [L, n_pages, psz, Kv, dh];
+        page 0 reserved as the null page — see serving/page_pool.py)."""
+        ...
+
+    def prefill_blocks_paged(self, cache, tokens, page_tables, pos0s,
+                             is_dense, lengths, active):
+        """Paged-layout twin of `prefill_blocks`: cache is the WHOLE
+        page pool (no slot gather/scatter — each row's block K/V
+        scatters onto the pages its [P, max_pages] table owns, and
+        attention gathers the table-mapped view). Tables are traced
+        values, so churning tables/offsets reuse one executable per
+        width bucket — including width 1, which replaces the slot
+        layout's separate `prefill_block` entry."""
+        ...
+
+    def decode_step_paged(self, cache, tokens, page_table, positions,
+                          active):
+        """Paged-layout twin of `decode_step`: page_table is the full
+        [n_slots, max_pages] table array; each active row's token writes
+        into the page covering its position (kernels/paged_attention
+        dispatch on the read side)."""
+        ...
+
     def logits_at(self, hidden, lengths):
         """hidden: [B, T, D] pre-final-norm; lengths: [B]. -> [B, V]."""
         ...
@@ -111,6 +142,10 @@ class _JittedRuntime:
         self._prefill_blocks = jax.jit(self._prefill_blocks_impl,
                                        donate_argnums=(1,))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._prefill_blocks_paged = jax.jit(
+            self._prefill_blocks_paged_impl, donate_argnums=(1,))
+        self._decode_paged = jax.jit(self._decode_paged_impl,
+                                     donate_argnums=(1,))
         self._logits_at = jax.jit(self._logits_at_impl)
 
     # -- model hooks (overridable per family) -------------------------
@@ -134,6 +169,20 @@ class _JittedRuntime:
             params, self.cfg, tokens, cache, positions,
             shards=self.shards, window=self.cfg.sliding_window,
             active=active)
+
+    def _model_prefill_blocks_paged(self, params, tokens, cache, tables,
+                                    pos0s, is_dense, lengths, active):
+        return self.model.prefill_blocks(
+            params, self.cfg, tokens, cache, pos0s, is_dense=is_dense,
+            lengths=lengths, active=active, page_tables=tables,
+            shards=self.shards)
+
+    def _model_decode_step_paged(self, params, tokens, cache, table,
+                                 positions, active):
+        return self.model.decode_step(
+            params, self.cfg, tokens, cache, positions,
+            shards=self.shards, window=self.cfg.sliding_window,
+            active=active, page_table=table)
 
     # -- jitted impls --------------------------------------------------
 
@@ -192,6 +241,27 @@ class _JittedRuntime:
         # pulled to host when a request samples with temperature > 0)
         return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
+    def _prefill_blocks_paged_impl(self, params, cache, tokens, tables,
+                                   pos0s, is_dense, lengths, active):
+        # no slot gather/scatter: the whole page pool rides through the
+        # model, which scatters each row's block onto the pages its
+        # table owns (write-disjoint — pages are exclusively owned; pad
+        # rows carry all-null tables and self-copy the null page)
+        cache, hidden = self._model_prefill_blocks_paged(
+            params, tokens, cache, tables, pos0s, is_dense, lengths,
+            active)
+        idx = jnp.clip(lengths - 1 - pos0s, 0, hidden.shape[1] - 1)
+        h = jnp.take_along_axis(
+            hidden, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        h = self._final_norm(params, h)
+        return cache, L.unembed(params["lm_head"], h)
+
+    def _decode_paged_impl(self, params, cache, tokens, table, positions,
+                           active):
+        logits, cache = self._model_decode_step_paged(
+            params, tokens, cache, table, positions, active)
+        return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
     def _logits_at_impl(self, params, hidden, lengths):
         idx = jnp.clip(lengths - 1, 0, hidden.shape[1] - 1)
         h = jnp.take_along_axis(
@@ -228,6 +298,27 @@ class _JittedRuntime:
             jnp.asarray(positions, jnp.int32),
             jnp.asarray(active, bool))
 
+    def init_cache_paged(self, n_pages: int, page_size: int):
+        # same spec factory as the slot cache with (batch, cache_len) ->
+        # (n_pages, page_size): a page pool IS a slot pool whose "slots"
+        # are page_size long and table-composed per request
+        return self.model.init_cache(self.cfg, n_pages, page_size)
+
+    def prefill_blocks_paged(self, cache, tokens, page_tables, pos0s,
+                             is_dense, lengths, active):
+        return self._prefill_blocks_paged(
+            self.params, cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(page_tables, jnp.int32),
+            jnp.asarray(pos0s, jnp.int32), jnp.asarray(is_dense, bool),
+            jnp.asarray(lengths, jnp.int32), jnp.asarray(active, bool))
+
+    def decode_step_paged(self, cache, tokens, page_table, positions,
+                          active):
+        return self._decode_paged(
+            self.params, cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(page_table, jnp.int32),
+            jnp.asarray(positions, jnp.int32), jnp.asarray(active, bool))
+
     def logits_at(self, hidden, lengths):
         return self._logits_at(self.params, hidden,
                                jnp.asarray(lengths, jnp.int32))
@@ -243,6 +334,9 @@ class _JittedRuntime:
             "prefill_block": jit_cache_size(self._prefill_block),
             "prefill_blocks": jit_cache_size(self._prefill_blocks),
             "decode_step": jit_cache_size(self._decode),
+            "prefill_blocks_paged": jit_cache_size(
+                self._prefill_blocks_paged),
+            "decode_step_paged": jit_cache_size(self._decode_paged),
             "logits_at": jit_cache_size(self._logits_at),
         }
 
@@ -273,6 +367,14 @@ class DenseRuntime(_JittedRuntime):
             params, self.cfg, tokens, sub_cache, pos0s, is_dense=is_dense,
             lengths=lengths, active=active, shards=self.shards,
             mesh=self.mesh)
+
+    def _model_prefill_blocks_paged(self, params, tokens, cache, tables,
+                                    pos0s, is_dense, lengths, active):
+        from repro.models import dense
+        return dense.prefill_blocks(
+            params, self.cfg, tokens, cache, pos0s, is_dense=is_dense,
+            lengths=lengths, active=active, page_tables=tables,
+            shards=self.shards, mesh=self.mesh)
 
 
 class MoeRuntime(_JittedRuntime):

@@ -29,6 +29,20 @@ Requests carrying an `eos_id` finish the moment they emit it —
 mid-generation — and their slot returns to the free list on the same
 tick, so EOS-heavy streams churn admission under the batched prefill
 path (`n_eos_stops` counts early exits).
+
+KV layouts (cfg.kv_layout): with the default "slot" layout every
+admitted request reserves a full max-cache_len KVSlotPool slot. With
+"paged" the pool is a PagedKVPool page heap: ADMIT gates on free PAGES
+(enough for one prefill block), pages are allocated lazily — one block
+per prefill tick, one page at a time as decode crosses a page boundary
+— and when the heap runs dry the scheduler PREEMPTS the youngest
+request (release its pages, requeue it for re-prefill from scratch;
+greedy output is deterministic so the final tokens are unchanged, only
+its latency suffers — `n_preemptions` counts evictions). Only
+strictly-younger requests are ever evicted, so the oldest always makes
+progress and a stream that fits the heap per-request always drains.
+Page tables are traced values, so the paged entries compile once per
+width bucket exactly like the slot entries.
 """
 from __future__ import annotations
 
@@ -40,6 +54,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.serving.cache_pool import KVSlotPool
+from repro.serving.page_pool import PagedKVPool
 from repro.serving.runtime import ModelRuntime
 
 
@@ -68,6 +83,14 @@ class _ActiveState:
     slot: int
     seq: int                     # admission order (FIFO prefill)
     n_blocks: int
+    rng: np.random.Generator     # per-request sampling stream, seeded
+    #                              (scheduler seed, rid): a preempted
+    #                              request re-admits with a FRESH copy,
+    #                              so its re-run replays identical
+    #                              temperature draws — preemption is
+    #                              output-transparent for sampled
+    #                              requests too, and one request's
+    #                              draws never shift another's
     blocks_done: int = 0
     phase: str = "prefill"       # prefill | decode
     out: List[int] = dataclasses.field(default_factory=list)
@@ -83,9 +106,36 @@ class ContinuousBatchingScheduler:
     def __init__(self, runtime: ModelRuntime, n_slots: int = 8,
                  cache_len: int = 2048, seed: int = 0,
                  prefill_batch: int = 4, clock=time.perf_counter,
-                 sleep=time.sleep):
+                 sleep=time.sleep, page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None):
         self.runtime = runtime
-        self.pool = KVSlotPool.create(runtime, n_slots, cache_len)
+        layout = getattr(runtime.cfg, "kv_layout", "slot")
+        self.kv_layout = layout
+        self.paged = layout == "paged"
+        if self.paged:
+            psz = int(page_size or runtime.cfg.kv_page_size
+                      or runtime.block_size)
+            if runtime.block_size % psz:
+                raise ValueError(
+                    f"page_size={psz} must divide the prefill block size "
+                    f"{runtime.block_size} (a block scatters whole pages)")
+            max_pages = -(-cache_len // psz)
+            # page-align the per-request capacity so the gathered
+            # attention views keep one fixed [*, max_pages*psz] width
+            cache_len = max_pages * psz
+            if n_pages is None:
+                # default: full backing (every slot can reach max_pages
+                # simultaneously — no preemption) + the null page. Pass
+                # a smaller n_pages to oversubscribe the heap.
+                n_pages = n_slots * max_pages + 1
+            self.pool = PagedKVPool.create(runtime, n_pages, psz, n_slots,
+                                           max_pages)
+            self._npb = runtime.block_size // psz   # pages per block
+        elif layout == "slot":
+            self.pool = KVSlotPool.create(runtime, n_slots, cache_len)
+        else:
+            raise ValueError(f"unknown kv_layout={layout!r}; expected "
+                             f"'slot' or 'paged'")
         self.n_slots = n_slots
         self.cache_len = cache_len
         # max width of the batched prefill entry: up to this many
@@ -108,7 +158,7 @@ class ContinuousBatchingScheduler:
         # sleep: waiting on wall time for a delta measured on a fake
         # clock would block a deterministic stream test on real seconds.
         self.sleep = sleep
-        self._rng = np.random.default_rng(seed)
+        self.seed = seed
         self.queue: deque[Request] = deque()
         self.active: Dict[int, _ActiveState] = {}   # slot -> state
         self.finished: Dict[int, RequestOutput] = {}
@@ -119,6 +169,7 @@ class ContinuousBatchingScheduler:
         self.n_prefill_ticks = 0
         self.n_decode_steps = 0
         self.n_eos_stops = 0
+        self.n_preemptions = 0
 
     # --------------------------------------------------------- submit
 
@@ -126,6 +177,14 @@ class ContinuousBatchingScheduler:
         need = max(self._n_blocks(req) * self.runtime.block_size,
                    len(req.prompt) + req.max_new)
         if not self.pool.fits(need):
+            if self.paged:
+                raise ValueError(
+                    f"request {req.rid} needs {need} cache positions "
+                    f"({self.pool.pages_for(need)} pages) but the paged "
+                    f"pool backs at most {self.pool.n_pages - 1} usable "
+                    f"pages of {self.pool.page_size} tokens per request "
+                    f"(table width {self.pool.max_pages} pages) — grow "
+                    f"n_pages/--pool-pages or cache_len")
             raise ValueError(
                 f"request {req.rid} needs {need} cache positions but the "
                 f"pool's cache_len is {self.cache_len}")
@@ -154,7 +213,13 @@ class ContinuousBatchingScheduler:
         self.n_ticks += 1
         self._admit()
         emitted = self._prefill_blocks()
+        # sample occupancy/stranding stats mid-tick too: short requests
+        # can admit, prefill, decode, and release within ONE tick, and
+        # the peak the kv_memory benchmark compares is the post-prefill
+        # moment, not the post-release one
+        self.pool.note_tick()
         emitted += self._decode_all()
+        self.pool.note_tick()
         return emitted
 
     def run(self, max_ticks: int = 1_000_000) -> Dict[int, RequestOutput]:
@@ -186,31 +251,100 @@ class ContinuousBatchingScheduler:
         for w in self.prefill_widths:
             if w == 1:
                 continue          # compiled by the throwaway request
-            self.pool.cache, _ = self.runtime.prefill_blocks(
-                self.pool.cache, np.zeros((w, N), np.int32),
-                np.arange(w, dtype=np.int32), np.zeros(w, np.int32),
-                np.zeros(w, bool), np.ones(w, np.int32),
-                np.zeros(w, bool))
+            if self.paged:
+                # all-inactive rows carry all-null page tables: their
+                # writes are self-copies of the reserved null page
+                self.pool.cache, _ = self.runtime.prefill_blocks_paged(
+                    self.pool.cache, np.zeros((w, N), np.int32),
+                    np.zeros((w, self.pool.max_pages), np.int32),
+                    np.zeros(w, np.int32), np.zeros(w, bool),
+                    np.ones(w, np.int32), np.zeros(w, bool))
+            else:
+                self.pool.cache, _ = self.runtime.prefill_blocks(
+                    self.pool.cache, np.zeros((w, N), np.int32),
+                    np.arange(w, dtype=np.int32), np.zeros(w, np.int32),
+                    np.zeros(w, bool), np.ones(w, np.int32),
+                    np.zeros(w, bool))
         self.finished.clear()
         self._admit_seq = 0
         self.n_ticks = self.n_prefill_blocks = self.n_decode_steps = 0
         self.n_prefill_ticks = self.n_eos_stops = 0
+        self.n_preemptions = 0
         self.pool.total_acquires = self.pool.total_releases = 0
         self.pool.max_in_use = 0
+        self.pool.stranded_tokens_at_peak = 0
+        if self.paged:
+            self.pool.total_page_allocs = self.pool.total_page_frees = 0
+            self.pool.max_pages_in_use = 0
         return self.runtime.compile_counts()
 
     # ------------------------------------------------------- internals
 
     def _admit(self) -> None:
         while self.queue:
+            if self.paged:
+                # paged admission gates on free PAGES: seat a request
+                # only when the heap can back its whole PROMPT on top of
+                # what already-seated prefills are still owed (allocation
+                # is lazy, so the free count alone would let a burst
+                # over-admit and thrash re-prefill). Decode growth past
+                # the prompt is deliberately NOT reserved — that would
+                # re-create the slot pool's worst-case reservation and
+                # its stranded bytes; the preemption path absorbs it.
+                owed = sum(
+                    max(s.n_blocks * self._npb
+                        - int(self.pool.allocated[s.slot]), 0)
+                    for s in self.active.values() if s.phase == "prefill")
+                need = self._n_blocks(self.queue[0]) * self._npb
+                if self.pool.n_free_pages - owed < need:
+                    return
             slot = self.pool.acquire()
             if slot is None:
                 return
             req = self.queue.popleft()
             self.active[slot] = _ActiveState(
                 req=req, slot=slot, seq=self._admit_seq,
-                n_blocks=self._n_blocks(req))
+                n_blocks=self._n_blocks(req),
+                # rid folded to uint32: seed sequences reject negative
+                # entries (the warmup throwaway request carries rid=-1)
+                rng=np.random.default_rng(
+                    (self.seed, req.rid % (1 << 32))))
             self._admit_seq += 1
+
+    # ---------------------------------------------- paged page pressure
+
+    def _preempt(self, st: _ActiveState) -> None:
+        """Evict a request: release its pages and slot, requeue it at
+        the FRONT of the queue for re-prefill from scratch (preempted
+        requests are older than anything still queued). Preemption is
+        output-transparent: greedy decode is deterministic, and
+        temperature sampling replays the request's own (seed, rid) RNG
+        stream on re-admission — only TTFT/latency suffer."""
+        del self.active[st.slot]
+        self.pool.release(st.slot)
+        self.queue.appendleft(st.req)
+        self.n_preemptions += 1
+
+    def _ensure_pages(self, st: _ActiveState, n_total: int) -> bool:
+        """Grow st's page table to n_total pages, preempting the
+        youngest STRICTLY-YOUNGER active request while the heap is dry.
+        Never evicts older requests (the oldest always progresses, so
+        any stream whose requests individually fit the heap drains).
+        Returns False when st cannot be grown this tick (it is skipped,
+        not evicted — retried next tick)."""
+        while True:
+            if self.pool.ensure(st.slot, n_total):
+                return True
+            # only victims actually HOLDING pages: evicting a just-
+            # admitted zero-page request frees nothing and churns
+            # admission for no gain
+            victim = max((s for s in self.active.values()
+                          if s.seq > st.seq
+                          and self.pool.allocated[s.slot] > 0),
+                         key=lambda s: s.seq, default=None)
+            if victim is None:
+                return False
+            self._preempt(victim)
 
     def _block_meta(self, st: _ActiveState):
         """(chunk tokens, pos0, is_dense) for a state's next block."""
@@ -232,7 +366,7 @@ class ContinuousBatchingScheduler:
                                          len(st.req.prompt))
         if st.blocks_done < st.n_blocks:
             return 0
-        tok = self._sample(logits_row(), st.req)
+        tok = self._sample(logits_row(), st)
         st.first_token_time = self.clock()
         st.out.append(tok)
         st.next_token = tok
@@ -244,12 +378,23 @@ class ContinuousBatchingScheduler:
     def _prefill_one_block(self, st: _ActiveState, meta) -> int:
         """Original one-block-per-tick path (PR-1): one request, one
         [1, N] jitted call. Kept as the prefill_batch=1 / width-1 bucket
-        the batched path is benchmarked and bit-compared against.
+        the batched path is benchmarked and bit-compared against. In
+        the paged layout this is the width-1 `prefill_blocks_paged`
+        bucket (there is no separate single-request paged entry).
         `meta` is the state's precomputed `_block_meta` for this tick."""
         N = self.runtime.block_size
         chunk, pos0, is_dense = meta
         tok_blk = np.zeros((1, N), np.int32)
         tok_blk[0, :len(chunk)] = chunk
+        if self.paged:
+            self.pool.cache, logits = self.runtime.prefill_blocks_paged(
+                self.pool.cache, tok_blk,
+                self.pool.page_table[st.slot][None],
+                np.array([pos0], np.int32), np.array([is_dense], bool),
+                np.array([len(st.req.prompt)], np.int32),
+                np.ones(1, bool))
+            self.n_prefill_ticks += 1
+            return self._finish_block(st, lambda: np.asarray(logits)[0])
         self.pool.cache, logits = self.runtime.prefill_block(
             self.pool.cache, tok_blk, st.slot, pos0, is_dense,
             len(st.req.prompt))
@@ -283,11 +428,29 @@ class ContinuousBatchingScheduler:
             return 0
         # one _block_meta per state per tick: the same meta drives both
         # the density filter and the batch fill (re-deriving it would
-        # re-slice each prompt chunk)
-        metas = [(s, self._block_meta(s)) for s in states]
-        lead_dense = metas[0][1][2]
-        batch = [(s, m) for s, m in metas if m[2] == lead_dense]
-        batch = batch[:self.prefill_batch]
+        # re-slice each prompt chunk). In the paged layout each
+        # candidate must also grow its page table to cover this block —
+        # a dry heap preempts strictly-younger requests (which may be
+        # later entries of `states`, hence the is-still-active guard);
+        # a state that cannot be grown is skipped this tick, not evicted.
+        batch = []
+        lead_dense = None
+        for st in states:
+            if len(batch) == self.prefill_batch:
+                break
+            if self.active.get(st.slot) is not st:
+                continue                    # preempted earlier this tick
+            meta = self._block_meta(st)
+            if lead_dense is not None and meta[2] != lead_dense:
+                continue                    # density-homogeneous batch
+            if self.paged and not self._ensure_pages(
+                    st, (st.blocks_done + 1) * self._npb):
+                continue
+            if lead_dense is None:
+                lead_dense = meta[2]
+            batch.append((st, meta))
+        if not batch:
+            return 0
         if len(batch) == 1:
             return self._prefill_one_block(*batch[0])   # width-1 bucket
         P = next(w for w in self.prefill_widths if w >= len(batch))
@@ -304,13 +467,22 @@ class ContinuousBatchingScheduler:
             pos0s[i] = pos0
             lengths[i] = len(st.req.prompt)
             active[i] = True
-        used = {st.slot for st, _ in batch}
-        spare = (s for s in range(self.n_slots) if s not in used)
-        for i in range(len(batch), P):
-            slots[i] = next(spare)
-        self.pool.cache, logits = self.runtime.prefill_blocks(
-            self.pool.cache, tokens, slots, pos0s, is_dense, lengths,
-            active)
+        if self.paged:
+            # pad rows carry all-null tables (write-sink self-copies)
+            tables = np.zeros((P, self.pool.max_pages), np.int32)
+            for i, (st, _) in enumerate(batch):
+                tables[i] = self.pool.page_table[st.slot]
+            self.pool.cache, logits = self.runtime.prefill_blocks_paged(
+                self.pool.cache, tokens, tables, pos0s, is_dense,
+                lengths, active)
+        else:
+            used = {st.slot for st, _ in batch}
+            spare = (s for s in range(self.n_slots) if s not in used)
+            for i in range(len(batch), P):
+                slots[i] = next(spare)
+            self.pool.cache, logits = self.runtime.prefill_blocks(
+                self.pool.cache, tokens, slots, pos0s, is_dense, lengths,
+                active)
         self.n_prefill_ticks += 1
         logits_np = [None]        # pull [P, V] to host at most once
 
@@ -326,6 +498,21 @@ class ContinuousBatchingScheduler:
 
     def _decode_all(self) -> int:
         decoding = [s for s in self.active.values() if s.phase == "decode"]
+        if self.paged:
+            # each decoding row must own the page covering its write
+            # position before the batched step; a dry heap preempts the
+            # youngest request (possibly one of `decoding` — hence the
+            # is-still-active guard). Oldest-first, so an early grow
+            # never evicts an already-granted older row.
+            psz = self.pool.page_size
+            ready = []
+            for st in sorted(decoding, key=lambda s: s.seq):
+                if self.active.get(st.slot) is not st:
+                    continue
+                if not self._ensure_pages(st, st.pos // psz + 1):
+                    continue               # stalled this tick, retried
+                ready.append(st)
+            decoding = ready
         if not decoding:
             return 0
         tokens = np.zeros(self.n_slots, np.int32)
@@ -335,8 +522,13 @@ class ContinuousBatchingScheduler:
             tokens[st.slot] = st.next_token
             positions[st.slot] = st.pos
             active[st.slot] = True
-        logits, greedy, self.pool.cache = self.runtime.decode_step(
-            self.pool.cache, tokens, positions, active)
+        if self.paged:
+            logits, greedy, self.pool.cache = self.runtime.decode_step_paged(
+                self.pool.cache, tokens, self.pool.page_table, positions,
+                active)
+        else:
+            logits, greedy, self.pool.cache = self.runtime.decode_step(
+                self.pool.cache, tokens, positions, active)
         self.n_decode_steps += 1
         greedy = np.asarray(greedy)
         # logits cross to host only if someone actually samples
@@ -346,7 +538,7 @@ class ContinuousBatchingScheduler:
         emitted = 0
         for st in decoding:
             tok = (int(greedy[st.slot]) if st.req.temperature <= 0
-                   else self._sample(logits_np[st.slot], st.req))
+                   else self._sample(logits_np[st.slot], st))
             st.out.append(tok)
             st.next_token = tok
             st.pos += 1
@@ -372,13 +564,15 @@ class ContinuousBatchingScheduler:
         del self.active[st.slot]
         self.pool.release(st.slot)
 
-    def _sample(self, logits: np.ndarray, req: Request) -> int:
-        if req.temperature <= 0:
+    def _sample(self, logits: np.ndarray, st: _ActiveState) -> int:
+        if st.req.temperature <= 0:
             return int(np.argmax(logits))
-        # Gumbel-max with the scheduler's host RNG (per-stream seed)
-        g = self._rng.gumbel(size=logits.shape)
+        # Gumbel-max with the REQUEST's own host RNG stream (seeded
+        # (scheduler seed, rid)): draws are independent of batch
+        # composition, admission order, and preemption re-runs
+        g = st.rng.gumbel(size=logits.shape)
         return int(np.argmax(logits.astype(np.float64)
-                             / req.temperature + g))
+                             / st.req.temperature + g))
 
 
 def drive_stream(sched: ContinuousBatchingScheduler,

@@ -1,0 +1,100 @@
+"""Real-traffic trace replay for the continuous-batching stream driver.
+
+A trace is a jsonl file, one request per line, replayed through the
+SAME `drive_stream` loop as the Poisson simulator (launch/serve.py
+--trace), so recorded production arrival patterns — bursts, diurnal
+ramps, heavy-tailed prompt/output lengths — exercise the scheduler
+exactly as synthetic streams do. Record schema (one JSON object per
+line):
+
+  arrival_s    float   arrival offset in seconds from stream start
+  prompt_len   int     prompt length in tokens (prompt content is
+                       synthesized deterministically per record unless
+                       `prompt` is given — public traces ship shapes
+                       and timing, not text)
+  gen_len      int     max new tokens to generate
+  prompt       [int]   optional explicit token ids (overrides
+                       prompt_len)
+  temperature  float   optional, default 0.0 (greedy)
+  eos_id       int     optional per-request early-stop token
+
+Unknown keys are ignored (real traces carry extra metadata). A sample
+trace lives at benchmarks/traces/sample_trace.jsonl.
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.scheduler import Request
+
+
+def load_trace(path: str, vocab: int, seed: int = 0,
+               eos_id: Optional[int] = None,
+               temperature: Optional[float] = None,
+               max_requests: Optional[int] = None) -> List[Request]:
+    """Parse a jsonl trace into `Request`s for `drive_stream`.
+
+    Prompt tokens are synthesized from a per-record deterministic RNG
+    stream (seeded by `seed` and the record index), so replaying the
+    same trace is bit-reproducible run-to-run and engine-to-engine.
+    `eos_id` and `temperature` apply to records that do not carry
+    their own."""
+    requests: List[Request] = []
+    with open(path) as f:
+        for idx, line in enumerate(f):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            if max_requests is not None and len(requests) >= max_requests:
+                break
+            rec = json.loads(line)
+            if "prompt" in rec:
+                prompt = [int(t) for t in rec["prompt"]]
+            else:
+                n = int(rec["prompt_len"])
+                if n < 1:
+                    raise ValueError(
+                        f"{path}:{idx + 1}: prompt_len must be >= 1")
+                rng = np.random.default_rng((seed, idx))
+                prompt = rng.integers(0, vocab, size=n).tolist()
+            gen_len = int(rec.get("gen_len", 16))
+            if gen_len < 1:
+                # reject at LOAD time: scheduler.submit would only
+                # raise mid-replay, long after earlier requests ran
+                raise ValueError(
+                    f"{path}:{idx + 1}: gen_len must be >= 1")
+            requests.append(Request(
+                rid=len(requests),
+                prompt=prompt,
+                max_new=gen_len,
+                temperature=float(rec.get("temperature",
+                                          temperature or 0.0)),
+                eos_id=(int(rec["eos_id"]) if "eos_id" in rec
+                        else eos_id),
+                arrival_time=float(rec.get("arrival_s", 0.0))))
+    if not requests:
+        raise ValueError(f"trace {path} contains no requests")
+    return requests
+
+
+def trace_stats(requests: List[Request]) -> dict:
+    """Shape summary of a loaded trace (printed by serve.py --trace)."""
+    plens = np.array([len(r.prompt) for r in requests])
+    gens = np.array([r.max_new for r in requests])
+    arr = np.array([r.arrival_time or 0.0 for r in requests])
+    dur = float(arr.max()) if len(arr) else 0.0
+    return {
+        "requests": len(requests),
+        "duration_s": round(dur, 3),
+        # 0.0 sentinel when every record arrives at t=0 (no spread):
+        # an "offered rate" is meaningless for an instantaneous burst
+        "offered_rate_req_s": (round(len(requests) / dur, 2)
+                               if dur > 0 else 0.0),
+        "prompt_len_p50": int(np.percentile(plens, 50)),
+        "prompt_len_max": int(plens.max()),
+        "gen_len_p50": int(np.percentile(gens, 50)),
+        "gen_len_max": int(gens.max()),
+    }

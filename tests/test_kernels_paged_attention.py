@@ -1,0 +1,191 @@
+"""Paged-attention kernel package: gather-based page-table path vs the
+masked dense oracle vs the interpret-mode Pallas kernel, and the
+bit-level contract the paged serving engine relies on — the gathered
+page view attends identically to a contiguous slot cache."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import kernel as K
+from repro.kernels.paged_attention import ops as O
+from repro.kernels.paged_attention import ref as R
+from repro.nn import attention as A
+
+
+def _setup(seed=0, B=3, H=4, Kv=2, dh=8, psz=4, max_pages=5,
+           positions=(9, 5, 18)):
+    """A pool where each row owns disjoint pages covering its positions
+    and the tails point at the null page 0."""
+    rng = np.random.default_rng(seed)
+    positions = np.asarray(positions, np.int32)
+    n_pages = 1 + int(sum(p // psz + 1 for p in positions))
+    q = jnp.asarray(rng.standard_normal((B, H, dh)), jnp.float32)
+    k_pages = jnp.asarray(rng.standard_normal((n_pages, psz, Kv, dh)),
+                          jnp.float32)
+    v_pages = jnp.asarray(rng.standard_normal((n_pages, psz, Kv, dh)),
+                          jnp.float32)
+    table = np.zeros((B, max_pages), np.int32)
+    nxt = 1
+    for b, p in enumerate(positions):
+        n = p // psz + 1
+        table[b, :n] = np.arange(nxt, nxt + n)
+        nxt += n
+    return q, k_pages, v_pages, jnp.asarray(table), jnp.asarray(positions)
+
+
+def test_gather_ref_matches_dense_oracle():
+    q, kp, vp, tbl, pos = _setup()
+    got = R.paged_attention_ref(q, kp, vp, tbl, pos)
+    want = R.paged_attention_dense_ref(q, kp, vp, tbl, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_interpret_matches_both_oracles():
+    q, kp, vp, tbl, pos = _setup(seed=1)
+    kern = O.paged_attention_op(q, kp, vp, tbl, pos, use_kernel=True)
+    ref = O.paged_attention_op(q, kp, vp, tbl, pos, use_kernel=False)
+    dense = R.paged_attention_dense_ref(q, kp, vp, tbl, pos)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_sliding_window():
+    q, kp, vp, tbl, pos = _setup(seed=2, positions=(11, 6, 19))
+    for window in (4, 7):
+        kern = K.paged_decode_attention(q, kp, vp, tbl, pos,
+                                        window=window, interpret=True)
+        ref = R.paged_attention_ref(q, kp, vp, tbl, pos, window=window)
+        np.testing.assert_allclose(np.asarray(kern), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    # the window demonstrably changes the answer
+    full = R.paged_attention_ref(q, kp, vp, tbl, pos)
+    win = R.paged_attention_ref(q, kp, vp, tbl, pos, window=4)
+    assert not np.allclose(np.asarray(full), np.asarray(win))
+
+
+def test_gathered_pages_bit_match_contiguous_cache():
+    """The serving contract: writing KV through page tables and
+    attending the gathered view is BIT-identical to the slot layout's
+    contiguous cache — not merely allclose."""
+    rng = np.random.default_rng(3)
+    B, S, Kv, dh, psz = 2, 24, 2, 8, 4
+    mp = S // psz
+    kc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)), jnp.float32)
+    # scatter the contiguous rows into a shuffled page pool
+    n_pages = 1 + B * mp
+    perm = rng.permutation(np.arange(1, n_pages))
+    table = np.zeros((B, mp), np.int32)
+    k_pool = np.zeros((n_pages, psz, Kv, dh), np.float32)
+    v_pool = np.zeros((n_pages, psz, Kv, dh), np.float32)
+    for b in range(B):
+        for j in range(mp):
+            pid = int(perm[b * mp + j])
+            table[b, j] = pid
+            k_pool[pid] = np.asarray(kc[b, j * psz:(j + 1) * psz])
+            v_pool[pid] = np.asarray(vc[b, j * psz:(j + 1) * psz])
+    gk, gv = A.gather_kv_pages(jnp.asarray(k_pool), jnp.asarray(v_pool),
+                               jnp.asarray(table))
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(kc))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(vc))
+
+
+def test_paged_write_then_gather_roundtrip():
+    """write_kv_rows_paged / write_kv_tok_paged land block and token
+    writes exactly where the slot-layout writers would, including the
+    active-mask self-copy for pad rows."""
+    rng = np.random.default_rng(4)
+    B, N, Kv, dh, psz, mp = 3, 8, 2, 4, 4, 6
+    n_pages = 1 + B * mp
+    k_pool = jnp.zeros((n_pages, psz, Kv, dh), jnp.float32)
+    v_pool = jnp.zeros((n_pages, psz, Kv, dh), jnp.float32)
+    table = np.zeros((B, mp), np.int32)
+    table[0, :mp] = np.arange(1, mp + 1)
+    table[1, :mp] = np.arange(mp + 1, 2 * mp + 1)
+    # row 2 is an inactive pad row: all-null table
+    pos0s = jnp.asarray([0, 8, 0], jnp.int32)
+    active = jnp.asarray([True, True, False])
+    k_new = jnp.asarray(rng.standard_normal((B, N, Kv, dh)), jnp.float32)
+    v_new = jnp.asarray(rng.standard_normal((B, N, Kv, dh)), jnp.float32)
+    k_pool, v_pool = A.write_kv_rows_paged(
+        k_pool, v_pool, k_new, v_new, jnp.asarray(table), pos0s,
+        active=active)
+    gk, gv = A.gather_kv_pages(k_pool, v_pool, jnp.asarray(table))
+    np.testing.assert_array_equal(np.asarray(gk[0, :N]),
+                                  np.asarray(k_new[0]))
+    np.testing.assert_array_equal(np.asarray(gv[1, 8:8 + N]),
+                                  np.asarray(v_new[1]))
+    # the pad row wrote nothing: the null page is still zeros
+    np.testing.assert_array_equal(np.asarray(k_pool[0]), 0.0)
+
+    # the single-request wrapper lands the identical block write
+    k2, v2 = A.write_kv_block_paged(
+        jnp.zeros_like(k_pool), jnp.zeros_like(v_pool),
+        k_new[:1], v_new[:1], jnp.asarray(table[0]), jnp.int32(0))
+    gk1, _ = A.gather_kv_pages(k2, v2, jnp.asarray(table[:1]))
+    np.testing.assert_array_equal(np.asarray(gk1[0, :N]),
+                                  np.asarray(k_new[0]))
+
+    # single-token decode write at position 11 of row 1
+    tok_k = jnp.asarray(rng.standard_normal((B, 1, Kv, dh)), jnp.float32)
+    tok_v = jnp.asarray(rng.standard_normal((B, 1, Kv, dh)), jnp.float32)
+    positions = jnp.asarray([3, 11, 0], jnp.int32)
+    k_pool, v_pool = A.write_kv_tok_paged(
+        k_pool, v_pool, tok_k, tok_v, jnp.asarray(table), positions,
+        active=jnp.asarray([False, True, False]))
+    gk2, _ = A.gather_kv_pages(k_pool, v_pool, jnp.asarray(table))
+    np.testing.assert_array_equal(np.asarray(gk2[1, 11]),
+                                  np.asarray(tok_k[1, 0]))
+    # inactive row 0's cache is untouched at its masked position
+    np.testing.assert_array_equal(np.asarray(gk2[0, 3]),
+                                  np.asarray(gk[0, 3]))
+
+
+def test_attend_decode_ragged_paged_bit_matches_slot():
+    """attend_decode_ragged_paged (XLA gather dispatch) is bit-identical
+    to attend_decode_ragged over the equivalent contiguous cache."""
+    rng = np.random.default_rng(5)
+    B, S, Kv, H, dh, psz = 2, 16, 2, 4, 8, 4
+    mp = S // psz
+    params = {
+        "wq": jnp.asarray(rng.standard_normal((16, H, dh)) * 0.1,
+                          jnp.float32),
+        "wk": jnp.asarray(rng.standard_normal((16, Kv, dh)) * 0.1,
+                          jnp.float32),
+        "wv": jnp.asarray(rng.standard_normal((16, Kv, dh)) * 0.1,
+                          jnp.float32),
+        "wo": jnp.asarray(rng.standard_normal((H, dh, 16)) * 0.1,
+                          jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((B, 1, 16)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)), jnp.float32)
+    positions = jnp.asarray([13, 6], jnp.int32)
+
+    n_pages = 1 + B * mp
+    table = np.zeros((B, mp), np.int32)
+    k_pool = np.zeros((n_pages, psz, Kv, dh), np.float32)
+    v_pool = np.zeros((n_pages, psz, Kv, dh), np.float32)
+    nxt = 1
+    for b in range(B):
+        for j in range(mp):
+            table[b, j] = nxt
+            k_pool[nxt] = np.asarray(kc[b, j * psz:(j + 1) * psz])
+            v_pool[nxt] = np.asarray(vc[b, j * psz:(j + 1) * psz])
+            nxt += 1
+
+    want = A.attend_decode_ragged(params, x, kc, vc, positions)
+    got = A.attend_decode_ragged_paged(
+        params, x, jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(table), positions, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the interpret-mode kernel agrees numerically
+    kern = A.attend_decode_ragged_paged(
+        params, x, jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(table), positions, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
