@@ -15,4 +15,7 @@ from repro.core.fastforward import (  # noqa: F401
     ff_decode_sparse,
     layer_budgets,
     k_tiles_for,
+    resolve_plan,
+    EFFORT_TIERS,
 )
+from repro.core.scheduler import SparsityPlan  # noqa: F401

@@ -2,6 +2,42 @@
 
 This is the drop-in replacement for a transformer FFN. All model
 definitions route their FFN through `ff_apply_*` when cfg.ff.enabled.
+
+DESIGN — SparsityPlan contract (the scheduler × kernel composition):
+
+Every FLOP-reducing entry point below takes a `SparsityPlan`
+(repro.core.scheduler) instead of the old `k_tiles=` scalar, so the
+paper's layer-wise schedule (§3.4, Algorithm 1) reaches the gather
+path and the batched Pallas kernel — not just the semantic mask path.
+
+  * RESOLUTION — `resolve_plan(cfg, effort, importance)` builds the
+    plan once per model: Algorithm 1 budgets -> integer per-layer tile
+    counts (largest-remainder corrected) when importance is supplied
+    and cfg.ff.layerwise_schedule is on; otherwise the uniform
+    ceil(keep * n_tiles) rule the legacy `k_tiles_for` used, so
+    configs that only set cfg.ff.sparsity resolve to a bit-identical
+    policy. Named effort tiers ("dense" / "balanced" / "turbo") scale
+    the global keep-fraction — the per-request serving knob.
+  * PADDING — the static tile-id width is `plan.k_max`; the plan's [L]
+    counts ride the layer scan as traced values (`k_valid`), so the
+    scan stays shape-homogeneous while each layer consumes its own K.
+    The gather path masks tiles past a layer's count; the Pallas
+    kernels `pl.when`-skip them (per-row counts at decode carry
+    per-request effort through one executable).
+  * BATCHING-KEY MEMBERSHIP — the plan is a frozen hashable dataclass:
+    the serving runtime takes it as a jit static argument, the
+    scheduler admits only same-plan rows into one batched prefill
+    call (alongside the density-homogeneous is_dense key), and warmup
+    pre-compiles every (plan, width-bucket) pair — zero recompilation
+    across mixed-effort traffic.
+  * SHARDS — balanced per-shard tile selection needs a shard-multiple
+    K; layer-wise counts fall back to global top-k selection (the
+    prefix of a sharded selection is not the top-k_l), so sharded
+    gathers keep uniform plans (shardmap path unchanged).
+
+Deprecation shims: `k_tiles_for` survives for callers that only need
+the uniform width, and plan-taking entry points accept a bare int
+(wrapped via `SparsityPlan.uniform_counts`).
 """
 from __future__ import annotations
 
@@ -18,6 +54,7 @@ from repro.core import predictor as P
 from repro.core import compensator as C
 from repro.core import sparse_ffn as S
 from repro.core import scheduler as SCHED
+from repro.core.scheduler import SparsityPlan
 
 
 def fastforward_ffn_spec(cfg: ModelConfig, d_ff: Optional[int] = None,
@@ -49,12 +86,15 @@ def ff_dense(params, cfg: ModelConfig, x):
 
 
 def ff_masked_sequence(params, cfg: ModelConfig, x, keep_frac,
-                       dense_first=None, dense_last=None):
+                       dense_first=None, dense_last=None, k_tiles=None):
     """Mask path over a full sequence, blocked at cfg.ff.block_size.
 
     x: [B, T, D] with T % block_size == 0. keep_frac: scalar (may be a
-    traced per-layer budget from Algorithm 1). Semantically faithful to
-    the paper; FLOPs are NOT reduced (see gather path for that).
+    traced per-layer budget from Algorithm 1). k_tiles: optional traced
+    int32 tile count overriding keep_frac — a SparsityPlan's per-layer
+    count, making this the exact mask-path oracle of the gather/kernel
+    paths. Semantically faithful to the paper; FLOPs are NOT reduced
+    (see gather path for that).
     """
     ff = cfg.ff
     B, T, D = x.shape
@@ -62,7 +102,8 @@ def ff_masked_sequence(params, cfg: ModelConfig, x, keep_frac,
     nb = T // N
     xb = x.reshape(B, nb, N, D)
     scores = jax.nn.sigmoid(P.neuron_scores(params["pred"], xb))
-    mask = S.neuron_mask_from_scores(scores, keep_frac, ff.tile)
+    mask = S.neuron_mask_from_scores(scores, keep_frac, ff.tile,
+                                     k_tiles=k_tiles)
     dense_first = ff.dense_first_block if dense_first is None else dense_first
     dense_last = ff.dense_last_block if dense_last is None else dense_last
     blk = jnp.arange(nb)
@@ -89,25 +130,34 @@ def ff_masked_sequence(params, cfg: ModelConfig, x, keep_frac,
 # ------------------------------------------------------ per-block gather
 
 
-def ff_block_sparse(params, cfg: ModelConfig, x_block, k_tiles: int,
-                    shards: int = 1, is_dense=None):
+def ff_block_sparse(params, cfg: ModelConfig, x_block, plan,
+                    shards: int = 1, is_dense=None, k_valid=None):
     """Gather path for one prompt block: x_block [B, N, D] -> [B, N, D].
 
-    k_tiles is static (jit shape). `is_dense` (traced bool) switches to
-    the dense FFN via lax.cond — used for the always-dense first/last
-    blocks inside the blockwise-prefill scan. A [B] is_dense VECTOR
-    (rows from distinct requests, each at its own boundary) delegates
-    to the per-row `ff_blocks_sparse` path.
+    plan: SparsityPlan (static — its k_max is the jit tile-id width; a
+    bare int k_tiles is accepted as a deprecation shim). k_valid:
+    optional traced int32 — THIS layer's valid tile count (the plan's
+    [L] counts riding the layer scan); None keeps all k_max tiles
+    (uniform plans take this path, bit-identical to the pre-plan API).
+    `is_dense` (traced bool) switches to the dense FFN via lax.cond —
+    used for the always-dense first/last blocks inside the
+    blockwise-prefill scan. A [B] is_dense VECTOR (rows from distinct
+    requests, each at its own boundary) delegates to the per-row
+    `ff_blocks_sparse` path.
     """
     if is_dense is not None and jnp.ndim(is_dense) == 1:
-        return ff_blocks_sparse(params, cfg, x_block, k_tiles, shards,
-                                is_dense)
+        return ff_blocks_sparse(params, cfg, x_block, plan, shards,
+                                is_dense, k_valid=k_valid)
     ff = cfg.ff
+    plan = _as_plan(cfg, plan, shards=shards)
+    sel_shards = 1 if k_valid is not None else shards
     scores = jax.nn.sigmoid(P.neuron_scores(params["pred"], x_block))
-    ids = S.balanced_topk_tiles(scores, k_tiles, ff.tile, shards)  # [B, K]
+    ids = S.balanced_topk_tiles(scores, plan.k_max, ff.tile,
+                                sel_shards)                    # [B, K]
 
     def sparse(x):
-        y = S.ffn_sparse_batched(params, x, ids, ff.tile, cfg.act)
+        y = S.ffn_sparse_batched(params, x, ids, ff.tile, cfg.act,
+                                 k_valid=k_valid)
         return _compensate(params, cfg, x, y)
 
     if is_dense is None:
@@ -117,26 +167,32 @@ def ff_block_sparse(params, cfg: ModelConfig, x_block, k_tiles: int,
                         sparse, x_block)
 
 
-def ff_blocks_sparse(params, cfg: ModelConfig, x_blocks, k_tiles: int,
-                     shards: int = 1, is_dense=None):
+def ff_blocks_sparse(params, cfg: ModelConfig, x_blocks, plan,
+                     shards: int = 1, is_dense=None, k_valid=None):
     """Gather path for a batch of blocks from DISTINCT requests with
     per-row dense forcing: x_blocks [P, N, D], is_dense [P] bool.
 
     The batched-prefill twin of `ff_block_sparse`: each row selects its
-    own K tiles (batched kernel / gather path via ffn_sparse_batched),
-    and the paper's dense-first/last semantics hold PER ROW — a row
-    whose block is a sequence boundary takes the dense FFN while its
-    batchmates stay sparse. Each path runs under a `lax.cond` on
+    own `plan.k_max` tiles (batched kernel / gather path via
+    ffn_sparse_batched; `k_valid` — traced scalar or [P] — limits how
+    many of them actually compute, carrying the plan's per-layer
+    counts), and the paper's dense-first/last semantics hold PER ROW —
+    a row whose block is a sequence boundary takes the dense FFN while
+    its batchmates stay sparse. Each path runs under a `lax.cond` on
     whether ANY row needs it, so an all-sparse steady-state batch never
     pays dense FLOPs (and an all-dense batch skips predictor + gather).
     The compensator fires only on sparse rows.
     """
     ff = cfg.ff
+    plan = _as_plan(cfg, plan, shards=shards)
+    sel_shards = 1 if k_valid is not None else shards
 
     def sparse(x):
         scores = jax.nn.sigmoid(P.neuron_scores(params["pred"], x))
-        ids = S.balanced_topk_tiles(scores, k_tiles, ff.tile, shards)
-        y = S.ffn_sparse_batched(params, x, ids, ff.tile, cfg.act)
+        ids = S.balanced_topk_tiles(scores, plan.k_max, ff.tile,
+                                    sel_shards)
+        y = S.ffn_sparse_batched(params, x, ids, ff.tile, cfg.act,
+                                 k_valid=k_valid)
         return _compensate(params, cfg, x, y)
 
     if is_dense is None:
@@ -149,18 +205,118 @@ def ff_blocks_sparse(params, cfg: ModelConfig, x_blocks, k_tiles: int,
     return jnp.where(is_dense[:, None, None], y_dn, y_sp)
 
 
-def ff_decode_sparse(params, cfg: ModelConfig, x_tok, k_tiles: int,
-                     shards: int = 1):
-    """Decode-time sparsity (paper Table 3): block == current token."""
-    return ff_block_sparse(params, cfg, x_tok, k_tiles, shards)
+def ff_decode_sparse(params, cfg: ModelConfig, x_tok, plan,
+                     shards: int = 1, k_valid=None):
+    """Decode-time sparsity (paper Table 3): block == current token.
+    k_valid: traced scalar or [B] — per-row counts carry per-REQUEST
+    effort tiers through the one batched decode executable."""
+    return ff_block_sparse(params, cfg, x_tok, plan, shards,
+                           k_valid=k_valid)
 
 
 # ----------------------------------------------------------- scheduling
 
 
+#: Named effort tiers — the per-request serving knob. Each maps the
+#: config's global keep-fraction (1 - cfg.ff.sparsity) to the tier's:
+#: "dense" disables sparsification (keep 1.0, still on the gather path
+#: so it batches/compiles like any plan), "balanced" is the config
+#: budget, "turbo" halves it (floor: 1 tile/layer via SparsityPlan).
+EFFORT_TIERS = ("dense", "balanced", "turbo")
+
+
+def effort_keep(cfg: ModelConfig, effort: Optional[str]) -> float:
+    keep = 1.0 - cfg.ff.sparsity
+    eff = effort or "balanced"
+    if eff == "dense":
+        return 1.0
+    if eff == "balanced":
+        return keep
+    if eff == "turbo":
+        return keep * 0.5
+    raise ValueError(f"unknown effort tier {effort!r}; expected one of "
+                     f"{EFFORT_TIERS}")
+
+
+def resolve_plan(cfg: ModelConfig, effort: Optional[str] = None,
+                 importance=None, d_ff: Optional[int] = None,
+                 shards: int = 1) -> Optional[SparsityPlan]:
+    """Resolve cfg (+ optional effort tier / calibration importance)
+    into the SparsityPlan every FLOP-reducing path consumes.
+
+    Returns None when FastForward is disabled. With `importance` (and
+    cfg.ff.layerwise_schedule, the default) the per-layer counts come
+    from Algorithm 1 under the tier's global budget; otherwise the
+    uniform ceil rule — bit-identical to the legacy `k_tiles_for`
+    scalar, which is the backward-compat shim for configs that only
+    set cfg.ff.sparsity."""
+    if not cfg.ff.enabled:
+        return None
+    d_ff = d_ff or cfg.d_ff or cfg.n_shared_experts * cfg.d_ff_expert
+    if not d_ff:
+        return None
+    n_tiles = max(d_ff // cfg.ff.tile, 1)
+    eff = effort or "balanced"
+    keep = effort_keep(cfg, eff)
+    if (importance is not None and cfg.ff.layerwise_schedule
+            and eff != "dense"):
+        return SparsityPlan.from_importance(
+            importance, keep, n_tiles, cfg.ff.tile,
+            name=f"{eff}-layerwise")
+    return SparsityPlan.uniform(cfg.n_layers, n_tiles, cfg.ff.tile,
+                                keep, shards=shards, name=eff)
+
+
+def _as_plan(cfg: ModelConfig, plan, shards: int = 1,
+             d_ff: Optional[int] = None) -> Optional[SparsityPlan]:
+    """Normalize a plan argument: None -> cfg-resolved uniform plan
+    (compat shim), bare int k_tiles -> uniform_counts shim."""
+    if plan is None:
+        return resolve_plan(cfg, d_ff=d_ff, shards=shards)
+    if isinstance(plan, (int, np.integer)):
+        d_ff = d_ff or cfg.d_ff or cfg.n_shared_experts * cfg.d_ff_expert
+        n_tiles = max(d_ff // cfg.ff.tile, 1)
+        return SparsityPlan.uniform_counts(cfg.n_layers, n_tiles,
+                                           cfg.ff.tile, int(plan))
+    return plan
+
+
+def decode_plan_setup(plans):
+    """Shared decode-time plan plumbing for the model `decode_step`s.
+
+    plans: tuple of resolved SparsityPlans (possibly empty/None-free —
+    callers filter). Returns (sel_plan, counts_lp):
+      * sel_plan — the plan whose k_max is the static tile-id width
+        (max across the tuple; only k_max/tile are consumed);
+      * counts_lp — [L, n_plans] int32 per-layer counts to ride the
+        layer scan (each step gathers its row by traced plan_ids), or
+        None on the single-uniform-plan fast path, which keeps the
+        executable bit-identical to the pre-plan decode step.
+    """
+    if not plans:
+        return None, None
+    sel_plan = max(plans, key=lambda p: p.k_max)
+    if len(plans) == 1 and plans[0].is_uniform:
+        return sel_plan, None
+    return sel_plan, jnp.asarray(
+        np.stack([p.tile_counts for p in plans], axis=1), jnp.int32)
+
+
+def decode_k_valid(k_row, plan_ids):
+    """This layer's traced valid-count from a `decode_plan_setup`
+    counts row: per-request [B] under traced plan_ids, scalar
+    otherwise, None when no counts ride (uniform fast path)."""
+    if k_row is None:
+        return None
+    if plan_ids is not None:
+        return k_row[plan_ids]
+    return k_row[0]
+
+
 def layer_budgets(cfg: ModelConfig, importance=None):
     """Per-layer keep fractions: Algorithm 1 when enabled+calibrated,
-    else uniform (1 - sparsity)."""
+    else uniform (1 - sparsity). (Mask-path budgets; the gather path
+    consumes the same schedule as SparsityPlan integer counts.)"""
     keep = 1.0 - cfg.ff.sparsity
     if cfg.ff.layerwise_schedule and importance is not None:
         return SCHED.allocate_budgets(importance, keep)
@@ -169,7 +325,9 @@ def layer_budgets(cfg: ModelConfig, importance=None):
 
 def k_tiles_for(cfg: ModelConfig, d_ff: Optional[int] = None,
                 shards: int = 1) -> int:
-    """Static tile count for the gather path (uniform schedule)."""
+    """DEPRECATED shim: static uniform tile count (the pre-SparsityPlan
+    scalar). Equals resolve_plan(cfg, d_ff=..., shards=...).k_max —
+    kept for callers that only need the uniform width."""
     d_ff = d_ff or cfg.d_ff
     n_tiles = d_ff // cfg.ff.tile
     keep = 1.0 - cfg.ff.sparsity

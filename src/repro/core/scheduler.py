@@ -1,11 +1,24 @@
-"""Layer-wise sparsity scheduling (paper §3.4, Algorithm 1).
+"""Layer-wise sparsity scheduling (paper §3.4, Algorithm 1) and the
+SparsityPlan object that carries its result onto the serving hot path.
 
 Layer importance s_i = attention mass received by *non-sink* tokens
 (everything outside the first prompt block), averaged over heads and a
 calibration set. Algorithm 1 greedily water-fills keep-fractions
 proportional to importance under a global budget.
+
+A `SparsityPlan` is the RESOLVED form of a sparsity policy: per-layer
+integer tile counts, fixed once per model (plus optional per-request
+effort tiers — see repro.core.fastforward.resolve_plan). It is a
+frozen, hashable dataclass so the serving runtime can use it as a jit
+static argument: one executable per (plan, batch-width) pair, all
+pre-compiled at warmup, zero recompilation across mixed-effort
+traffic. See the DESIGN note in repro.core.fastforward for the full
+contract (resolution, [L] count padding, batching-key membership).
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
 
 import numpy as np
 import jax
@@ -43,24 +56,213 @@ def allocate_budgets(importance, budget: float):
     # allocate high-importance layers first so min(1, .) clipping
     # redistributes their overflow to the rest (greedy waterfill).
     order = np.argsort(-s)
+    remaining = L
     for i in order:
         if S_total <= 0:
-            b[i] = min(1.0, T / max(L, 1))
-            continue
-        b[i] = min(1.0, s[i] / S_total * T)
+            # zero residual importance mass: spread the residual budget
+            # evenly over the layers still unallocated (NOT the full L,
+            # and keep decrementing T — otherwise a single importance
+            # spike silently loses budget)
+            b[i] = min(1.0, T / max(remaining, 1))
+        else:
+            b[i] = min(1.0, s[i] / S_total * T)
         T -= b[i]
         S_total -= s[i]
+        remaining -= 1
     # no floor: budgets_to_tiles enforces >=1 tile per layer downstream
     return np.clip(b, 0.0, 1.0)
 
 
 def budgets_to_tiles(budgets, n_tiles: int):
-    """Per-layer keep-fraction -> integer tile counts (>=1)."""
-    return np.maximum(1, np.round(np.asarray(budgets) * n_tiles)).astype(np.int32)
+    """Per-layer keep-fraction -> integer tile counts in [1, n_tiles].
+
+    Largest-remainder rounding: independent per-layer `round()` lets
+    the realized total drift from the global budget by up to L/2 tiles
+    (every layer rounding the same way), silently changing the FLOP
+    budget Algorithm 1 allocated. Here the total is pinned first —
+    T = round(sum(budgets) * n_tiles), clipped to the feasible
+    [L, L * n_tiles] — and the per-layer floors are topped up in order
+    of largest fractional remainder (ties broken by layer index), so
+    sum(counts) == T exactly while staying within [1, n_tiles] per
+    layer."""
+    b = np.asarray(budgets, np.float64)
+    L = len(b)
+    raw = np.clip(b, 0.0, 1.0) * n_tiles
+    total = int(np.clip(np.round(raw.sum()), L, L * n_tiles))
+    counts = np.clip(np.floor(raw), 1, n_tiles).astype(np.int64)
+    rem = raw - np.floor(raw)
+    # stable order: biggest remainder first, then layer index
+    order = np.lexsort((np.arange(L), -rem))
+    deficit = total - int(counts.sum())
+    if deficit > 0:
+        for i in order:
+            if deficit == 0:
+                break
+            room = n_tiles - counts[i]
+            take = min(room, deficit)
+            counts[i] += take
+            deficit -= take
+    elif deficit < 0:
+        for i in order[::-1]:          # smallest remainder loses first
+            if deficit == 0:
+                break
+            room = counts[i] - 1
+            give = min(room, -deficit)
+            counts[i] -= give
+            deficit += give
+    return counts.astype(np.int32)
 
 
 def uniform_budgets(n_layers: int, budget: float):
     return np.full(n_layers, budget)
+
+
+# --------------------------------------------------------- SparsityPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityPlan:
+    """A resolved sparsity policy: per-layer kept-tile counts.
+
+    The first-class object every FastForward FLOP-reducing path takes
+    (gather, batched Pallas kernel, decode, MoE shared expert) —
+    replacing the scattered `k_tiles=` / `keep_frac=` scalars.
+
+    Contract:
+      * `tile_counts[l]` is layer l's kept tile count, in [1, n_tiles].
+      * `k_max = max(tile_counts)` is the STATIC tile-id width: the
+        gather/kernel paths always select the top-`k_max` tiles so the
+        layer scan stays shape-homogeneous; a per-layer traced count
+        (`k_valid`) masks (XLA) or `pl.when`-skips (Pallas) the tail
+        tiles a cheaper layer does not consume.
+      * hashable + eq (frozen, tuple-backed): usable as a jit static
+        argument. The serving runtime compiles one executable per
+        (plan, width bucket), the scheduler batches only same-plan
+        rows per prefill call, and warmup pre-compiles every pair, so
+        mixed-effort traffic never recompiles.
+      * `keep` is the requested GLOBAL keep-fraction the plan was
+        resolved from; `with_tiles` uses it to re-derive the plan on a
+        different FFN width (MoE shared expert) with the same rule the
+        legacy `k_tiles_for` used, keeping the uniform shim
+        bit-identical to pre-plan configs.
+    """
+
+    name: str
+    tile_counts: Tuple[int, ...]
+    n_tiles: int
+    tile: int
+    keep: float
+
+    def __post_init__(self):
+        if not self.tile_counts:
+            raise ValueError("SparsityPlan needs at least one layer")
+        if min(self.tile_counts) < 1 or max(self.tile_counts) > self.n_tiles:
+            raise ValueError(
+                f"tile_counts must lie in [1, {self.n_tiles}]: "
+                f"{self.tile_counts}")
+
+    # ----- derived properties -----
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.tile_counts)
+
+    @property
+    def k_max(self) -> int:
+        return max(self.tile_counts)
+
+    @property
+    def is_uniform(self) -> bool:
+        return min(self.tile_counts) == max(self.tile_counts)
+
+    @property
+    def keep_fracs(self) -> np.ndarray:
+        """Realized per-layer keep fractions (drives the mask-path
+        oracle and the stats line)."""
+        return np.asarray(self.tile_counts, np.float64) / self.n_tiles
+
+    def flop_frac(self) -> float:
+        """Aggregate FFN FLOP fraction vs dense (analytical)."""
+        return float(sum(self.tile_counts)) / (self.n_layers * self.n_tiles)
+
+    def counts_array(self):
+        """[L] int32 device array — rides the layer scan as xs so each
+        layer consumes its own count as a traced value."""
+        return jnp.asarray(self.tile_counts, jnp.int32)
+
+    # ----- constructors -----
+
+    @classmethod
+    def uniform(cls, n_layers: int, n_tiles: int, tile: int, keep: float,
+                shards: int = 1, name: Optional[str] = None
+                ) -> "SparsityPlan":
+        """Uniform plan under the legacy `k_tiles_for` rule:
+        k = ceil(keep * n_tiles), rounded up to a shard multiple when
+        balanced per-shard selection applies — so configs that only set
+        cfg.ff.sparsity resolve to a bit-identical policy."""
+        k = max(int(np.ceil(keep * n_tiles)), 1)
+        if shards > 1 and n_tiles % shards == 0:
+            per = max(int(np.ceil(k / shards)), 1)
+            k = per * shards
+        k = min(k, n_tiles)
+        return cls(name=name or f"uniform-k{k}",
+                   tile_counts=(k,) * n_layers, n_tiles=n_tiles,
+                   tile=tile, keep=float(keep))
+
+    @classmethod
+    def uniform_counts(cls, n_layers: int, n_tiles: int, tile: int,
+                       k_tiles: int, name: Optional[str] = None
+                       ) -> "SparsityPlan":
+        """Deprecation shim for bare `k_tiles=` integers."""
+        k = min(max(int(k_tiles), 1), n_tiles)
+        return cls(name=name or f"uniform-k{k}",
+                   tile_counts=(k,) * n_layers, n_tiles=n_tiles,
+                   tile=tile, keep=k / n_tiles)
+
+    @classmethod
+    def from_budgets(cls, budgets, n_tiles: int, tile: int,
+                     keep: Optional[float] = None,
+                     name: str = "layerwise") -> "SparsityPlan":
+        """Per-layer keep-fractions (Algorithm 1 output) -> plan, with
+        largest-remainder rounding so the realized total matches the
+        global budget exactly."""
+        budgets = np.asarray(budgets, np.float64)
+        counts = budgets_to_tiles(budgets, n_tiles)
+        return cls(name=name, tile_counts=tuple(int(c) for c in counts),
+                   n_tiles=n_tiles, tile=tile,
+                   keep=float(keep if keep is not None else budgets.mean()))
+
+    @classmethod
+    def from_importance(cls, importance, keep: float, n_tiles: int,
+                        tile: int, name: str = "layerwise"
+                        ) -> "SparsityPlan":
+        """Algorithm 1 end-to-end: calibration importance + global
+        keep-fraction -> waterfilled budgets -> integer tile counts."""
+        budgets = allocate_budgets(importance, keep)
+        return cls.from_budgets(budgets, n_tiles, tile, keep=keep,
+                                name=name)
+
+    # ----- derivation -----
+
+    def with_tiles(self, n_tiles: int) -> "SparsityPlan":
+        """Re-derive this plan for a different FFN width (tile grid).
+
+        Uniform plans reapply the legacy ceil rule on `keep` — exactly
+        what `k_tiles_for(cfg, d_ff=...)` produced, so the MoE shared
+        expert keeps its pre-plan tile count under the compat shim.
+        Layer-wise plans map per-layer keep fractions onto the new grid
+        with the same largest-remainder correction."""
+        if n_tiles == self.n_tiles:
+            return self
+        if self.is_uniform:
+            derived = SparsityPlan.uniform(self.n_layers, n_tiles,
+                                           self.tile, self.keep)
+            return dataclasses.replace(derived,
+                                       name=f"{self.name}@t{n_tiles}")
+        derived = SparsityPlan.from_budgets(
+            self.keep_fracs, n_tiles, self.tile, keep=self.keep,
+            name=f"{self.name}@t{n_tiles}")
+        return derived
 
 
 def calibrate_layer_importance(collect_attn_fn, samples, block_size: int):

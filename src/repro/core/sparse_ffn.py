@@ -61,18 +61,25 @@ def tile_scores(scores, tile: int):
     return scores.reshape(scores.shape[:-1] + (F // tile, tile)).sum(-1)
 
 
-def neuron_mask_from_scores(scores, keep_frac, tile: int):
+def neuron_mask_from_scores(scores, keep_frac, tile: int, k_tiles=None):
     """Dynamic-threshold tile mask (supports traced per-layer budgets).
 
     scores: [..., F]; keep_frac: scalar (may be traced). Returns a
     {0,1} mask [..., F] keeping the top ceil(keep_frac * n_tiles) tiles.
+    k_tiles: optional traced int32 tile count that OVERRIDES keep_frac
+    — the mask-path twin of a SparsityPlan's per-layer counts, exact
+    where ceil(keep * n_tiles) could drift by one tile in float.
     """
     # Hard top-k selection: not differentiable by construction (the
     # predictor is trained via its own BCE objective, paper §3.2), so the
     # whole mask is a stop_gradient region.
     ts = jax.lax.stop_gradient(tile_scores(scores, tile))  # [..., n_tiles]
     n_tiles = ts.shape[-1]
-    k = jnp.clip(jnp.ceil(keep_frac * n_tiles).astype(jnp.int32), 1, n_tiles)
+    if k_tiles is not None:
+        k = jnp.clip(jnp.asarray(k_tiles, jnp.int32), 1, n_tiles)
+    else:
+        k = jnp.clip(jnp.ceil(keep_frac * n_tiles).astype(jnp.int32),
+                     1, n_tiles)
     sorted_ts = jnp.sort(ts, axis=-1)                   # ascending
     thresh = jnp.take_along_axis(
         sorted_ts, (n_tiles - k) * jnp.ones(ts.shape[:-1] + (1,), jnp.int32),
@@ -112,7 +119,8 @@ def balanced_topk_tiles(scores, k_tiles: int, tile: int, shards: int = 1):
     return idx.astype(jnp.int32)
 
 
-def ffn_sparse_gather(params, x_block, tile_ids, tile: int, act: str = "silu"):
+def ffn_sparse_gather(params, x_block, tile_ids, tile: int, act: str = "silu",
+                      k_valid=None):
     """Gather path for ONE block: x_block [N, D], tile_ids [K] -> [N, D].
 
     FLOPs = (K*tile/d_ff) of the dense FFN. The gathered tiles are
@@ -122,6 +130,13 @@ def ffn_sparse_gather(params, x_block, tile_ids, tile: int, act: str = "silu"):
     was measured ~1.8x SLOWER on XLA-CPU at tinyllama scale: the
     concat materializes the full [D, 2F] weights per layer call,
     memory traffic that dwarfs the take it saves. Two takes it is.)
+
+    k_valid: optional traced int32 scalar — only the FIRST k_valid of
+    the K selected tiles contribute (tile_ids are top-k ordered, so the
+    prefix IS the top-k_valid selection). This is how a layer-wise
+    SparsityPlan consumes fewer tiles on some layers while the scan
+    over layers keeps one static K; invalid tiles are masked out of the
+    hidden activations before the down-projection.
     """
     D, F = params["wu"].shape
     n_tiles = F // tile
@@ -144,27 +159,49 @@ def ffn_sparse_gather(params, x_block, tile_ids, tile: int, act: str = "silu"):
         up = jnp.einsum("nd,dkt->nkt", x_block, u,
                         preferred_element_type=jnp.float32)
         h = ACTIVATIONS[act](up).astype(x_block.dtype)
+    if k_valid is not None:
+        K = tile_ids.shape[-1]
+        valid = jnp.arange(K) < jnp.asarray(k_valid, jnp.int32)
+        h = h * valid[None, :, None].astype(h.dtype)
     y = jnp.einsum("nkt,ktd->nd", h, d,
                    preferred_element_type=jnp.float32)
     return y.astype(x_block.dtype)
 
 
-def ffn_sparse_batched(params, x_blocks, tile_ids, tile: int, act: str = "silu"):
+def ffn_sparse_batched(params, x_blocks, tile_ids, tile: int,
+                       act: str = "silu", k_valid=None):
     """x_blocks [B, N, D], tile_ids [B, K] -> [B, N, D] — every row
     selects its own tiles (the multi-request prefill hot path).
 
     Gated-silu FFNs dispatch through repro.kernels.sparse_ffn.ops:
     TPU hits the batched Pallas kernel (grid (B, n_token_blocks, K),
     per-row scalar-prefetched tile ids), CPU keeps the reshape-free XLA
-    path. Other activations fall back to the vmapped gather path."""
+    path. Other activations fall back to the vmapped gather path.
+
+    k_valid: optional traced int32 scalar or [B] vector — per-row valid
+    tile count (<= K). Rows consume only their first k_valid selected
+    tiles: the Pallas kernel `pl.when`-skips the dead grid steps (real
+    FLOP skip on TPU), the XLA paths mask the hidden tiles. This is
+    the mechanism behind per-layer SparsityPlan counts (scalar, riding
+    the layer scan) and per-request effort tiers at decode ([B], from
+    traced plan ids)."""
+    if k_valid is not None:
+        k_valid = jnp.broadcast_to(jnp.asarray(k_valid, jnp.int32),
+                                   x_blocks.shape[:1])
     if "wg" in params and act == "silu":
         from repro.kernels.sparse_ffn import ops
         y = ops.sparse_ffn_batched_op(x_blocks, params["wg"], params["wu"],
-                                      params["wd"], tile_ids, tile=tile)
+                                      params["wd"], tile_ids, tile=tile,
+                                      k_valid=k_valid)
         return y.astype(x_blocks.dtype)
+    if k_valid is None:
+        return jax.vmap(
+            lambda xb, ids: ffn_sparse_gather(params, xb, ids, tile, act)
+        )(x_blocks, tile_ids)
     return jax.vmap(
-        lambda xb, ids: ffn_sparse_gather(params, xb, ids, tile, act)
-    )(x_blocks, tile_ids)
+        lambda xb, ids, kv: ffn_sparse_gather(params, xb, ids, tile, act,
+                                              k_valid=kv)
+    )(x_blocks, tile_ids, k_valid)
 
 
 def ffn_block_sparse_shardmap(params, cfg, x_block, k_tiles: int, mesh):

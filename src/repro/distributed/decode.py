@@ -61,8 +61,8 @@ def decode_step_seqsharded(params, cfg: ModelConfig, token, cache,
     B = token.shape[0]
     x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
     positions = jnp.full((B, 1), position)
-    k_tiles = (FF.k_tiles_for(cfg, shards=shards)
-               if (ff.enabled and ff.apply_to_decode) else 0)
+    plan = (FF.resolve_plan(cfg, shards=shards)
+            if (ff.enabled and ff.apply_to_decode) else None)
 
     def layer_body(x, layer_in):
         lp, kc, vc = layer_in
@@ -74,8 +74,8 @@ def decode_step_seqsharded(params, cfg: ModelConfig, token, cache,
         o = decode_attention_seqsharded(q, kc, vc, position, mesh)
         x = x + A.output_proj(lp["attn"], o)
         xn2 = D.apply_norm(cfg, lp["ln2"], x)
-        if k_tiles:
-            y = FF.ff_decode_sparse(lp["ffn"], cfg, xn2, k_tiles, shards)
+        if plan is not None:
+            y = FF.ff_decode_sparse(lp["ffn"], cfg, xn2, plan, shards)
         else:
             y = FF.ff_dense(lp["ffn"], cfg, xn2)
         return x + y, (kc, vc)

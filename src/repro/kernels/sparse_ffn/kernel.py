@@ -26,48 +26,64 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 
 
-def _sparse_ffn_kernel(ids_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+def _sparse_ffn_kernel(ids_ref, cnt_ref, x_ref, wg_ref, wu_ref, wd_ref,
+                       o_ref):
     k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...].astype(jnp.float32)
-    hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
-    hu = jax.lax.dot(x, wu_ref[...].astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
-    h = hg * jax.nn.sigmoid(hg) * hu
-    y = jax.lax.dot(h, wd_ref[...].astype(jnp.float32),
-                    preferred_element_type=jnp.float32)
-    o_ref[...] += y.astype(o_ref.dtype)
+    # SparsityPlan per-layer counts: tiles past this layer's count are
+    # dead grid steps — skip the whole MXU body (their slab DMAs still
+    # run; DMA skipping is a follow-on, same note as paged attention)
+    @pl.when(k < cnt_ref[0])
+    def _step():
+        x = x_ref[...].astype(jnp.float32)
+        hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        hu = jax.lax.dot(x, wu_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        h = hg * jax.nn.sigmoid(hg) * hu
+        y = jax.lax.dot(h, wd_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        o_ref[...] += y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "block_n", "interpret"))
-def sparse_ffn(x, wg, wu, wd, tile_ids, *, tile: int = 128,
+def sparse_ffn(x, wg, wu, wd, tile_ids, k_valid=None, *, tile: int = 128,
                block_n: int = 128, interpret: bool = False):
     """x: [N, D]; wg/wu: [D, F]; wd: [F, D]; tile_ids: [K] int32 (global
-    tile ids). Returns [N, D] float32. N % block_n == 0, F % tile == 0."""
+    tile ids). Returns [N, D] float32. N % block_n == 0, F % tile == 0.
+
+    k_valid: optional traced int32 scalar — only the first k_valid of
+    the K selected tiles are computed (grid steps past it are
+    `pl.when`-skipped). None keeps all K (uniform plans)."""
     N, D = x.shape
     F = wg.shape[1]
     K = tile_ids.shape[0]
     assert N % block_n == 0 and F % tile == 0
+    cnt = (jnp.full((1,), K, jnp.int32) if k_valid is None
+           else jnp.reshape(jnp.asarray(k_valid, jnp.int32), (1,)))
 
     grid = (N // block_n, K)
 
     kernel = pl.pallas_call(
         _sparse_ffn_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((block_n, D), lambda n, k, ids: (n, 0)),
-                pl.BlockSpec((D, tile), lambda n, k, ids: (0, ids[k])),
-                pl.BlockSpec((D, tile), lambda n, k, ids: (0, ids[k])),
-                pl.BlockSpec((tile, D), lambda n, k, ids: (ids[k], 0)),
+                pl.BlockSpec((block_n, D), lambda n, k, ids, cnt: (n, 0)),
+                pl.BlockSpec((D, tile),
+                             lambda n, k, ids, cnt: (0, ids[k])),
+                pl.BlockSpec((D, tile),
+                             lambda n, k, ids, cnt: (0, ids[k])),
+                pl.BlockSpec((tile, D),
+                             lambda n, k, ids, cnt: (ids[k], 0)),
             ],
-            out_specs=pl.BlockSpec((block_n, D), lambda n, k, ids: (n, 0)),
+            out_specs=pl.BlockSpec((block_n, D),
+                                   lambda n, k, ids, cnt: (n, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((N, D), jnp.float32),
         compiler_params=tpu_compiler_params(
@@ -75,31 +91,38 @@ def sparse_ffn(x, wg, wu, wd, tile_ids, *, tile: int = 128,
         ),
         interpret=interpret,
     )
-    return kernel(tile_ids, x, wg, wu, wd)
+    return kernel(tile_ids, cnt, x, wg, wu, wd)
 
 
-def _sparse_ffn_batched_kernel(ids_ref, x_ref, wg_ref, wu_ref, wd_ref,
-                               o_ref):
+def _sparse_ffn_batched_kernel(ids_ref, cnt_ref, x_ref, wg_ref, wu_ref,
+                               wd_ref, o_ref):
+    b = pl.program_id(0)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[0].astype(jnp.float32)
-    hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
-    hu = jax.lax.dot(x, wu_ref[...].astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
-    h = hg * jax.nn.sigmoid(hg) * hu
-    y = jax.lax.dot(h, wd_ref[...].astype(jnp.float32),
-                    preferred_element_type=jnp.float32)
-    o_ref[0] += y.astype(o_ref.dtype)
+    # per-ROW valid counts (SparsityPlan layer counts during prefill,
+    # per-request effort tiers at decode): row b's tiles past
+    # cnt_ref[b] are dead grid steps — the MXU body is skipped
+    @pl.when(k < cnt_ref[b])
+    def _step():
+        x = x_ref[0].astype(jnp.float32)
+        hg = jax.lax.dot(x, wg_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        hu = jax.lax.dot(x, wu_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        h = hg * jax.nn.sigmoid(hg) * hu
+        y = jax.lax.dot(h, wd_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        o_ref[0] += y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "block_n", "interpret"))
-def sparse_ffn_batched(x, wg, wu, wd, tile_ids, *, tile: int = 128,
-                       block_n: int = 128, interpret: bool = False):
+def sparse_ffn_batched(x, wg, wu, wd, tile_ids, k_valid=None, *,
+                       tile: int = 128, block_n: int = 128,
+                       interpret: bool = False):
     """Batched twin of `sparse_ffn` for multi-request prefill: every
     batch row selects its OWN K weight tiles.
 
@@ -111,28 +134,40 @@ def sparse_ffn_batched(x, wg, wu, wd, tile_ids, *, tile: int = 128,
     ids[b, k] — so the W_gate/W_up/W_down slab DMAs are redirected per
     batch row, exactly the serving layout where the scheduler packs one
     128-token block of B distinct requests into one jitted call.
+
+    k_valid: optional traced [B] int32 per-row valid tile counts — row
+    b's grid steps with k >= k_valid[b] skip the MXU body (`pl.when`),
+    so a layer-wise SparsityPlan's cheap layers and low-effort requests
+    spend FLOPs proportional to their OWN counts while K stays static.
+    None keeps all K tiles for every row (uniform plans).
     """
     B, N, D = x.shape
     F = wg.shape[1]
     K = tile_ids.shape[1]
     assert tile_ids.shape[0] == B
     assert N % block_n == 0 and F % tile == 0
+    cnt = (jnp.full((B,), K, jnp.int32) if k_valid is None
+           else jnp.broadcast_to(jnp.asarray(k_valid, jnp.int32), (B,)))
 
     grid = (B, N // block_n, K)
 
     kernel = pl.pallas_call(
         _sparse_ffn_batched_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, block_n, D), lambda b, n, k, ids: (b, n, 0)),
-                pl.BlockSpec((D, tile), lambda b, n, k, ids: (0, ids[b, k])),
-                pl.BlockSpec((D, tile), lambda b, n, k, ids: (0, ids[b, k])),
-                pl.BlockSpec((tile, D), lambda b, n, k, ids: (ids[b, k], 0)),
+                pl.BlockSpec((1, block_n, D),
+                             lambda b, n, k, ids, cnt: (b, n, 0)),
+                pl.BlockSpec((D, tile),
+                             lambda b, n, k, ids, cnt: (0, ids[b, k])),
+                pl.BlockSpec((D, tile),
+                             lambda b, n, k, ids, cnt: (0, ids[b, k])),
+                pl.BlockSpec((tile, D),
+                             lambda b, n, k, ids, cnt: (ids[b, k], 0)),
             ],
             out_specs=pl.BlockSpec((1, block_n, D),
-                                   lambda b, n, k, ids: (b, n, 0)),
+                                   lambda b, n, k, ids, cnt: (b, n, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((B, N, D), jnp.float32),
         compiler_params=tpu_compiler_params(
@@ -140,7 +175,7 @@ def sparse_ffn_batched(x, wg, wu, wd, tile_ids, *, tile: int = 128,
         ),
         interpret=interpret,
     )
-    return kernel(tile_ids, x, wg, wu, wd)
+    return kernel(tile_ids, cnt, x, wg, wu, wd)
 
 
 def _dense_ffn_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):

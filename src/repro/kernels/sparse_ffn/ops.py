@@ -34,24 +34,29 @@ def _block_n_for(N: int) -> int:
 
 
 def sparse_ffn_op(x, wg, wu, wd, tile_ids, tile: int = 128,
-                  use_kernel: bool | None = None):
+                  use_kernel: bool | None = None, k_valid=None):
     """Dispatch: Pallas kernel on TPU, interpret-mode kernel if forced,
-    jnp oracle otherwise. x: [N, D] or [B, N, D] (batched kernel)."""
+    jnp oracle otherwise. x: [N, D] or [B, N, D] (batched kernel).
+    k_valid: optional traced valid-tile count (scalar for [N, D], [B]
+    for batched) — a SparsityPlan's per-layer/per-row counts; the
+    kernel `pl.when`-skips dead tiles, the oracle masks them."""
     if use_kernel is None:
         use_kernel = on_tpu()
     if x.ndim == 3:
         return sparse_ffn_batched_op(x, wg, wu, wd, tile_ids, tile=tile,
-                                     use_kernel=use_kernel)
+                                     use_kernel=use_kernel,
+                                     k_valid=k_valid)
     if use_kernel:
         interp = not on_tpu()
-        return K.sparse_ffn(x, wg, wu, wd, tile_ids, tile=tile,
+        return K.sparse_ffn(x, wg, wu, wd, tile_ids, k_valid, tile=tile,
                             block_n=_block_n_for(x.shape[0]),
                             interpret=interp)
-    return R.sparse_ffn_ref(x, wg, wu, wd, tile_ids, tile)
+    return R.sparse_ffn_ref(x, wg, wu, wd, tile_ids, tile,
+                            k_valid=k_valid)
 
 
 def sparse_ffn_batched_op(x, wg, wu, wd, tile_ids, tile: int = 128,
-                          use_kernel: bool | None = None):
+                          use_kernel: bool | None = None, k_valid=None):
     """Batched multi-request dispatch: x [B, N, D], tile_ids [B, K]
     (every row selects its own tiles) -> [B, N, D] float32.
 
@@ -59,15 +64,21 @@ def sparse_ffn_batched_op(x, wg, wu, wd, tile_ids, tile: int = 128,
     a vmap of B single-block kernels — the grid's batch axis keeps one
     kernel launch and lets Mosaic pipeline the per-row weight DMAs).
     CPU: reshape-free XLA gather path. `use_kernel=True` off-TPU runs the
-    batched kernel in interpret mode (equivalence cross-check)."""
+    batched kernel in interpret mode (equivalence cross-check).
+
+    k_valid: optional traced [B] int32 per-row valid tile counts (see
+    kernel.sparse_ffn_batched) — the FLOP-reducing carrier of
+    SparsityPlan layer counts and per-request effort tiers."""
     if use_kernel is None:
         use_kernel = on_tpu()
     if use_kernel:
         interp = not on_tpu()
-        return K.sparse_ffn_batched(x, wg, wu, wd, tile_ids, tile=tile,
+        return K.sparse_ffn_batched(x, wg, wu, wd, tile_ids, k_valid,
+                                    tile=tile,
                                     block_n=_block_n_for(x.shape[1]),
                                     interpret=interp)
-    return R.sparse_ffn_batched_ref(x, wg, wu, wd, tile_ids, tile)
+    return R.sparse_ffn_batched_ref(x, wg, wu, wd, tile_ids, tile,
+                                    k_valid=k_valid)
 
 
 def dense_ffn_op(x, wg, wu, wd, use_kernel: bool | None = None):

@@ -12,9 +12,11 @@ import jax
 import jax.numpy as jnp
 
 
-def sparse_ffn_ref(x, wg, wu, wd, tile_ids, tile: int):
+def sparse_ffn_ref(x, wg, wu, wd, tile_ids, tile: int, k_valid=None):
     """x: [N, D]; wg/wu: [D, F]; wd: [F, D]; tile_ids: [K] int32.
-    Returns [N, D] in float32."""
+    Returns [N, D] in float32. k_valid: optional traced int32 scalar —
+    only the first k_valid selected tiles contribute (SparsityPlan
+    per-layer counts under a static K)."""
     D, F = wg.shape
     n_tiles = F // tile
     wg_t = wg.reshape(D, n_tiles, tile)
@@ -27,10 +29,15 @@ def sparse_ffn_ref(x, wg, wu, wd, tile_ids, tile: int):
     hg = x32 @ g.astype(jnp.float32)
     hu = x32 @ u.astype(jnp.float32)
     h = hg * jax.nn.sigmoid(hg) * hu
+    if k_valid is not None:
+        K = tile_ids.shape[-1]
+        valid = jnp.arange(K) < jnp.asarray(k_valid, jnp.int32)
+        h = h * jnp.repeat(valid, tile).astype(h.dtype)[None, :]
     return h @ d.astype(jnp.float32)
 
 
-def sparse_ffn_batched_ref(x, wg, wu, wd, tile_ids, tile: int):
+def sparse_ffn_batched_ref(x, wg, wu, wd, tile_ids, tile: int,
+                           k_valid=None):
     """Batched oracle: x [B, N, D]; tile_ids [B, K] — each row selects
     its own tiles. Returns [B, N, D] float32.
 
@@ -38,7 +45,11 @@ def sparse_ffn_batched_ref(x, wg, wu, wd, tile_ids, tile: int):
     tiles stay in [K, tile] layout — the einsums contract over (k, t)
     directly, no [D, K*tile] reshape copies. (Fusing wg|wu into one
     concatenated take materializes the full weights per call — measured
-    slower; see repro.core.sparse_ffn.ffn_sparse_gather.)"""
+    slower; see repro.core.sparse_ffn.ffn_sparse_gather.)
+
+    k_valid: optional traced [B] int32 — row b consumes only its first
+    k_valid[b] selected tiles; the rest are masked out of the hidden
+    activations (the XLA twin of the kernel's pl.when skip)."""
     D, F = wg.shape
     n_tiles = F // tile
     g = jnp.take(wg.reshape(D, n_tiles, tile), tile_ids,
@@ -51,6 +62,11 @@ def sparse_ffn_batched_ref(x, wg, wu, wd, tile_ids, tile: int):
     hg = jnp.einsum("bnd,dbkt->bnkt", x32, g)
     hu = jnp.einsum("bnd,dbkt->bnkt", x32, u)
     h = hg * jax.nn.sigmoid(hg) * hu
+    if k_valid is not None:
+        K = tile_ids.shape[-1]
+        valid = (jnp.arange(K)[None, :]
+                 < jnp.asarray(k_valid, jnp.int32)[:, None])   # [B, K]
+        h = h * valid[:, None, :, None].astype(h.dtype)
     return jnp.einsum("bnkt,bktd->bnd", h, d)
 
 

@@ -35,6 +35,15 @@ loop as the Poisson simulator:
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --stream --trace benchmarks/traces/sample_trace.jsonl
+
+SLO-tiered sparsity (--effort): requests select a SparsityPlan effort
+tier ("dense" / "balanced" / "turbo"); a comma list round-robins tiers
+across the stream (mixed-effort traffic through the pre-compiled
+per-plan executables — the no-recompilation assertion still holds),
+and trace records may carry their own `effort` field:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --stream --requests 16 --effort balanced,turbo
 """
 from __future__ import annotations
 
@@ -45,6 +54,7 @@ import numpy as np
 import jax
 
 from repro.configs import ALL, get_config
+from repro.core.fastforward import EFFORT_TIERS, resolve_plan
 from repro.models.registry import get_model
 from repro.nn.param import init_params
 from repro.serving import (ContinuousBatchingScheduler, Request,
@@ -90,13 +100,18 @@ def serve_stream(cfg, params, args):
     """Request stream (Poisson plan or trace replay) through the
     continuous-batching scheduler."""
     rng = np.random.default_rng(args.seed)
-    runtime = make_runtime(cfg, params)
-    N = runtime.block_size
+    efforts = ([e.strip() for e in args.effort.split(",") if e.strip()]
+               if args.effort and cfg.ff.enabled else [])
+    N = cfg.ff.block_size
 
     if args.trace:
+        # records without their own `effort` round-robin the CLI tiers
         requests = load_trace(args.trace, cfg.vocab, seed=args.seed,
                               eos_id=args.eos_id,
                               temperature=args.temperature)
+        for i, r in enumerate(requests):
+            if r.effort is None and efforts:
+                r.effort = efforts[i % len(efforts)]
         tstats = trace_stats(requests)
         print(f"trace {args.trace}: {tstats}")
         max_prompt = max(len(r.prompt) for r in requests)
@@ -111,10 +126,22 @@ def serve_stream(cfg, params, args):
         requests = [
             Request(rid=i, prompt=prompts[i], max_new=int(max_news[i]),
                     temperature=args.temperature, arrival_time=arrivals[i],
-                    eos_id=args.eos_id)
+                    eos_id=args.eos_id,
+                    effort=efforts[i % len(efforts)] if efforts else None)
             for i in range(args.requests)]
         max_blocks = -(-args.prompt_len // N)
         cache_len = max_blocks * N + max(args.max_new, 2)
+
+    # register one SparsityPlan per effort tier in the stream. The
+    # default ("balanced" == the cfg budget) is plans[0]; requests
+    # without an effort take it. Every (plan, width bucket) pair is
+    # pre-compiled by warmup, so the mixed-tier stream never recompiles.
+    plans = None
+    if cfg.ff.enabled:
+        names = ["balanced"] + [e for e in dict.fromkeys(
+            r.effort for r in requests if r.effort) if e != "balanced"]
+        plans = tuple(resolve_plan(cfg, effort=e) for e in names)
+    runtime = make_runtime(cfg, params, plans=plans)
 
     sched = ContinuousBatchingScheduler(
         runtime, n_slots=args.slots, cache_len=cache_len, seed=args.seed,
@@ -154,6 +181,15 @@ def serve_stream(cfg, params, args):
               f"{pool.total_page_allocs} / frees {pool.total_page_frees} "
               f"| stranded@peak {pool.stranded_tokens_at_peak} tok | "
               f"preemptions {sched.n_preemptions}")
+    sp = sched.sparsity_stats()
+    for row in sp["plans"]:
+        print(f"sparsity[{row['name']}]: keep/layer "
+              f"{row['keep_per_layer']} | ffn flop frac "
+              f"{row['ffn_flop_frac']:.3f} | {row['prefill_blocks']} "
+              f"prefill blocks, {row['decode_tokens']} decode tokens")
+    if sp["aggregate_ffn_flop_frac"] is not None:
+        print(f"sparsity aggregate ffn flop frac (work-weighted): "
+              f"{sp['aggregate_ffn_flop_frac']:.3f}")
     print(f"ticks {sched.n_ticks} | prefill blocks "
           f"{sched.n_prefill_blocks} in {sched.n_prefill_ticks} prefill "
           f"ticks (P<={sched.prefill_batch}) | decode steps "
@@ -211,6 +247,12 @@ def main():
                         "(see repro.serving.trace) instead of the "
                         "Poisson plan; --requests/--rate/--prompt-len/"
                         "--max-new are ignored")
+    p.add_argument("--effort", default=None,
+                   help="stream mode: SparsityPlan effort tier(s) — "
+                        f"one of {'/'.join(EFFORT_TIERS)} or a comma "
+                        "list round-robined across requests "
+                        "(SLO-tiered sparsity; trace records may carry "
+                        "their own 'effort')")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
     if args.max_new < 1:

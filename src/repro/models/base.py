@@ -17,7 +17,13 @@ class FastForwardConfig:
     tile: int = 128                # neuron tile granularity (TPU adaptation)
     predictor_dim: int = 0         # r  (0 -> d_model/16 rounded up to pow2)
     compensator_dim: int = 0       # r' (0 -> d_model/8)
-    layerwise_schedule: bool = True  # Algorithm 1 (mask path only; see DESIGN)
+    # Algorithm 1: resolved into a SparsityPlan (per-layer integer tile
+    # counts) that drives the mask path AND the FLOP-reducing
+    # gather/Pallas paths — see the DESIGN note in core/fastforward.py
+    # (resolution, [L] count padding, serving batching-key membership).
+    # Configs that only set `sparsity` resolve to SparsityPlan.uniform
+    # (bit-identical to the legacy k_tiles_for scalar).
+    layerwise_schedule: bool = True
     dense_first_block: bool = True
     dense_last_block: bool = True
     apply_to_decode: bool = True   # paper Table 3: reuse for generation

@@ -61,15 +61,18 @@ def specs(cfg: ModelConfig):
 # ---------------------------------------------------------------- forward
 
 
-def _ffn_apply_masked(cfg: ModelConfig, fp, x, budget):
+def _ffn_apply_masked(cfg: ModelConfig, fp, x, budget, k_tiles=None):
     if cfg.ff.enabled:
-        return FF.ff_masked_sequence(fp, cfg, x, budget)
+        return FF.ff_masked_sequence(fp, cfg, x, budget, k_tiles=k_tiles)
     return FF.ff_dense(fp, cfg, x)
 
 
-def forward(params, cfg: ModelConfig, batch, budgets=None):
+def forward(params, cfg: ModelConfig, batch, budgets=None, plan=None):
     """batch: {"tokens": [B,T]} (+"inputs_embeds" for VLM reuse).
-    Returns (logits [B,T,V], aux dict)."""
+    budgets: optional [L] keep-fractions (mask path, Algorithm 1);
+    plan: optional SparsityPlan — its exact integer per-layer counts
+    ride the scan instead (the mask-path oracle of the plan-taking
+    gather/kernel paths). Returns (logits [B,T,V], aux dict)."""
     tokens = batch["tokens"]
     if "inputs_embeds" in batch:
         x = batch["inputs_embeds"].astype(cfg.dtype)
@@ -78,11 +81,19 @@ def forward(params, cfg: ModelConfig, batch, budgets=None):
     B, T = x.shape[:2]
     x = constrain(x, ("batch", None, None))
     pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
-    if budgets is None:
+    counts = None
+    if plan is not None:
+        counts = plan.counts_array()
+        budgets = jnp.asarray(plan.keep_fracs, jnp.float32)
+    elif budgets is None:
         budgets = jnp.asarray(FF.layer_budgets(cfg), jnp.float32)
 
     def body(x, layer_in):
-        lp, budget = layer_in
+        if counts is None:
+            lp, budget = layer_in
+            k_l = None
+        else:
+            lp, budget, k_l = layer_in
         xn = apply_norm(cfg, lp["ln1"], x)
         h = A.attend_full(lp["attn"], xn, pos, causal=True,
                           window=cfg.sliding_window,
@@ -90,13 +101,15 @@ def forward(params, cfg: ModelConfig, batch, budgets=None):
                           chunk=cfg.attn_chunk)
         x = x + h
         xn2 = apply_norm(cfg, lp["ln2"], x)
-        y = _ffn_apply_masked(cfg, lp["ffn"], xn2, budget)
+        y = _ffn_apply_masked(cfg, lp["ffn"], xn2, budget, k_tiles=k_l)
         x = constrain(x + y, ("batch", None, None))
         return x, None
 
     if cfg.remat:
         body = jax.checkpoint(body)
-    x, _ = jax.lax.scan(body, x, (params["layers"], budgets))
+    xs = ((params["layers"], budgets) if counts is None
+          else (params["layers"], budgets, counts))
+    x, _ = jax.lax.scan(body, x, xs)
     x = apply_norm(cfg, params["ln_f"], x)
     logits = L.unembed(params["lm_head"], x)
     logits = constrain(logits, ("batch", None, "vocab"))
@@ -127,7 +140,7 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
 
 def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
                   is_dense=None, lengths=None, shards: int = 1,
-                  k_tiles=None, mesh=None):
+                  plan=None, k_tiles=None, mesh=None):
     """One N-token FastForward block at sequence offset `pos0`.
 
     This is the schedulable unit of prefill work used both by the
@@ -140,17 +153,28 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
     at the same offset (per-request chunked prefill uses B == 1);
     is_dense: traced bool forcing the dense FFN path (paper's dense
     first/last block), None when FastForward is disabled;
-    lengths: optional [B] true prompt lengths (right-pad masking).
+    lengths: optional [B] true prompt lengths (right-pad masking);
+    plan: SparsityPlan (static; None resolves the uniform cfg plan —
+    the backward-compat shim; a layer-wise plan rides its [L] counts
+    through the layer scan so each layer consumes its own K on the
+    gather/kernel path); k_tiles: deprecated int shim.
     Returns (cache, hidden [B, N, D]) with hidden pre-final-norm."""
     ff = cfg.ff
-    if k_tiles is None:
-        k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    if plan is None and k_tiles is not None:
+        plan = k_tiles
+    plan = FF._as_plan(cfg, plan, shards=shards) if ff.enabled else None
+    counts = (None if plan is None or plan.is_uniform
+              else plan.counts_array())
     N = tok_blk.shape[1]
     x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
     positions = pos0 + jnp.arange(N)[None, :]
 
     def layer_body(x, layer_in):
-        lp, kc, vc = layer_in
+        if counts is None:
+            lp, kc, vc = layer_in
+            k_l = None
+        else:
+            lp, kc, vc, k_l = layer_in
         xn = apply_norm(cfg, lp["ln1"], x)
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
@@ -161,29 +185,32 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
                                   lengths=lengths)
         x = x + h
         xn2 = apply_norm(cfg, lp["ln2"], x)
-        if ff.enabled and cfg.shardmap_ffn and mesh is not None:
+        if plan is not None and cfg.shardmap_ffn and mesh is not None:
             from repro.core.sparse_ffn import ffn_block_sparse_shardmap
+            # the shardmap gather is shard-balanced -> uniform width
             y = jax.lax.cond(
                 is_dense,
                 lambda xx: FF.ff_dense(lp["ffn"], cfg, xx),
                 lambda xx: ffn_block_sparse_shardmap(
-                    lp["ffn"], cfg, xx, k_tiles, mesh), xn2)
-        elif ff.enabled:
-            y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, k_tiles,
-                                   shards, is_dense)
+                    lp["ffn"], cfg, xx, plan.k_max, mesh), xn2)
+        elif plan is not None:
+            y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, plan,
+                                   shards, is_dense, k_valid=k_l)
         else:
             y = FF.ff_dense(lp["ffn"], cfg, xn2)
         return x + y, (kc, vc)
 
-    x, (ks, vs) = jax.lax.scan(
-        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    xs = (params["layers"], cache["k"], cache["v"])
+    if counts is not None:
+        xs = xs + (counts,)
+    x, (ks, vs) = jax.lax.scan(layer_body, x, xs)
     return {"k": ks, "v": vs}, x
 
 
 def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
                    is_dense=None, lengths=None, active=None,
-                   page_tables=None, shards: int = 1, k_tiles=None,
-                   mesh=None):
+                   page_tables=None, shards: int = 1, plan=None,
+                   k_tiles=None, mesh=None):
     """One N-token FastForward block of EACH of P distinct requests, at
     per-row sequence offsets — the batched schedulable prefill unit of
     the continuous-batching runtime (serving/runtime.py
@@ -206,17 +233,28 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
     [L, n_pages, psz, Kv, dh], each row's block K/V scatters onto the
     pages its table owns, and attention gathers the table-mapped
     contiguous view (nn/attention paged variants; bit-identical math).
+
+    plan: SparsityPlan (static — joins the scheduler's batching key, so
+    every row of one call shares it; its [L] counts ride the layer scan
+    when layer-wise); k_tiles: deprecated int shim.
     Returns (cache, hidden [P, N, D]) with hidden pre-final-norm."""
     if page_tables is None:
         del active  # rows are independent in the dense family
     ff = cfg.ff
-    if k_tiles is None:
-        k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    if plan is None and k_tiles is not None:
+        plan = k_tiles
+    plan = FF._as_plan(cfg, plan, shards=shards) if ff.enabled else None
+    counts = (None if plan is None or plan.is_uniform
+              else plan.counts_array())
     N = tok_blks.shape[1]
     x = L.embed(params["embed"], tok_blks).astype(cfg.dtype)
 
     def layer_body(x, layer_in):
-        lp, kc, vc = layer_in
+        if counts is None:
+            lp, kc, vc = layer_in
+            k_l = None
+        else:
+            lp, kc, vc, k_l = layer_in
         xn = apply_norm(cfg, lp["ln1"], x)
         positions = pos0s[:, None] + jnp.arange(N)[None, :]
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
@@ -238,20 +276,23 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
                                           lengths=lengths)
         x = x + h
         xn2 = apply_norm(cfg, lp["ln2"], x)
-        if ff.enabled:
-            y = FF.ff_blocks_sparse(lp["ffn"], cfg, xn2, k_tiles,
-                                    shards, is_dense)
+        if plan is not None:
+            y = FF.ff_blocks_sparse(lp["ffn"], cfg, xn2, plan,
+                                    shards, is_dense, k_valid=k_l)
         else:
             y = FF.ff_dense(lp["ffn"], cfg, xn2)
         return x + y, (kc, vc)
 
-    x, (ks, vs) = jax.lax.scan(
-        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    xs = (params["layers"], cache["k"], cache["v"])
+    if counts is not None:
+        xs = xs + (counts,)
+    x, (ks, vs) = jax.lax.scan(layer_body, x, xs)
     return {"k": ks, "v": vs}, x
 
 
 def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
-            lengths=None, collect_hidden: bool = False, mesh=None):
+            lengths=None, collect_hidden: bool = False, plan=None,
+            mesh=None):
     """Blockwise prompt processing (paper §3.1): scan over N-token blocks.
 
     batch: {"tokens": [B,T]}, T % block_size == 0. cache length >= T.
@@ -259,6 +300,7 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
     (positions beyond a row's length are never attended).
     collect_hidden: also return the full hidden sequence [B,T,D]
     (pre-final-norm) so the engine can read logits at lengths-1.
+    plan: SparsityPlan (None -> uniform cfg plan, the compat shim).
     Returns (cache, logits_last) or (cache, logits_last, hidden)."""
     tokens = batch["tokens"]
     ff = cfg.ff
@@ -266,7 +308,7 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
     N = ff.block_size
     nb = T // N
     blocks = tokens.reshape(B, nb, N).transpose(1, 0, 2)  # [nb, B, N]
-    k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    plan = FF._as_plan(cfg, plan, shards=shards) if ff.enabled else None
 
     def block_step(cache, blk_in):
         blk_idx, tok_blk = blk_in
@@ -277,7 +319,7 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
             is_dense = is_dense | (blk_idx == nb - 1)
         cache, x = prefill_block(
             params, cfg, tok_blk, cache, blk_idx * N, is_dense=is_dense,
-            lengths=lengths, shards=shards, k_tiles=k_tiles, mesh=mesh)
+            lengths=lengths, shards=shards, plan=plan, mesh=mesh)
         out = x if collect_hidden else x[:, -1, :]
         return cache, out
 
@@ -314,16 +356,16 @@ def prefill_fused(params, cfg: ModelConfig, batch, cache, shards: int = 1,
     nb = T // N
     x = L.embed(params["embed"], tokens).astype(cfg.dtype)
     pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
-    k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    plan = FF._as_plan(cfg, None, shards=shards) if ff.enabled else None
     chunk = cfg.attn_chunk or 512
 
     def sparse_all_blocks(fp, xn2):
         xb = xn2.reshape(B * nb, N, -1)
         if cfg.shardmap_ffn and mesh is not None:
             from repro.core.sparse_ffn import ffn_block_sparse_shardmap
-            y = ffn_block_sparse_shardmap(fp, cfg, xb, k_tiles, mesh)
+            y = ffn_block_sparse_shardmap(fp, cfg, xb, plan.k_max, mesh)
         else:
-            y = FF.ff_block_sparse(fp, cfg, xb, k_tiles, shards)
+            y = FF.ff_block_sparse(fp, cfg, xb, plan, shards)
         y = y.reshape(B, nb, N, -1)
         # dense first/last block (paper ablation Table 5): recompute the
         # two boundary blocks densely — cheap relative to nb blocks.
@@ -369,7 +411,7 @@ def prefill_fused(params, cfg: ModelConfig, batch, cache, shards: int = 1,
 
 def decode_step(params, cfg: ModelConfig, token, cache, position,
                 shards: int = 1, window: Optional[int] = None,
-                active=None, page_table=None):
+                active=None, page_table=None, plan=None, plan_ids=None):
     """token: [B] int32; cache from init_cache; position: scalar int32
     OR [B] int32 for ragged batches (per-sequence decode positions).
     window: ring-buffer size when the cache is a sliding window.
@@ -380,18 +422,36 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
     page_table: optional [B, max_pages] int32 — paged KV layout (cache
     leaves [L, n_pages, psz, Kv, dh]): the token writes into the page
     covering its position and attention indexes the pool through the
-    table (kernels/paged_attention dispatch). Implies ragged."""
+    table (kernels/paged_attention dispatch). Implies ragged.
+
+    plan: SparsityPlan, or a STATIC tuple of them for mixed-effort
+    serving (None -> uniform cfg plan, the compat shim). plan_ids:
+    optional traced [B] int32 indexing into the tuple — each row
+    decodes under its OWN plan (per-request effort) through this one
+    executable: the tile-id width is the max k_max across the tuple
+    and per-row traced counts mask/skip the rest."""
     ff = cfg.ff
     B = token.shape[0]
     ragged = jnp.ndim(position) == 1
     x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
     positions = (position[:, None] if ragged
                  else jnp.full((B, 1), position))
-    k_tiles = (FF.k_tiles_for(cfg, shards=shards)
-               if (ff.enabled and ff.apply_to_decode) else 0)
+    if ff.enabled and ff.apply_to_decode:
+        plans = (plan if isinstance(plan, tuple)
+                 else (FF._as_plan(cfg, plan, shards=shards),))
+        plans = tuple(p for p in plans if p is not None)
+    else:
+        plans = ()
+    # single uniform plan -> counts_lp None: no counts ride, no masking
+    # — the executable is the pre-plan decode step (bit-compat path)
+    sel_plan, counts_lp = FF.decode_plan_setup(plans)
 
     def layer_body(x, layer_in):
-        lp, kc, vc = layer_in
+        if counts_lp is None:
+            lp, kc, vc = layer_in
+            k_row = None
+        else:
+            lp, kc, vc, k_row = layer_in        # [n_plans] this layer
         xn = apply_norm(cfg, lp["ln1"], x)
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
@@ -420,14 +480,18 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
                                 window=window, rope_theta=cfg.rope_theta)
         x = x + h
         xn2 = apply_norm(cfg, lp["ln2"], x)
-        if k_tiles:
-            y = FF.ff_decode_sparse(lp["ffn"], cfg, xn2, k_tiles, shards)
+        if sel_plan is not None:
+            y = FF.ff_decode_sparse(
+                lp["ffn"], cfg, xn2, sel_plan, shards,
+                k_valid=FF.decode_k_valid(k_row, plan_ids))
         else:
             y = FF.ff_dense(lp["ffn"], cfg, xn2)
         return x + y, (kc, vc)
 
-    x, (ks, vs) = jax.lax.scan(
-        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    xs = (params["layers"], cache["k"], cache["v"])
+    if counts_lp is not None:
+        xs = xs + (counts_lp,)
+    x, (ks, vs) = jax.lax.scan(layer_body, x, xs)
     x = apply_norm(cfg, params["ln_f"], x)
     logits = L.unembed(params["lm_head"], x[:, 0, :])
     return logits, {"k": ks, "v": vs}

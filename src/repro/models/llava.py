@@ -54,7 +54,7 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
     nb = T // N
     n_img_blocks = -(-cfg.n_patches // N)
     blocks = x.reshape(B, nb, N, -1).transpose(1, 0, 2, 3)  # [nb,B,N,D]
-    k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    plan = FF.resolve_plan(cfg, shards=shards) if ff.enabled else None
     from repro.nn import attention as A
 
     def block_step(cache, blk_in):
@@ -84,9 +84,9 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
                     is_dense,
                     lambda xa: FF.ff_dense(lp["ffn"], cfg, xa),
                     lambda xa: ffn_block_sparse_shardmap(
-                        lp["ffn"], cfg, xa, k_tiles, mesh), xn2)
-            elif ff.enabled:
-                y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, k_tiles,
+                        lp["ffn"], cfg, xa, plan.k_max, mesh), xn2)
+            elif plan is not None:
+                y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, plan,
                                        shards, is_dense)
             else:
                 y = FF.ff_dense(lp["ffn"], cfg, xn2)

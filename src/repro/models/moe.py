@@ -222,16 +222,25 @@ def _routed_capacity(params, cfg: ModelConfig, x, token_mask):
 
 
 def moe_block(params, cfg: ModelConfig, x, budget=None, mode="train",
-              k_tiles=0, shards=1, is_dense=None, token_mask=None):
+              plan=None, shards=1, is_dense=None, token_mask=None,
+              k_valid=None, k_tiles=None):
     """Full MoE FFN: routed experts + (FastForward-sparsified) shared
-    expert. mode: train (mask path) | block (gather path) | dense."""
+    expert. mode: train (mask path) | block (gather path) | dense.
+    plan: SparsityPlan resolved for the SHARED expert's FFN width (see
+    `shared_plan`); k_valid: traced per-layer/per-row valid tile count;
+    k_tiles: deprecated int shim."""
     y, aux = routed_experts(params, cfg, x, token_mask=token_mask)
     if cfg.n_shared_experts:
         sp = params["shared"]
+        if plan is None and k_tiles:
+            plan = FF._as_plan(cfg, int(k_tiles),
+                               d_ff=_shared_ff_width(cfg))
         if cfg.ff.enabled and mode == "train":
-            ys = FF.ff_masked_sequence(sp, cfg, x, budget)
-        elif cfg.ff.enabled and mode == "block" and k_tiles:
-            ys = FF.ff_block_sparse(sp, cfg, x, k_tiles, shards, is_dense)
+            ys = FF.ff_masked_sequence(sp, cfg, x, budget,
+                                       k_tiles=k_valid)
+        elif cfg.ff.enabled and mode == "block" and plan is not None:
+            ys = FF.ff_block_sparse(sp, cfg, x, plan, shards, is_dense,
+                                    k_valid=k_valid)
         else:
             ys = FF.ff_dense(sp, cfg, x)
         gate = jax.nn.sigmoid(
@@ -245,7 +254,26 @@ def _shared_ff_width(cfg: ModelConfig) -> int:
     return cfg.n_shared_experts * cfg.d_ff_expert
 
 
+def shared_plan(cfg: ModelConfig, plan=None, shards: int = 1):
+    """Resolve the SHARED expert's SparsityPlan. FastForward applies to
+    the always-on shared expert only (the routed experts are already
+    contextually sparse — DESIGN.md §4), whose FFN width differs from
+    cfg.d_ff: a plan resolved for the model is re-derived onto the
+    shared tile grid (`SparsityPlan.with_tiles` — the uniform shim
+    reproduces the legacy `shared_k_tiles` count exactly)."""
+    if not (cfg.ff.enabled and cfg.n_shared_experts):
+        return None
+    width = _shared_ff_width(cfg)
+    if plan is None:
+        return FF.resolve_plan(cfg, d_ff=width, shards=shards)
+    if isinstance(plan, (int, np.integer)):
+        return FF._as_plan(cfg, int(plan), d_ff=width)
+    n_tiles = max(width // cfg.ff.tile, 1)
+    return plan.with_tiles(n_tiles)
+
+
 def shared_k_tiles(cfg: ModelConfig, shards: int = 1) -> int:
+    """DEPRECATED shim: uniform shared-expert tile count (pre-plan)."""
     if not (cfg.ff.enabled and cfg.n_shared_experts):
         return 0
     return FF.k_tiles_for(cfg, d_ff=_shared_ff_width(cfg), shards=shards)
@@ -254,18 +282,27 @@ def shared_k_tiles(cfg: ModelConfig, shards: int = 1) -> int:
 # ---------------------------------------------------------------- forward
 
 
-def forward(params, cfg: ModelConfig, batch, budgets=None):
+def forward(params, cfg: ModelConfig, batch, budgets=None, plan=None):
     tokens = batch["tokens"]
     x = L.embed(params["embed"], tokens).astype(cfg.dtype)
     B, T = x.shape[:2]
     x = constrain(x, ("batch", None, None))
     pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
-    if budgets is None:
+    counts = None
+    splan = shared_plan(cfg, plan) if plan is not None else None
+    if splan is not None:
+        counts = splan.counts_array()
+        budgets = jnp.asarray(splan.keep_fracs, jnp.float32)
+    elif budgets is None:
         budgets = jnp.asarray(FF.layer_budgets(cfg), jnp.float32)
 
     def body(carry, layer_in):
         x, aux = carry
-        lp, budget = layer_in
+        if counts is None:
+            lp, budget = layer_in
+            k_l = None
+        else:
+            lp, budget, k_l = layer_in
         xn = D.apply_norm(cfg, lp["ln1"], x)
         h = A.attend_full(lp["attn"], xn, pos, causal=True,
                           window=cfg.sliding_window,
@@ -273,13 +310,15 @@ def forward(params, cfg: ModelConfig, batch, budgets=None):
                           chunk=cfg.attn_chunk)
         x = x + h
         xn2 = D.apply_norm(cfg, lp["ln2"], x)
-        y, a = moe_block(lp["moe"], cfg, xn2, budget, mode="train")
+        y, a = moe_block(lp["moe"], cfg, xn2, budget, mode="train",
+                         k_valid=k_l)
         x = constrain(x + y, ("batch", None, None))
         return (x, aux + a), None
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
-    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)),
-                               (params["layers"], budgets))
+    xs = ((params["layers"], budgets) if counts is None
+          else (params["layers"], budgets, counts))
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)), xs)
     x = D.apply_norm(cfg, params["ln_f"], x)
     logits = L.unembed(params["lm_head"], x)
     logits = constrain(logits, ("batch", None, "vocab"))
@@ -295,22 +334,31 @@ init_cache = D.init_cache
 
 def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
                   is_dense=None, lengths=None, shards: int = 1,
-                  k_tiles=None):
+                  plan=None, k_tiles=None):
     """One N-token block at offset `pos0` (MoE twin of
     repro.models.dense.prefill_block — the schedulable prefill unit of
     the continuous-batching runtime). Dropless routed dispatch is
     dispatch-group invariant, so the blockwise scan reproduces the
     full-sequence `forward` routing token-for-token.
+    plan: SparsityPlan (model-width; re-derived for the shared expert
+    via `shared_plan`); k_tiles: deprecated int shim.
     Returns (cache, hidden [B, N, D]) pre-final-norm."""
     ff = cfg.ff
-    if k_tiles is None:
-        k_tiles = shared_k_tiles(cfg, shards)
+    if plan is None and k_tiles is not None:
+        plan = k_tiles
+    splan = shared_plan(cfg, plan, shards)
+    counts = (None if splan is None or splan.is_uniform
+              else splan.counts_array())
     N = tok_blk.shape[1]
     x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
     positions = pos0 + jnp.arange(N)[None, :]
 
     def layer_body(x, layer_in):
-        lp, kc, vc = layer_in
+        if counts is None:
+            lp, kc, vc = layer_in
+            k_l = None
+        else:
+            lp, kc, vc, k_l = layer_in
         xn = D.apply_norm(cfg, lp["ln1"], x)
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
@@ -322,18 +370,21 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
         x = x + h
         xn2 = D.apply_norm(cfg, lp["ln2"], x)
         y, _ = moe_block(lp["moe"], cfg, xn2, mode="block",
-                         k_tiles=k_tiles, shards=shards,
-                         is_dense=is_dense)
+                         plan=splan, shards=shards,
+                         is_dense=is_dense, k_valid=k_l)
         return x + y, (kc, vc)
 
-    x, (ks, vs) = jax.lax.scan(
-        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    xs = (params["layers"], cache["k"], cache["v"])
+    if counts is not None:
+        xs = xs + (counts,)
+    x, (ks, vs) = jax.lax.scan(layer_body, x, xs)
     return {"k": ks, "v": vs}, x
 
 
 def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
                    is_dense=None, lengths=None, active=None,
-                   page_tables=None, shards: int = 1, k_tiles=None):
+                   page_tables=None, shards: int = 1, plan=None,
+                   k_tiles=None):
     """Batched per-row-offset block prefill (MoE twin of
     repro.models.dense.prefill_blocks): one N-token block of EACH of P
     distinct requests per call. tok_blks [P, N]; cache leaves
@@ -350,17 +401,26 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
     page_tables: optional [P, max_pages] int32 — paged KV layout: cache
     leaves are the whole page pool [L, n_pages, psz, Kv, dh], written
     and attended through the tables (see the dense twin).
+    plan: SparsityPlan (model-width, static — the scheduler batches
+    only same-plan rows); k_tiles: deprecated int shim.
     Returns (cache, hidden [P, N, D]) pre-final-norm."""
     ff = cfg.ff
-    if k_tiles is None:
-        k_tiles = shared_k_tiles(cfg, shards)
+    if plan is None and k_tiles is not None:
+        plan = k_tiles
+    splan = shared_plan(cfg, plan, shards)
+    counts = (None if splan is None or splan.is_uniform
+              else splan.counts_array())
     N = tok_blks.shape[1]
     x = L.embed(params["embed"], tok_blks).astype(cfg.dtype)
     token_mask = None if active is None else (
         jnp.broadcast_to(active[:, None], tok_blks.shape))
 
     def layer_body(x, layer_in):
-        lp, kc, vc = layer_in
+        if counts is None:
+            lp, kc, vc = layer_in
+            k_l = None
+        else:
+            lp, kc, vc, k_l = layer_in
         xn = D.apply_norm(cfg, lp["ln1"], x)
         positions = pos0s[:, None] + jnp.arange(N)[None, :]
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
@@ -383,28 +443,31 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
         x = x + h
         xn2 = D.apply_norm(cfg, lp["ln2"], x)
         y, _ = moe_block(lp["moe"], cfg, xn2, mode="block",
-                         k_tiles=k_tiles, shards=shards,
-                         is_dense=is_dense, token_mask=token_mask)
+                         plan=splan, shards=shards,
+                         is_dense=is_dense, token_mask=token_mask,
+                         k_valid=k_l)
         return x + y, (kc, vc)
 
-    x, (ks, vs) = jax.lax.scan(
-        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    xs = (params["layers"], cache["k"], cache["v"])
+    if counts is not None:
+        xs = xs + (counts,)
+    x, (ks, vs) = jax.lax.scan(layer_body, x, xs)
     return {"k": ks, "v": vs}, x
 
 
 def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
-            lengths=None, collect_hidden: bool = False):
+            lengths=None, collect_hidden: bool = False, plan=None):
     """Blockwise prompt processing (MoE twin of
     repro.models.dense.prefill). collect_hidden: also return the full
     hidden sequence [B, T, D] pre-final-norm so the static engine can
-    read logits at lengths-1 for right-padded batches."""
+    read logits at lengths-1 for right-padded batches.
+    plan: SparsityPlan (None -> uniform cfg plan, the compat shim)."""
     tokens = batch["tokens"]
     ff = cfg.ff
     B, T = tokens.shape
     N = ff.block_size
     nb = T // N
     blocks = tokens.reshape(B, nb, N).transpose(1, 0, 2)
-    k_tiles = shared_k_tiles(cfg, shards)
 
     def block_step(cache, blk_in):
         blk_idx, tok_blk = blk_in
@@ -415,7 +478,7 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
             is_dense = is_dense | (blk_idx == nb - 1)
         cache, x = prefill_block(
             params, cfg, tok_blk, cache, blk_idx * N, is_dense=is_dense,
-            lengths=lengths, shards=shards, k_tiles=k_tiles)
+            lengths=lengths, shards=shards, plan=plan)
         out = x if collect_hidden else x[:, -1, :]
         return cache, out
 
@@ -430,24 +493,38 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1,
 
 def decode_step(params, cfg: ModelConfig, token, cache, position,
                 shards: int = 1, window=None, active=None,
-                page_table=None):
+                page_table=None, plan=None, plan_ids=None):
     """position: scalar int32 OR [B] int32 (ragged per-sequence decode);
     active: optional [B] bool mask for the ragged path; page_table:
     optional [B, max_pages] int32 for the paged KV layout (see
-    repro.models.dense.decode_step)."""
+    repro.models.dense.decode_step). plan/plan_ids: SparsityPlan — or a
+    static tuple + traced [B] ids for mixed-effort serving (plans are
+    re-derived onto the shared expert's tile grid; see the dense twin
+    for the per-row count mechanism)."""
     ff = cfg.ff
     B = token.shape[0]
     ragged = jnp.ndim(position) == 1
     x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
     positions = (position[:, None] if ragged
                  else jnp.full((B, 1), position))
-    k_tiles = shared_k_tiles(cfg, shards) if ff.apply_to_decode else 0
+    if ff.enabled and ff.apply_to_decode:
+        raw = plan if isinstance(plan, tuple) else (plan,)
+        plans = tuple(p for p in (shared_plan(cfg, p, shards)
+                                  for p in raw) if p is not None)
+    else:
+        plans = ()
+    # single uniform plan -> counts_lp None (pre-plan bit-compat path)
+    sel_plan, counts_lp = FF.decode_plan_setup(plans)
     # inactive slots route to the dropless sentinel group: they receive
     # no routed output and stay out of the load-balance statistics
     token_mask = None if active is None else active[:, None]
 
     def layer_body(x, layer_in):
-        lp, kc, vc = layer_in
+        if counts_lp is None:
+            lp, kc, vc = layer_in
+            k_row = None
+        else:
+            lp, kc, vc, k_row = layer_in
         xn = D.apply_norm(cfg, lp["ln1"], x)
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
@@ -474,13 +551,20 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
                                 window=window, rope_theta=cfg.rope_theta)
         x = x + h
         xn2 = D.apply_norm(cfg, lp["ln2"], x)
-        mode = "block" if k_tiles else "dense"
-        y, _ = moe_block(lp["moe"], cfg, xn2, mode=mode, k_tiles=k_tiles,
-                         shards=shards, token_mask=token_mask)
+        if sel_plan is not None:
+            y, _ = moe_block(lp["moe"], cfg, xn2, mode="block",
+                             plan=sel_plan, shards=shards,
+                             token_mask=token_mask,
+                             k_valid=FF.decode_k_valid(k_row, plan_ids))
+        else:
+            y, _ = moe_block(lp["moe"], cfg, xn2, mode="dense",
+                             shards=shards, token_mask=token_mask)
         return x + y, (kc, vc)
 
-    x, (ks, vs) = jax.lax.scan(
-        layer_body, x, (params["layers"], cache["k"], cache["v"]))
+    xs = (params["layers"], cache["k"], cache["v"])
+    if counts_lp is not None:
+        xs = xs + (counts_lp,)
+    x, (ks, vs) = jax.lax.scan(layer_body, x, xs)
     x = D.apply_norm(cfg, params["ln_f"], x)
     logits = L.unembed(params["lm_head"], x[:, 0, :])
     return logits, {"k": ks, "v": vs}

@@ -169,7 +169,7 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
     N = ff.block_size
     nb = T // N
     blocks = tokens.reshape(B, nb, N).transpose(1, 0, 2)
-    k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    plan = FF.resolve_plan(cfg, shards=shards) if ff.enabled else None
     pos_table = L.sinusoidal_positions(T, cfg.d_model).astype(cfg.dtype)
 
     def block_step(cache, blk_in):
@@ -196,8 +196,8 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
             o = A.dot_attention(q, ck, cv)
             x = x + A.output_proj(lp["cross_attn"], o)
             xn2 = L.layernorm(lp["ln2"], x)
-            if ff.enabled:
-                y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, k_tiles,
+            if plan is not None:
+                y = FF.ff_block_sparse(lp["ffn"], cfg, xn2, plan,
                                        shards, is_dense)
             else:
                 y = FF.ff_dense(lp["ffn"], cfg, xn2)
@@ -222,8 +222,8 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
     T_max = cache["k"].shape[2]
     pos_table = L.sinusoidal_positions(T_max, cfg.d_model).astype(cfg.dtype)
     x = x + jax.lax.dynamic_slice_in_dim(pos_table, position, 1, 0)[None]
-    k_tiles = (FF.k_tiles_for(cfg, shards=shards)
-               if (ff.enabled and ff.apply_to_decode) else 0)
+    plan = (FF.resolve_plan(cfg, shards=shards)
+            if (ff.enabled and ff.apply_to_decode) else None)
 
     def layer_body(x, layer_in):
         lp, kc, vc, ck, cv = layer_in
@@ -238,8 +238,8 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
         o = A.dot_attention(q, ck, cv)
         x = x + A.output_proj(lp["cross_attn"], o)
         xn2 = L.layernorm(lp["ln2"], x)
-        if k_tiles:
-            y = FF.ff_decode_sparse(lp["ffn"], cfg, xn2, k_tiles, shards)
+        if plan is not None:
+            y = FF.ff_decode_sparse(lp["ffn"], cfg, xn2, plan, shards)
         else:
             y = FF.ff_dense(lp["ffn"], cfg, xn2)
         return x + y, (kc, vc)

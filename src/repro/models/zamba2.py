@@ -230,7 +230,7 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
     Nb = ff.block_size
     nb = T // Nb
     blocks = tokens.reshape(B, nb, Nb).transpose(1, 0, 2)
-    k_tiles = FF.k_tiles_for(cfg, shards=shards) if ff.enabled else 0
+    plan = FF.resolve_plan(cfg, shards=shards) if ff.enabled else None
     window = cfg.sliding_window
 
     def block_step(cache, blk_in):
@@ -265,8 +265,8 @@ def prefill(params, cfg: ModelConfig, batch, cache, shards: int = 1):
                                       rope_theta=cfg.rope_theta)
             x = x + h
             xn2 = L.rmsnorm(sp["ln2"], x)
-            if ff.enabled:
-                y = FF.ff_block_sparse(sp["ffn"], cfg, xn2, k_tiles,
+            if plan is not None:
+                y = FF.ff_block_sparse(sp["ffn"], cfg, xn2, plan,
                                        shards, is_dense)
             else:
                 y = FF.ff_dense(sp["ffn"], cfg, xn2)
@@ -289,8 +289,8 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
     B = token.shape[0]
     x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
     positions = jnp.full((B, 1), position)
-    k_tiles = (FF.k_tiles_for(cfg, shards=shards)
-               if (ff.enabled and ff.apply_to_decode) else 0)
+    plan = (FF.resolve_plan(cfg, shards=shards)
+            if (ff.enabled and ff.apply_to_decode) else None)
 
     def group_body(x, gin):
         gp, ssm_g, conv_g, kc, vc = gin
@@ -313,8 +313,8 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
                             rope_theta=cfg.rope_theta)
         x = x + h
         xn2 = L.rmsnorm(sp["ln2"], x)
-        if k_tiles:
-            y = FF.ff_decode_sparse(sp["ffn"], cfg, xn2, k_tiles, shards)
+        if plan is not None:
+            y = FF.ff_decode_sparse(sp["ffn"], cfg, xn2, plan, shards)
         else:
             y = FF.ff_dense(sp["ffn"], cfg, xn2)
         return x + y, (ssm1, conv1.astype(cache["conv"].dtype), kc, vc)

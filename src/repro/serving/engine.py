@@ -47,7 +47,7 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, max_len: int = 2048,
                  n_slots: Optional[int] = None, prefill_batch: int = 4,
                  page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None, plans=None):
         if cfg.arch not in ("dense", "vlm", "moe"):
             raise ValueError("Engine drives dense-family and MoE models; "
                              "use the model modules directly for other "
@@ -62,7 +62,10 @@ class Engine:
         # to full backing — pass a smaller heap to oversubscribe
         self.page_size = page_size
         self.n_pages = n_pages
-        self.runtime = make_runtime(cfg, params)
+        # plans: optional tuple of SparsityPlans (effort tiers) to
+        # register on the runtime; plans[0] is the default, requests
+        # select others via Request.effort (see scheduler)
+        self.runtime = make_runtime(cfg, params, plans=plans)
 
     def scheduler(self, n_slots: int, cache_len: int, seed: int = 0
                   ) -> ContinuousBatchingScheduler:
@@ -72,8 +75,10 @@ class Engine:
             n_pages=self.n_pages)
 
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
-                 temperature: float = 0.0, seed: int = 0
-                 ) -> GenerationResult:
+                 temperature: float = 0.0, seed: int = 0,
+                 effort: Optional[str] = None) -> GenerationResult:
+        """effort: optional SparsityPlan name (registered via plans=)
+        applied to every prompt of this call."""
         N = self.runtime.block_size
         B = len(prompts)
         lens = np.array([len(p) for p in prompts], np.int64)
@@ -89,7 +94,8 @@ class Engine:
         t0 = time.perf_counter()
         for rid, p in enumerate(prompts):
             sched.submit(Request(rid=rid, prompt=list(p), max_new=max_new,
-                                 temperature=temperature, arrival_time=t0))
+                                 temperature=temperature, arrival_time=t0,
+                                 effort=effort))
         outs = sched.run()
         t2 = time.perf_counter()
 

@@ -30,6 +30,14 @@ a static batch width (inactive rows pad short ticks), so a churning
 request set never triggers recompilation: the same executables serve
 the whole stream (asserted via `compile_counts`).
 
+SparsityPlan (repro.core.scheduler): the runtime registers a tuple of
+plans (effort tiers) at construction. Each prefill entry takes the
+plan as a jit STATIC argument — the scheduler batches only same-plan
+rows, and warmup pre-compiles every (plan, width bucket) pair — while
+decode keeps ONE executable: the plan tuple is closed over statically
+and traced [n_slots] `plan_ids` select each row's per-layer tile
+counts, so a slot pool mixing effort tiers decodes in one call.
+
 Adapters: `DenseRuntime` (dense family incl. VLM text stack) and
 `MoeRuntime`. Both rely on the per-row-offset block prefill steps the
 model modules expose (models/dense.py, models/moe.py: `prefill_block`
@@ -44,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import jit_cache_size
+from repro.core import fastforward as FF
 from repro.models.base import ModelConfig
 from repro.models.registry import get_model
 from repro.nn import layers as L
@@ -58,7 +67,8 @@ class ModelRuntime(Protocol):
 
     def init_cache(self, n_slots: int, cache_len: int): ...
 
-    def prefill_block(self, cache, tokens, slot, pos0, is_dense, length):
+    def prefill_block(self, cache, tokens, slot, pos0, is_dense, length,
+                      plan=None):
         """Process one block-size chunk of one request.
 
         cache: pooled KV pytree (leaves [L, n_slots, S, Kv, dh]);
@@ -70,7 +80,7 @@ class ModelRuntime(Protocol):
         ...
 
     def prefill_blocks(self, cache, tokens, slots, pos0s, is_dense,
-                       lengths, active):
+                       lengths, active, plan=None):
         """Process one block-size chunk of EACH of P distinct requests
         in a single jitted call (the batched prefill hot path).
 
@@ -85,10 +95,13 @@ class ModelRuntime(Protocol):
         and only meaningful on that request's final block."""
         ...
 
-    def decode_step(self, cache, tokens, positions, active):
+    def decode_step(self, cache, tokens, positions, active,
+                    plan_ids=None):
         """One generation step for the whole slot pool. tokens/positions:
         [n_slots] int32; active: [n_slots] bool (inactive rows neither
-        write KV nor produce meaningful logits). Returns
+        write KV nor produce meaningful logits); plan_ids: optional
+        [n_slots] int32 indices into the registered plan tuple (per-
+        request effort tiers through one executable). Returns
         (logits [n_slots, V], greedy [n_slots] int32, cache)."""
         ...
 
@@ -98,7 +111,7 @@ class ModelRuntime(Protocol):
         ...
 
     def prefill_blocks_paged(self, cache, tokens, page_tables, pos0s,
-                             is_dense, lengths, active):
+                             is_dense, lengths, active, plan=None):
         """Paged-layout twin of `prefill_blocks`: cache is the WHOLE
         page pool (no slot gather/scatter — each row's block K/V
         scatters onto the pages its [P, max_pages] table owns, and
@@ -109,7 +122,7 @@ class ModelRuntime(Protocol):
         ...
 
     def decode_step_paged(self, cache, tokens, page_table, positions,
-                          active):
+                          active, plan_ids=None):
         """Paged-layout twin of `decode_step`: page_table is the full
         [n_slots, max_pages] table array; each active row's token writes
         into the page covering its position (kernels/paged_attention
@@ -127,72 +140,112 @@ class _JittedRuntime:
     """Shared jit plumbing for model modules exposing the
     prefill_block/decode_step/init_cache triple."""
 
-    def __init__(self, cfg: ModelConfig, params, shards: int = 1):
+    def __init__(self, cfg: ModelConfig, params, shards: int = 1,
+                 plans=None):
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
         self.shards = shards
         self.block_size = cfg.ff.block_size
+        # registered SparsityPlans (per-request effort tiers). plans[0]
+        # is the DEFAULT (requests without an effort). Each plan is a
+        # jit STATIC argument of the prefill entries (one executable
+        # per (plan, width bucket), all pre-compiled by warmup), while
+        # decode stays ONE executable: the plan tuple is closed over
+        # and traced [n_slots] plan_ids select per-row counts.
+        if plans is not None:
+            self.plans = tuple(plans)
+        else:
+            default = FF.resolve_plan(cfg, shards=shards)
+            self.plans = (default,) if default is not None else ()
+        if len({p.name for p in self.plans}) != len(self.plans):
+            raise ValueError("SparsityPlan names must be unique: "
+                             f"{[p.name for p in self.plans]}")
+        self.plan_index = {p.name: i for i, p in enumerate(self.plans)}
         # the scheduler always replaces its cache reference with the
         # returned one, so the pooled KV buffers are donated: on
         # accelerators the update is in-place instead of a full-pool
         # copy per tick (CPU ignores donation)
         self._prefill_block = jax.jit(self._prefill_block_impl,
-                                      donate_argnums=(1,))
+                                      donate_argnums=(1,),
+                                      static_argnames=("plan",))
         self._prefill_blocks = jax.jit(self._prefill_blocks_impl,
-                                       donate_argnums=(1,))
+                                       donate_argnums=(1,),
+                                       static_argnames=("plan",))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._prefill_blocks_paged = jax.jit(
-            self._prefill_blocks_paged_impl, donate_argnums=(1,))
+            self._prefill_blocks_paged_impl, donate_argnums=(1,),
+            static_argnames=("plan",))
         self._decode_paged = jax.jit(self._decode_paged_impl,
                                      donate_argnums=(1,))
         self._logits_at = jax.jit(self._logits_at_impl)
 
+    # -- plan plumbing -------------------------------------------------
+
+    @property
+    def default_plan(self):
+        return self.plans[0] if self.plans else None
+
+    def _norm_plan(self, plan):
+        return plan if plan is not None else self.default_plan
+
+    def _decode_plan_args(self, plan_ids):
+        """(plan, plan_ids) for the model decode call: a single
+        registered plan ignores the ids (the bit-compat simple path);
+        several plans ride as a static tuple + traced per-row ids."""
+        if len(self.plans) > 1:
+            return self.plans, plan_ids
+        return self.default_plan, None
+
     # -- model hooks (overridable per family) -------------------------
 
     def _model_prefill_block(self, params, tokens, sub_cache, pos0,
-                             is_dense, lengths):
+                             is_dense, lengths, plan):
         return self.model.prefill_block(
             params, self.cfg, tokens, sub_cache, pos0, is_dense=is_dense,
-            lengths=lengths, shards=self.shards)
+            lengths=lengths, shards=self.shards, plan=plan)
 
     def _model_prefill_blocks(self, params, tokens, sub_cache, pos0s,
-                              is_dense, lengths, active):
+                              is_dense, lengths, active, plan):
         return self.model.prefill_blocks(
             params, self.cfg, tokens, sub_cache, pos0s, is_dense=is_dense,
-            lengths=lengths, active=active, shards=self.shards)
+            lengths=lengths, active=active, shards=self.shards, plan=plan)
 
-    def _model_decode_step(self, params, tokens, cache, positions, active):
+    def _model_decode_step(self, params, tokens, cache, positions, active,
+                           plan_ids):
         # slot caches hold absolute positions, so sliding-window models
         # get the window as an attention mask in the ragged decode path
+        plan, ids = self._decode_plan_args(plan_ids)
         return self.model.decode_step(
             params, self.cfg, tokens, cache, positions,
             shards=self.shards, window=self.cfg.sliding_window,
-            active=active)
+            active=active, plan=plan, plan_ids=ids)
 
     def _model_prefill_blocks_paged(self, params, tokens, cache, tables,
-                                    pos0s, is_dense, lengths, active):
+                                    pos0s, is_dense, lengths, active,
+                                    plan):
         return self.model.prefill_blocks(
             params, self.cfg, tokens, cache, pos0s, is_dense=is_dense,
             lengths=lengths, active=active, page_tables=tables,
-            shards=self.shards)
+            shards=self.shards, plan=plan)
 
     def _model_decode_step_paged(self, params, tokens, cache, table,
-                                 positions, active):
+                                 positions, active, plan_ids):
+        plan, ids = self._decode_plan_args(plan_ids)
         return self.model.decode_step(
             params, self.cfg, tokens, cache, positions,
             shards=self.shards, window=self.cfg.sliding_window,
-            active=active, page_table=table)
+            active=active, page_table=table, plan=plan, plan_ids=ids)
 
     # -- jitted impls --------------------------------------------------
 
     def _prefill_block_impl(self, params, cache, tokens, slot, pos0,
-                            is_dense, length):
+                            is_dense, length, plan=None):
         kc = jax.lax.dynamic_slice_in_dim(cache["k"], slot, 1, axis=1)
         vc = jax.lax.dynamic_slice_in_dim(cache["v"], slot, 1, axis=1)
         sub, hidden = self._model_prefill_block(
             params, tokens, {"k": kc, "v": vc}, pos0, is_dense,
-            jnp.reshape(length, (1,)))
+            jnp.reshape(length, (1,)), plan)
         cache = {
             "k": jax.lax.dynamic_update_slice_in_dim(
                 cache["k"], sub["k"], slot, axis=1),
@@ -206,7 +259,7 @@ class _JittedRuntime:
         return cache, L.unembed(params["lm_head"], h)
 
     def _prefill_blocks_impl(self, params, cache, tokens, slots, pos0s,
-                             is_dense, lengths, active):
+                             is_dense, lengths, active, plan=None):
         # gather each live row's slot from the pool, run one batched
         # per-row-offset block step, then scatter the updated rows back.
         # Slot ids within one call are DISTINCT (the scheduler pads
@@ -217,7 +270,7 @@ class _JittedRuntime:
         vc = jnp.take(cache["v"], slots, axis=1)
         sub, hidden = self._model_prefill_blocks(
             params, tokens, {"k": kc, "v": vc}, pos0s, is_dense, lengths,
-            active)
+            active, plan)
         sel = active[None, :, None, None, None]
         cache = {
             "k": cache["k"].at[:, slots].set(
@@ -233,23 +286,25 @@ class _JittedRuntime:
         h = self._final_norm(params, h)
         return cache, L.unembed(params["lm_head"], h)
 
-    def _decode_impl(self, params, cache, tokens, positions, active):
+    def _decode_impl(self, params, cache, tokens, positions, active,
+                     plan_ids):
         logits, cache = self._model_decode_step(
-            params, tokens, cache, positions, active)
+            params, tokens, cache, positions, active, plan_ids)
         # device-side greedy argmax: the scheduler's hot loop transfers
         # [n_slots] token ids, not [n_slots, V] logits (logits are only
         # pulled to host when a request samples with temperature > 0)
         return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     def _prefill_blocks_paged_impl(self, params, cache, tokens, tables,
-                                   pos0s, is_dense, lengths, active):
+                                   pos0s, is_dense, lengths, active,
+                                   plan=None):
         # no slot gather/scatter: the whole page pool rides through the
         # model, which scatters each row's block onto the pages its
         # table owns (write-disjoint — pages are exclusively owned; pad
         # rows carry all-null tables and self-copy the null page)
         cache, hidden = self._model_prefill_blocks_paged(
             params, tokens, cache, tables, pos0s, is_dense, lengths,
-            active)
+            active, plan)
         idx = jnp.clip(lengths - 1 - pos0s, 0, hidden.shape[1] - 1)
         h = jnp.take_along_axis(
             hidden, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
@@ -257,9 +312,9 @@ class _JittedRuntime:
         return cache, L.unembed(params["lm_head"], h)
 
     def _decode_paged_impl(self, params, cache, tokens, table, positions,
-                           active):
+                           active, plan_ids):
         logits, cache = self._model_decode_step_paged(
-            params, tokens, cache, table, positions, active)
+            params, tokens, cache, table, positions, active, plan_ids)
         return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     def _logits_at_impl(self, params, hidden, lengths):
@@ -278,25 +333,29 @@ class _JittedRuntime:
     def init_cache(self, n_slots: int, cache_len: int):
         return self.model.init_cache(self.cfg, n_slots, cache_len)
 
-    def prefill_block(self, cache, tokens, slot, pos0, is_dense, length):
+    def prefill_block(self, cache, tokens, slot, pos0, is_dense, length,
+                      plan=None):
         return self._prefill_block(
             self.params, cache, jnp.asarray(tokens, jnp.int32),
             np.int32(slot), np.int32(pos0), np.bool_(is_dense),
-            np.int32(length))
+            np.int32(length), plan=self._norm_plan(plan))
 
     def prefill_blocks(self, cache, tokens, slots, pos0s, is_dense,
-                       lengths, active):
+                       lengths, active, plan=None):
         return self._prefill_blocks(
             self.params, cache, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(slots, jnp.int32), jnp.asarray(pos0s, jnp.int32),
             jnp.asarray(is_dense, bool), jnp.asarray(lengths, jnp.int32),
-            jnp.asarray(active, bool))
+            jnp.asarray(active, bool), plan=self._norm_plan(plan))
 
-    def decode_step(self, cache, tokens, positions, active):
+    def decode_step(self, cache, tokens, positions, active,
+                    plan_ids=None):
+        if plan_ids is None:
+            plan_ids = np.zeros(len(np.asarray(tokens)), np.int32)
         return self._decode(
             self.params, cache, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(positions, jnp.int32),
-            jnp.asarray(active, bool))
+            jnp.asarray(active, bool), jnp.asarray(plan_ids, jnp.int32))
 
     def init_cache_paged(self, n_pages: int, page_size: int):
         # same spec factory as the slot cache with (batch, cache_len) ->
@@ -305,19 +364,23 @@ class _JittedRuntime:
         return self.model.init_cache(self.cfg, n_pages, page_size)
 
     def prefill_blocks_paged(self, cache, tokens, page_tables, pos0s,
-                             is_dense, lengths, active):
+                             is_dense, lengths, active, plan=None):
         return self._prefill_blocks_paged(
             self.params, cache, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(page_tables, jnp.int32),
             jnp.asarray(pos0s, jnp.int32), jnp.asarray(is_dense, bool),
-            jnp.asarray(lengths, jnp.int32), jnp.asarray(active, bool))
+            jnp.asarray(lengths, jnp.int32), jnp.asarray(active, bool),
+            plan=self._norm_plan(plan))
 
     def decode_step_paged(self, cache, tokens, page_table, positions,
-                          active):
+                          active, plan_ids=None):
+        if plan_ids is None:
+            plan_ids = np.zeros(len(np.asarray(tokens)), np.int32)
         return self._decode_paged(
             self.params, cache, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(page_table, jnp.int32),
-            jnp.asarray(positions, jnp.int32), jnp.asarray(active, bool))
+            jnp.asarray(positions, jnp.int32), jnp.asarray(active, bool),
+            jnp.asarray(plan_ids, jnp.int32))
 
     def logits_at(self, hidden, lengths):
         return self._logits_at(self.params, hidden,
@@ -347,34 +410,36 @@ class DenseRuntime(_JittedRuntime):
     ARCHS = ("dense", "vlm")
 
     def __init__(self, cfg: ModelConfig, params, shards: int = 1,
-                 mesh=None):
+                 mesh=None, plans=None):
         if cfg.arch not in self.ARCHS:
             raise ValueError(f"DenseRuntime cannot drive arch={cfg.arch}")
         self.mesh = mesh
-        super().__init__(cfg, params, shards)
+        super().__init__(cfg, params, shards, plans=plans)
 
     def _model_prefill_block(self, params, tokens, sub_cache, pos0,
-                             is_dense, lengths):
+                             is_dense, lengths, plan):
         from repro.models import dense
         return dense.prefill_block(
             params, self.cfg, tokens, sub_cache, pos0, is_dense=is_dense,
-            lengths=lengths, shards=self.shards, mesh=self.mesh)
+            lengths=lengths, shards=self.shards, plan=plan,
+            mesh=self.mesh)
 
     def _model_prefill_blocks(self, params, tokens, sub_cache, pos0s,
-                              is_dense, lengths, active):
+                              is_dense, lengths, active, plan):
         from repro.models import dense
         return dense.prefill_blocks(
             params, self.cfg, tokens, sub_cache, pos0s, is_dense=is_dense,
             lengths=lengths, active=active, shards=self.shards,
-            mesh=self.mesh)
+            plan=plan, mesh=self.mesh)
 
     def _model_prefill_blocks_paged(self, params, tokens, cache, tables,
-                                    pos0s, is_dense, lengths, active):
+                                    pos0s, is_dense, lengths, active,
+                                    plan):
         from repro.models import dense
         return dense.prefill_blocks(
             params, self.cfg, tokens, cache, pos0s, is_dense=is_dense,
             lengths=lengths, active=active, page_tables=tables,
-            shards=self.shards, mesh=self.mesh)
+            shards=self.shards, plan=plan, mesh=self.mesh)
 
 
 class MoeRuntime(_JittedRuntime):
@@ -388,19 +453,23 @@ class MoeRuntime(_JittedRuntime):
 
     ARCHS = ("moe",)
 
-    def __init__(self, cfg: ModelConfig, params, shards: int = 1):
+    def __init__(self, cfg: ModelConfig, params, shards: int = 1,
+                 plans=None):
         if cfg.arch not in self.ARCHS:
             raise ValueError(f"MoeRuntime cannot drive arch={cfg.arch}")
-        super().__init__(cfg, params, shards)
+        super().__init__(cfg, params, shards, plans=plans)
 
 
 def make_runtime(cfg: ModelConfig, params, shards: int = 1,
-                 mesh=None) -> ModelRuntime:
-    """Dispatch cfg.arch -> runtime adapter."""
+                 mesh=None, plans=None) -> ModelRuntime:
+    """Dispatch cfg.arch -> runtime adapter. plans: optional tuple of
+    SparsityPlans to register (plans[0] is the default tier; requests
+    pick one by name — the per-request serving knob)."""
     if cfg.arch in DenseRuntime.ARCHS:
-        return DenseRuntime(cfg, params, shards=shards, mesh=mesh)
+        return DenseRuntime(cfg, params, shards=shards, mesh=mesh,
+                            plans=plans)
     if cfg.arch in MoeRuntime.ARCHS:
-        return MoeRuntime(cfg, params, shards=shards)
+        return MoeRuntime(cfg, params, shards=shards, plans=plans)
     raise ValueError(
         f"no serving runtime for arch={cfg.arch}; supported: "
         f"{DenseRuntime.ARCHS + MoeRuntime.ARCHS}")

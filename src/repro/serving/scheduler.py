@@ -66,6 +66,11 @@ class Request:
     temperature: float = 0.0
     eos_id: Optional[int] = None
     arrival_time: Optional[float] = None   # None -> stamped at submit()
+    # SparsityPlan name registered on the runtime (effort tier, e.g.
+    # "balanced"/"turbo"/"dense"); None -> the runtime's default plan.
+    # The per-request sparsity knob: SLO-tiered traffic mixes tiers in
+    # one stream with zero recompilation (plans are pre-compiled).
+    effort: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -91,6 +96,7 @@ class _ActiveState:
     #                              output-transparent for sampled
     #                              requests too, and one request's
     #                              draws never shift another's
+    plan_idx: int = 0            # index into scheduler.plans (effort)
     blocks_done: int = 0
     phase: str = "prefill"       # prefill | decode
     out: List[int] = dataclasses.field(default_factory=list)
@@ -152,6 +158,14 @@ class ContinuousBatchingScheduler:
             self.prefill_widths.append(w)
             w *= 2
         self.prefill_widths.append(self.prefill_batch)
+        # registered SparsityPlans (effort tiers) — plan identity joins
+        # the prefill batching key next to is_dense, and decode carries
+        # per-slot plan_ids (one executable; see runtime)
+        self.plans = tuple(getattr(runtime, "plans", ()) or ())
+        self.plan_index = dict(getattr(runtime, "plan_index", {}) or {})
+        n_plans = max(len(self.plans), 1)
+        self.plan_prefill_blocks = np.zeros(n_plans, np.int64)
+        self.plan_decode_tokens = np.zeros(n_plans, np.int64)
         self.clock = clock
         # idle wait between stream arrivals (drive_stream). Injected
         # alongside `clock` so a fake/simulated clock brings a matching
@@ -194,6 +208,12 @@ class ContinuousBatchingScheduler:
             raise ValueError(f"request {req.rid}: max_new must be >= 1 "
                              f"(the first token is sampled from prefill "
                              f"logits and always emitted)")
+        if req.effort is not None and req.effort not in self.plan_index:
+            raise ValueError(
+                f"request {req.rid}: effort {req.effort!r} is not a "
+                f"registered SparsityPlan "
+                f"(have {sorted(self.plan_index)}); pass plans= to "
+                f"make_runtime / serve.py --effort")
         if req.arrival_time is None:
             req.arrival_time = self.clock()
         self.queue.append(req)
@@ -248,28 +268,47 @@ class ContinuousBatchingScheduler:
         self.submit(Request(rid=-1, prompt=[1] * min(N, self.cache_len - 2),
                             max_new=2))
         self.run()
-        for w in self.prefill_widths:
-            if w == 1:
-                continue          # compiled by the throwaway request
-            if self.paged:
-                # all-inactive rows carry all-null page tables: their
-                # writes are self-copies of the reserved null page
-                self.pool.cache, _ = self.runtime.prefill_blocks_paged(
-                    self.pool.cache, np.zeros((w, N), np.int32),
-                    np.zeros((w, self.pool.max_pages), np.int32),
-                    np.zeros(w, np.int32), np.zeros(w, bool),
-                    np.ones(w, np.int32), np.zeros(w, bool))
-            else:
-                self.pool.cache, _ = self.runtime.prefill_blocks(
-                    self.pool.cache, np.zeros((w, N), np.int32),
-                    np.arange(w, dtype=np.int32), np.zeros(w, np.int32),
-                    np.zeros(w, bool), np.ones(w, np.int32),
-                    np.zeros(w, bool))
+        # one executable per (plan, width bucket): every registered
+        # effort tier is pre-compiled, so a stream MIXING tiers stays on
+        # the zero-recompilation contract. Decode needs no per-plan
+        # pass — the plan tuple is closed over and traced plan_ids
+        # select per-row counts, so the throwaway request's single
+        # decode step compiled the one executable.
+        for i, plan in enumerate(self.plans or (None,)):
+            for w in self.prefill_widths:
+                if w == 1:
+                    if i == 0:
+                        continue  # compiled by the throwaway request
+                    if not self.paged:
+                        # width-1 slot bucket is the single-block entry;
+                        # slot 0 is free during warmup, its KV garbage
+                        # is overwritten by any real prefill from pos 0
+                        self.pool.cache, _ = self.runtime.prefill_block(
+                            self.pool.cache, np.zeros((1, N), np.int32),
+                            0, 0, False, 1, plan=plan)
+                        continue
+                if self.paged:
+                    # all-inactive rows carry all-null page tables: their
+                    # writes are self-copies of the reserved null page
+                    self.pool.cache, _ = self.runtime.prefill_blocks_paged(
+                        self.pool.cache, np.zeros((w, N), np.int32),
+                        np.zeros((w, self.pool.max_pages), np.int32),
+                        np.zeros(w, np.int32), np.zeros(w, bool),
+                        np.ones(w, np.int32), np.zeros(w, bool),
+                        plan=plan)
+                else:
+                    self.pool.cache, _ = self.runtime.prefill_blocks(
+                        self.pool.cache, np.zeros((w, N), np.int32),
+                        np.arange(w, dtype=np.int32), np.zeros(w, np.int32),
+                        np.zeros(w, bool), np.ones(w, np.int32),
+                        np.zeros(w, bool), plan=plan)
         self.finished.clear()
         self._admit_seq = 0
         self.n_ticks = self.n_prefill_blocks = self.n_decode_steps = 0
         self.n_prefill_ticks = self.n_eos_stops = 0
         self.n_preemptions = 0
+        self.plan_prefill_blocks[:] = 0
+        self.plan_decode_tokens[:] = 0
         self.pool.total_acquires = self.pool.total_releases = 0
         self.pool.max_in_use = 0
         self.pool.stranded_tokens_at_peak = 0
@@ -305,6 +344,7 @@ class ContinuousBatchingScheduler:
             self.active[slot] = _ActiveState(
                 req=req, slot=slot, seq=self._admit_seq,
                 n_blocks=self._n_blocks(req),
+                plan_idx=self.plan_index.get(req.effort, 0),
                 # rid folded to uint32: seed sequences reject negative
                 # entries (the warmup throwaway request carries rid=-1)
                 rng=np.random.default_rng(
@@ -346,6 +386,9 @@ class ContinuousBatchingScheduler:
                 return False
             self._preempt(victim)
 
+    def _plan_of(self, st: _ActiveState):
+        return self.plans[st.plan_idx] if self.plans else None
+
     def _block_meta(self, st: _ActiveState):
         """(chunk tokens, pos0, is_dense) for a state's next block."""
         N = self.runtime.block_size
@@ -362,6 +405,7 @@ class ContinuousBatchingScheduler:
         N = self.runtime.block_size
         st.blocks_done += 1
         self.n_prefill_blocks += 1
+        self.plan_prefill_blocks[st.plan_idx] += 1
         self.pool.lengths[st.slot] = min(st.blocks_done * N,
                                          len(st.req.prompt))
         if st.blocks_done < st.n_blocks:
@@ -386,18 +430,19 @@ class ContinuousBatchingScheduler:
         chunk, pos0, is_dense = meta
         tok_blk = np.zeros((1, N), np.int32)
         tok_blk[0, :len(chunk)] = chunk
+        plan = self._plan_of(st)
         if self.paged:
             self.pool.cache, logits = self.runtime.prefill_blocks_paged(
                 self.pool.cache, tok_blk,
                 self.pool.page_table[st.slot][None],
                 np.array([pos0], np.int32), np.array([is_dense], bool),
                 np.array([len(st.req.prompt)], np.int32),
-                np.ones(1, bool))
+                np.ones(1, bool), plan=plan)
             self.n_prefill_ticks += 1
             return self._finish_block(st, lambda: np.asarray(logits)[0])
         self.pool.cache, logits = self.runtime.prefill_block(
             self.pool.cache, tok_blk, st.slot, pos0, is_dense,
-            len(st.req.prompt))
+            len(st.req.prompt), plan=plan)
         self.n_prefill_ticks += 1
         return self._finish_block(st, lambda: np.asarray(logits))
 
@@ -435,6 +480,7 @@ class ContinuousBatchingScheduler:
         # a state that cannot be grown is skipped this tick, not evicted.
         batch = []
         lead_dense = None
+        lead_plan = None
         for st in states:
             if len(batch) == self.prefill_batch:
                 break
@@ -443,11 +489,18 @@ class ContinuousBatchingScheduler:
             meta = self._block_meta(st)
             if lead_dense is not None and meta[2] != lead_dense:
                 continue                    # density-homogeneous batch
+            if lead_plan is not None and st.plan_idx != lead_plan:
+                continue                    # plan-homogeneous batch: the
+                #                             plan is a jit STATIC arg, so
+                #                             one call runs ONE plan
+                #                             (skipped rows go next tick;
+                #                             the oldest always leads)
             if self.paged and not self._ensure_pages(
                     st, (st.blocks_done + 1) * self._npb):
                 continue
             if lead_dense is None:
                 lead_dense = meta[2]
+                lead_plan = st.plan_idx
             batch.append((st, meta))
         if not batch:
             return 0
@@ -467,6 +520,7 @@ class ContinuousBatchingScheduler:
             pos0s[i] = pos0
             lengths[i] = len(st.req.prompt)
             active[i] = True
+        plan = self.plans[lead_plan] if self.plans else None
         if self.paged:
             # pad rows carry all-null tables (write-sink self-copies)
             tables = np.zeros((P, self.pool.max_pages), np.int32)
@@ -474,7 +528,7 @@ class ContinuousBatchingScheduler:
                 tables[i] = self.pool.page_table[st.slot]
             self.pool.cache, logits = self.runtime.prefill_blocks_paged(
                 self.pool.cache, tokens, tables, pos0s, is_dense,
-                lengths, active)
+                lengths, active, plan=plan)
         else:
             used = {st.slot for st, _ in batch}
             spare = (s for s in range(self.n_slots) if s not in used)
@@ -482,7 +536,7 @@ class ContinuousBatchingScheduler:
                 slots[i] = next(spare)
             self.pool.cache, logits = self.runtime.prefill_blocks(
                 self.pool.cache, tokens, slots, pos0s, is_dense, lengths,
-                active)
+                active, plan=plan)
         self.n_prefill_ticks += 1
         logits_np = [None]        # pull [P, V] to host at most once
 
@@ -518,17 +572,20 @@ class ContinuousBatchingScheduler:
         tokens = np.zeros(self.n_slots, np.int32)
         positions = np.zeros(self.n_slots, np.int32)
         active = np.zeros(self.n_slots, bool)
+        plan_ids = np.zeros(self.n_slots, np.int32)
         for st in decoding:
             tokens[st.slot] = st.next_token
             positions[st.slot] = st.pos
             active[st.slot] = True
+            plan_ids[st.slot] = st.plan_idx
         if self.paged:
             logits, greedy, self.pool.cache = self.runtime.decode_step_paged(
                 self.pool.cache, tokens, self.pool.page_table, positions,
-                active)
+                active, plan_ids=plan_ids)
         else:
             logits, greedy, self.pool.cache = self.runtime.decode_step(
-                self.pool.cache, tokens, positions, active)
+                self.pool.cache, tokens, positions, active,
+                plan_ids=plan_ids)
         self.n_decode_steps += 1
         greedy = np.asarray(greedy)
         # logits cross to host only if someone actually samples
@@ -543,9 +600,39 @@ class ContinuousBatchingScheduler:
             st.next_token = tok
             st.pos += 1
             self.pool.lengths[st.slot] = st.pos
+            self.plan_decode_tokens[st.plan_idx] += 1
             emitted += 1
             self._maybe_finish(st)
         return emitted
+
+    # ----------------------------------------------------- plan stats
+
+    def sparsity_stats(self) -> dict:
+        """Realized sparsity accounting (serve.py stats line): per
+        registered plan, the per-layer keep fractions, analytical FFN
+        FLOP fraction, and how much work (prefill blocks / decode
+        tokens) actually ran under it; plus the work-weighted aggregate
+        FFN FLOP fraction of the whole stream."""
+        N = self.runtime.block_size
+        out = {"plans": [], "aggregate_ffn_flop_frac": None}
+        if not self.plans:
+            return out
+        weights = (self.plan_prefill_blocks * N
+                   + self.plan_decode_tokens).astype(np.float64)
+        fracs = np.array([p.flop_frac() for p in self.plans])
+        if weights.sum() > 0:
+            out["aggregate_ffn_flop_frac"] = float(
+                (weights * fracs).sum() / weights.sum())
+        for i, p in enumerate(self.plans):
+            out["plans"].append({
+                "name": p.name,
+                "keep_per_layer": [round(float(f), 4)
+                                   for f in p.keep_fracs],
+                "ffn_flop_frac": round(p.flop_frac(), 4),
+                "prefill_blocks": int(self.plan_prefill_blocks[i]),
+                "decode_tokens": int(self.plan_decode_tokens[i]),
+            })
+        return out
 
     def _maybe_finish(self, st: _ActiveState) -> None:
         hit_eos = (st.req.eos_id is not None and st.out

@@ -17,6 +17,9 @@ line):
                        prompt_len)
   temperature  float   optional, default 0.0 (greedy)
   eos_id       int     optional per-request early-stop token
+  effort       str     optional SparsityPlan tier name ("dense" /
+                       "balanced" / "turbo") — per-request sparsity;
+                       records without it use the default plan
 
 Unknown keys are ignored (real traces carry extra metadata). A sample
 trace lives at benchmarks/traces/sample_trace.jsonl.
@@ -34,14 +37,15 @@ from repro.serving.scheduler import Request
 def load_trace(path: str, vocab: int, seed: int = 0,
                eos_id: Optional[int] = None,
                temperature: Optional[float] = None,
-               max_requests: Optional[int] = None) -> List[Request]:
+               max_requests: Optional[int] = None,
+               effort: Optional[str] = None) -> List[Request]:
     """Parse a jsonl trace into `Request`s for `drive_stream`.
 
     Prompt tokens are synthesized from a per-record deterministic RNG
     stream (seeded by `seed` and the record index), so replaying the
     same trace is bit-reproducible run-to-run and engine-to-engine.
-    `eos_id` and `temperature` apply to records that do not carry
-    their own."""
+    `eos_id`, `temperature` and `effort` apply to records that do not
+    carry their own."""
     requests: List[Request] = []
     with open(path) as f:
         for idx, line in enumerate(f):
@@ -74,6 +78,8 @@ def load_trace(path: str, vocab: int, seed: int = 0,
                                           temperature or 0.0)),
                 eos_id=(int(rec["eos_id"]) if "eos_id" in rec
                         else eos_id),
+                effort=(str(rec["effort"]) if "effort" in rec
+                        else effort),
                 arrival_time=float(rec.get("arrival_s", 0.0))))
     if not requests:
         raise ValueError(f"trace {path} contains no requests")
@@ -97,4 +103,6 @@ def trace_stats(requests: List[Request]) -> dict:
         "prompt_len_max": int(plens.max()),
         "gen_len_p50": int(np.percentile(gens, 50)),
         "gen_len_max": int(gens.max()),
+        # effort-tier mix (None -> the default plan)
+        "efforts": sorted({r.effort or "default" for r in requests}),
     }

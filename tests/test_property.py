@@ -36,6 +36,38 @@ def test_algorithm1_invariants(importance, budget):
     assert np.all(np.diff(b[order]) >= -1e-9)
 
 
+@given(st.lists(st.floats(min_value=0.0, max_value=100.0),
+                min_size=1, max_size=48),
+       st.floats(min_value=0.05, max_value=0.95))
+@settings(**SET)
+def test_algorithm1_zero_importance_layers_conserve_budget(importance,
+                                                          budget):
+    """Budget conservation holds even when importance mass concentrates
+    on a subset of layers (zero-importance layers share the residual
+    evenly instead of losing it)."""
+    b = SCHED.allocate_budgets(np.array(importance), budget)
+    L = len(importance)
+    assert np.all(b >= 0) and np.all(b <= 1.0)
+    if np.all(b < 1.0):
+        assert abs(b.sum() - budget * L) < 1e-6
+
+
+@given(st.lists(st.floats(min_value=0.0, max_value=1.0),
+                min_size=1, max_size=48),
+       st.integers(min_value=1, max_value=32))
+@settings(**SET)
+def test_budgets_to_tiles_exact_total(budgets, n_tiles):
+    """Largest-remainder rounding: per-layer counts stay in
+    [1, n_tiles] and their sum hits the (feasibility-clipped) global
+    budget exactly — no round() drift."""
+    b = np.array(budgets)
+    counts = SCHED.budgets_to_tiles(b, n_tiles)
+    L = len(b)
+    target = int(np.clip(round(b.sum() * n_tiles), L, L * n_tiles))
+    assert counts.sum() == target
+    assert counts.min() >= 1 and counts.max() <= n_tiles
+
+
 @given(st.integers(min_value=1, max_value=8),
        st.integers(min_value=0, max_value=1000))
 @settings(**SET)
