@@ -35,6 +35,41 @@ path and the batched Pallas kernel — not just the semantic mask path.
     prefix of a sharded selection is not the top-k_l), so sharded
     gathers keep uniform plans (shardmap path unchanged).
 
+DESIGN — block-sparse prefill attention (dual-budget plans):
+
+When cfg.ff.attn_sparsity > 0, `resolve_plan` attaches a SECOND budget
+to the same SparsityPlan: per-layer kept-KV-block counts on a virtual
+grid of cfg.ff.attn_tiles slots (same Algorithm-1 waterfill when
+importance is supplied, same largest-remainder pinning, same frozen
+jit-static contract). The effort tiers scale BOTH budgets — "dense"
+disables both, "turbo" halves both — and the counts ride the layer
+scan as a second traced `k_valid` next to the FFN counts.
+
+  * SCORING PROXY (pooled QK) — per 128-token query block, each
+    causally-valid KV block is scored by a mean-pooled dot product:
+    q is mean-pooled over the block's query rows (and GQA head group),
+    k over each KV block's key rows, and score[b, j] =
+    mean_h <q̄_bh, k̄_bhj> / sqrt(dh). One [B, n_blocks] score matrix
+    per layer — O(S·d) instead of the O(N·S·d) it gates.
+  * THRESHOLD SEMANTICS — selection is top-k on the proxy scores, NOT
+    a value threshold: the plan's virtual-grid count a_l maps to a
+    per-row kept count c_b = clip(ceil(a_l * nv_b / attn_tiles),
+    min(2, nv_b), nv_b) where nv_b is the row's causally-valid block
+    count — so the kept FRACTION is the plan's a_l / attn_tiles,
+    invariant to where the query block sits on the causal ramp. The
+    sink block (block 0, attention-sink mass) and the diagonal block
+    (the query block's own keys) are force-included via score bias —
+    they are the two blocks the proxy is least reliable about and the
+    paper's Eq. 23 importance analysis singles out. At a_l ==
+    attn_tiles every valid block is kept and the masked XLA path is
+    bit-identical to dense attention.
+  * KERNEL CONTRACT — kernels/block_sparse_attention consumes the
+    selection as scalar-prefetched block-id + count operands; dead
+    selection slots (k >= c_b) are `pl.when`-skipped AND their slab
+    DMA is index-map-clamped to the last live block (no bytes move).
+    The XLA twin masks the same selection on the gathered view;
+    interpret-mode tests pin kernel == online-softmax twin bitwise.
+
 Deprecation shims: `k_tiles_for` survives for callers that only need
 the uniform width, and plan-taking entry points accept a bare int
 (wrapped via `SparsityPlan.uniform_counts`).
@@ -238,6 +273,22 @@ def effort_keep(cfg: ModelConfig, effort: Optional[str]) -> float:
                      f"{EFFORT_TIERS}")
 
 
+def effort_attn_keep(cfg: ModelConfig, effort: Optional[str]) -> float:
+    """The attention-block twin of `effort_keep`: tiers scale the
+    global attention keep-fraction (1 - cfg.ff.attn_sparsity) the same
+    way they scale the FFN budget, so one tier governs BOTH."""
+    keep = 1.0 - cfg.ff.attn_sparsity
+    eff = effort or "balanced"
+    if eff == "dense":
+        return 1.0
+    if eff == "balanced":
+        return keep
+    if eff == "turbo":
+        return keep * 0.5
+    raise ValueError(f"unknown effort tier {effort!r}; expected one of "
+                     f"{EFFORT_TIERS}")
+
+
 def resolve_plan(cfg: ModelConfig, effort: Optional[str] = None,
                  importance=None, d_ff: Optional[int] = None,
                  shards: int = 1) -> Optional[SparsityPlan]:
@@ -260,11 +311,21 @@ def resolve_plan(cfg: ModelConfig, effort: Optional[str] = None,
     keep = effort_keep(cfg, eff)
     if (importance is not None and cfg.ff.layerwise_schedule
             and eff != "dense"):
-        return SparsityPlan.from_importance(
+        plan = SparsityPlan.from_importance(
             importance, keep, n_tiles, cfg.ff.tile,
             name=f"{eff}-layerwise")
-    return SparsityPlan.uniform(cfg.n_layers, n_tiles, cfg.ff.tile,
-                                keep, shards=shards, name=eff)
+    else:
+        plan = SparsityPlan.uniform(cfg.n_layers, n_tiles, cfg.ff.tile,
+                                    keep, shards=shards, name=eff)
+    # dual-budget: the same tier scales the attention-block budget
+    # (dense tier -> attn_keep 1.0 -> with_attention no-ops, so the
+    # plan stays the pre-dual-budget object and its executables)
+    if cfg.ff.attn_sparsity > 0:
+        plan = plan.with_attention(
+            effort_attn_keep(cfg, eff), cfg.ff.attn_tiles,
+            importance=(importance if cfg.ff.layerwise_schedule
+                        else None))
+    return plan
 
 
 def _as_plan(cfg: ModelConfig, plan, shards: int = 1,

@@ -152,6 +152,17 @@ class SparsityPlan:
     n_tiles: int
     tile: int
     keep: float
+    # --- attention-block budget (dual-budget plans; ISSUE 6) ---
+    # Per-layer kept-KV-block counts on a VIRTUAL grid of `attn_tiles`
+    # slots (the real causally-valid block count varies per query block,
+    # so the budget is a fraction count_l / attn_tiles that the
+    # attention wiring scales onto the actual block grid). None/0 means
+    # dense attention — the pre-dual-budget plan, hash/eq-compatible
+    # with every existing call site. Same largest-remainder pinning,
+    # same frozen/hashable jit-static contract as `tile_counts`.
+    attn_counts: Optional[Tuple[int, ...]] = None
+    attn_tiles: int = 0
+    attn_keep: float = 1.0
 
     def __post_init__(self):
         if not self.tile_counts:
@@ -160,6 +171,16 @@ class SparsityPlan:
             raise ValueError(
                 f"tile_counts must lie in [1, {self.n_tiles}]: "
                 f"{self.tile_counts}")
+        if self.attn_counts is not None:
+            if len(self.attn_counts) != len(self.tile_counts):
+                raise ValueError("attn_counts must cover every layer")
+            if self.attn_tiles < 1:
+                raise ValueError("attn_counts needs attn_tiles >= 1")
+            if (min(self.attn_counts) < 1
+                    or max(self.attn_counts) > self.attn_tiles):
+                raise ValueError(
+                    f"attn_counts must lie in [1, {self.attn_tiles}]: "
+                    f"{self.attn_counts}")
 
     # ----- derived properties -----
 
@@ -189,6 +210,59 @@ class SparsityPlan:
         """[L] int32 device array — rides the layer scan as xs so each
         layer consumes its own count as a traced value."""
         return jnp.asarray(self.tile_counts, jnp.int32)
+
+    # ----- attention-block budget (dual-budget plans) -----
+
+    @property
+    def has_attn(self) -> bool:
+        """True when this plan carries a block-sparse attention budget."""
+        return self.attn_counts is not None and self.attn_tiles > 0
+
+    @property
+    def attn_k_max(self) -> int:
+        """Static max per-layer attention count (virtual-grid units) —
+        the attention wiring's top-k selection width scales off it."""
+        return max(self.attn_counts) if self.has_attn else 0
+
+    @property
+    def attn_keep_fracs(self) -> np.ndarray:
+        if not self.has_attn:
+            return np.ones(self.n_layers)
+        return np.asarray(self.attn_counts, np.float64) / self.attn_tiles
+
+    def attn_flop_frac(self) -> float:
+        """Aggregate attention-score/value FLOP fraction vs dense
+        (analytical, block-budget upper bound — the causal ramp's
+        per-block floor of forced sink+diagonal blocks raises the
+        realized fraction at short contexts; see
+        benchmarks/prefill_speedup.attention_flop_fraction)."""
+        if not self.has_attn:
+            return 1.0
+        return float(sum(self.attn_counts)) / (self.n_layers
+                                               * self.attn_tiles)
+
+    def attn_counts_array(self):
+        """[L] int32 — rides the layer scan as the SECOND traced
+        k_valid (alongside the FFN `counts_array`)."""
+        return jnp.asarray(self.attn_counts, jnp.int32)
+
+    def with_attention(self, attn_keep: float, attn_tiles: int,
+                       importance=None) -> "SparsityPlan":
+        """Attach a per-layer attention-block budget resolved from a
+        global keep-fraction: Algorithm 1 waterfill when `importance`
+        is supplied, else uniform, then the same largest-remainder
+        pinning `tile_counts` uses. attn_keep >= 1 returns the plan
+        unchanged (dense attention)."""
+        if attn_keep >= 1.0 or attn_tiles < 1:
+            return self
+        if importance is not None:
+            budgets = allocate_budgets(importance, attn_keep)
+        else:
+            budgets = uniform_budgets(self.n_layers, attn_keep)
+        counts = budgets_to_tiles(budgets, attn_tiles)
+        return dataclasses.replace(
+            self, attn_counts=tuple(int(c) for c in counts),
+            attn_tiles=int(attn_tiles), attn_keep=float(attn_keep))
 
     # ----- constructors -----
 
@@ -257,12 +331,16 @@ class SparsityPlan:
         if self.is_uniform:
             derived = SparsityPlan.uniform(self.n_layers, n_tiles,
                                            self.tile, self.keep)
-            return dataclasses.replace(derived,
-                                       name=f"{self.name}@t{n_tiles}")
-        derived = SparsityPlan.from_budgets(
-            self.keep_fracs, n_tiles, self.tile, keep=self.keep,
-            name=f"{self.name}@t{n_tiles}")
-        return derived
+            derived = dataclasses.replace(derived,
+                                          name=f"{self.name}@t{n_tiles}")
+        else:
+            derived = SparsityPlan.from_budgets(
+                self.keep_fracs, n_tiles, self.tile, keep=self.keep,
+                name=f"{self.name}@t{n_tiles}")
+        # the attention budget is FFN-width independent: carry it over
+        return dataclasses.replace(derived, attn_counts=self.attn_counts,
+                                   attn_tiles=self.attn_tiles,
+                                   attn_keep=self.attn_keep)
 
 
 def calibrate_layer_importance(collect_attn_fn, samples, block_size: int):

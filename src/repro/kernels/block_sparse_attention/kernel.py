@@ -1,0 +1,153 @@
+"""Pallas TPU kernel: block-sparse flash-attention prefill.
+
+The FLOP-bending half of the dual-budget SparsityPlan (see the DESIGN
+note in core/fastforward.py): per 128-token query block, a cheap
+pooled-QK proxy (computed in XLA, see ops.select_kv_blocks) picks the
+KV blocks worth attending, and this kernel walks ONLY the selection —
+scalar-prefetched block-id + count operands, one K/V slab DMA per grid
+step, online softmax over the selected-block axis.
+
+The kernel is layout-agnostic and thereby page-table-aware: it reads
+[P, blk, Kv, dh] POOL slabs through prefetched pool ids, so the slot
+layout passes its reshaped contiguous cache (pool id = row * n_blocks
++ block) and the paged layout passes the raw page pool with ids
+resolved through each row's page table (slab granularity = page size).
+Each selected slab also carries its absolute start position
+(`blk_pos`), since pool ids do not encode sequence position.
+
+Grid: (B, K). Selection slots past a row's live count are dead:
+`pl.when` skips the whole MXU body AND the index_map clamps the slab
+id to the last live block, so dead slots re-request an already-resident
+slab instead of moving new bytes (the DMA-skip idiom, same as the
+sparse-FFN kernels). GQA is computed grouped per program over all
+heads, like kernels/paged_attention.
+
+VMEM working set per step: q (1, N, H, dh), one K + one V slab
+(1, blk, Kv, dh), scratch m/l (H, N) + acc (H, N, dh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _bsa_kernel(ids_ref, bpos_ref, cnt_ref, p0_ref, len_ref, q_ref,
+                k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                kv_heads, scale, window):
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [N, H, dh]
+        N, H, dh = q.shape
+        rep = H // kv_heads
+        blk = k_ref.shape[1]
+        qg = q.reshape(N, kv_heads, rep, dh)
+        kb = k_ref[0].astype(jnp.float32)                 # [blk, Kv, dh]
+        s = jnp.einsum("ngrd,tgd->grnt", qg, kb)          # [Kv,rep,N,blk]
+        kpos = bpos_ref[b, k] + jax.lax.broadcasted_iota(
+            jnp.int32, (kv_heads, rep, N, blk), 3)
+        qpos = p0_ref[b] + jax.lax.broadcasted_iota(
+            jnp.int32, (kv_heads, rep, N, blk), 2)
+        mask = (kpos <= qpos) & (kpos < len_ref[b])
+        if window:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # [H, N]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1).reshape(H, N)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # the where-guard keeps fully-masked rows exact: without it a
+        # row whose every key in this slab is masked while the running
+        # max is still NEG_INF would compute exp(NEG_INF - NEG_INF)=1
+        p = jnp.where(mask,
+                      jnp.exp(s - m_new.reshape(kv_heads, rep, N)[..., None]),
+                      0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1).reshape(H, N)
+        v = v_ref[0].astype(jnp.float32)                  # [blk, Kv, dh]
+        pv = jnp.einsum("grnt,tgd->grnd", p, v).reshape(H, N, dh)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+        m_scr[...] = m_new
+
+    # selection slots past this row's live count are dead grid steps:
+    # no MXU work, and the index_map already clamped their slab DMA
+    pl.when(k < cnt_ref[b])(compute)
+
+    @pl.when(k == pl.num_programs(1) - 1)
+    def _finish():
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = o.transpose(1, 0, 2).astype(o_ref.dtype)  # [N, H, dh]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def block_sparse_prefill(q, kb, vb, pool_ids, blk_pos, counts, pos0s,
+                         lengths, *, window: int | None = None,
+                         interpret: bool = False):
+    """q: [B, N, H, dh] (RoPE applied); kb/vb: [P, blk, Kv, dh] pooled
+    K/V slabs; pool_ids: [B, K] int32 slab ids into the pool (live
+    prefix first); blk_pos: [B, K] int32 absolute start position of
+    each selected slab; counts: [B] int32 live selection slots;
+    pos0s: [B] int32 query-block offsets; lengths: [B] int32 valid key
+    counts. Returns [B, N, H, dh] float32."""
+    B, N, H, dh = q.shape
+    _, blk, Kv, _ = kb.shape
+    K = pool_ids.shape[1]
+    assert H % Kv == 0
+
+    def clamp(ids, cnt, kk):
+        return ids[jnp.minimum(kk, jnp.maximum(cnt - 1, 0))]
+
+    grid = (B, K)
+    kernel = pl.pallas_call(
+        functools.partial(_bsa_kernel, kv_heads=Kv,
+                          scale=1.0 / (dh ** 0.5), window=window),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, N, H, dh),
+                             lambda b, k, ids, bp, cnt, p0, ln:
+                             (b, 0, 0, 0)),
+                pl.BlockSpec((1, blk, Kv, dh),
+                             lambda b, k, ids, bp, cnt, p0, ln:
+                             (clamp(ids[b], cnt[b], k), 0, 0, 0)),
+                pl.BlockSpec((1, blk, Kv, dh),
+                             lambda b, k, ids, bp, cnt, p0, ln:
+                             (clamp(ids[b], cnt[b], k), 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, N, H, dh),
+                                   lambda b, k, ids, bp, cnt, p0, ln:
+                                   (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, N), jnp.float32),
+                pltpu.VMEM((H, N), jnp.float32),
+                pltpu.VMEM((H, N, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, N, H, dh), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    return kernel(jnp.asarray(pool_ids, jnp.int32),
+                  jnp.asarray(blk_pos, jnp.int32),
+                  jnp.asarray(counts, jnp.int32),
+                  jnp.asarray(pos0s, jnp.int32),
+                  jnp.asarray(lengths, jnp.int32), q, kb, vb)

@@ -1,0 +1,140 @@
+"""Reference oracles for the block-sparse prefill-attention kernel.
+
+Three oracles, each carrying a different half of the correctness
+contract (mirrors kernels/paged_attention/ref.py):
+
+  * ``block_sparse_attention_masked`` — the XLA SERVING path: the
+    live block selection becomes a key-position membership mask ANDed
+    into the exact causal/window/length mask `attend_block_rows`
+    builds, feeding the same masked GQA core. At full budget the
+    membership mask keeps every causally-valid position, so the output
+    is BIT-identical to the dense path.
+  * ``block_sparse_attention_twin`` — the masked-gather twin of the
+    Pallas kernel: walks the same scalar selection in the same order
+    with the same online-softmax recurrence (same op shapes, same
+    where-guards), so interpret-mode kernel output must match it
+    BITWISE. This is the FLOP-scaling XLA form: it only ever touches
+    the selected slabs.
+  * ``dense_oracle`` — structurally independent dense attention (plain
+    softmax over the full cache, no shared helpers): the ground truth
+    the full-budget checks allclose against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as A
+
+NEG_INF = -1e30
+
+
+def selected_pos_mask(ids, counts, n_blocks: int, blk: int, n_keys: int):
+    """Live block selection -> [B, n_keys] per-key-position membership.
+
+    ids: [B, K] block indices; counts: [B] live slots (the first
+    counts[b] slots of row b are its kept blocks). Key position s
+    belongs to block s // blk."""
+    live = jnp.arange(ids.shape[1])[None, :] < counts[:, None]
+    hit = (ids[:, :, None] == jnp.arange(n_blocks)[None, None, :]) & \
+        live[:, :, None]
+    member = jnp.any(hit, axis=1)                         # [B, n_blocks]
+    return jnp.repeat(member, blk, axis=1)[:, :n_keys]    # [B, n_keys]
+
+
+def block_sparse_attention_masked(q, k_cache, v_cache, ids, counts,
+                                  pos0s, lengths, *, blk: int,
+                                  window=None):
+    """Serving XLA path. q: [B, N, H, dh] (RoPE applied); k/v_cache:
+    [B, S, Kv, dh]; ids: [B, K] block indices; counts: [B]; pos0s: [B];
+    lengths: [B]. Returns [B, N, H, dh] in v_cache dtype (the masked
+    GQA core's output dtype — identical to `attend_block_rows`)."""
+    B, N = q.shape[:2]
+    S = k_cache.shape[1]
+    nc = -(-S // blk)
+    positions = pos0s[:, None] + jnp.arange(N)[None, :]
+    kj = jnp.arange(S)[None, None, :]
+    valid = kj <= positions[:, :, None]
+    if window:
+        valid = valid & (kj > positions[:, :, None] - window)
+    valid = valid & (kj < lengths[:, None, None])
+    member = selected_pos_mask(ids, counts, nc, blk, S)
+    valid = valid & member[:, None, :]
+    return A.dot_attention(q, k_cache, v_cache, valid[:, None, None])
+
+
+def block_sparse_attention_twin(q, kb, vb, pool_ids, blk_pos, counts,
+                                pos0s, lengths, *, window=None):
+    """Online-softmax gather twin of the kernel — same operands as
+    kernel.block_sparse_prefill, bit-identical math: a scan over the K
+    selection slots replicating the kernel recurrence (grouped-GQA
+    einsums, masked where-guarded exp, dead-slot carry passthrough).
+    Returns [B, N, H, dh] float32."""
+    B, N, H, dh = q.shape
+    blk, Kv = kb.shape[1], kb.shape[2]
+    rep = H // Kv
+    K = pool_ids.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+
+    def one_row(qr, ids_r, bpos_r, cnt, pos0, length):
+        qg = (qr.astype(jnp.float32) * scale).reshape(N, Kv, rep, dh)
+        qpos = pos0 + jax.lax.broadcasted_iota(
+            jnp.int32, (Kv, rep, N, blk), 2)
+
+        def step(carry, inp):
+            m_prev, l_prev, acc = carry
+            slot, pid, bp0 = inp
+            ks = kb[pid].astype(jnp.float32)              # [blk, Kv, dh]
+            s = jnp.einsum("ngrd,tgd->grnt", qg, ks)
+            kpos = bp0 + jax.lax.broadcasted_iota(
+                jnp.int32, (Kv, rep, N, blk), 3)
+            mask = (kpos <= qpos) & (kpos < length)
+            if window:
+                mask = mask & (kpos > qpos - window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1).reshape(H, N)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.where(
+                mask,
+                jnp.exp(s - m_new.reshape(Kv, rep, N)[..., None]), 0.0)
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1).reshape(H, N)
+            vs = vb[pid].astype(jnp.float32)
+            pv = jnp.einsum("grnt,tgd->grnd", p, vs).reshape(H, N, dh)
+            acc_new = acc * corr[..., None] + pv
+            live = slot < cnt
+            return (jnp.where(live, m_new, m_prev),
+                    jnp.where(live, l_new, l_prev),
+                    jnp.where(live, acc_new, acc)), None
+
+        m0 = jnp.full((H, N), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((H, N), jnp.float32)
+        a0 = jnp.zeros((H, N, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0), (jnp.arange(K), ids_r, bpos_r))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return o.transpose(1, 0, 2)                       # [N, H, dh]
+
+    return jax.vmap(one_row)(q, pool_ids, blk_pos, counts, pos0s,
+                             lengths)
+
+
+def dense_oracle(q, k_cache, v_cache, pos0s, lengths, *, window=None):
+    """Independent dense causal attention over the full cache (plain
+    softmax, repeated-head GQA — no shared helpers with the paths under
+    test). Returns [B, N, H, dh] float32."""
+    B, N, H, dh = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Kv
+    kf = jnp.repeat(k_cache.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(v_cache.astype(jnp.float32), rep, axis=2)
+    s = jnp.einsum("bnhd,bshd->bhns", q.astype(jnp.float32), kf)
+    s = s / (dh ** 0.5)
+    qpos = pos0s[:, None] + jnp.arange(N)[None, :]        # [B, N]
+    kj = jnp.arange(S)[None, None, :]
+    mask = (kj <= qpos[:, :, None]) & (kj < lengths[:, None, None])
+    if window:
+        mask = mask & (kj > qpos[:, :, None] - window)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhns,bshd->bnhd", p, vf)

@@ -78,6 +78,115 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _flash_rows_kernel(p0_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr, *, block_k, kv_heads,
+                       scale, window):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos0 = p0_ref[b]
+    N = q_ref.shape[1]
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [N, H, dh]
+        H, dh = q.shape[1], q.shape[2]
+        rep = H // kv_heads
+        qg = q.reshape(N, kv_heads, rep, dh)
+        k = k_ref[0].astype(jnp.float32)                  # [bk, Kv, dh]
+        s = jnp.einsum("ngrd,tgd->grnt", qg, k)
+        kpos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (kv_heads, rep, N, block_k), 3)
+        qpos = pos0 + jax.lax.broadcasted_iota(
+            jnp.int32, (kv_heads, rep, N, block_k), 2)
+        mask = (kpos <= qpos) & (kpos < len_ref[b])
+        if window:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1).reshape(H, N)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # where-guard: a fully-masked row in the first relevant k-block
+        # would otherwise compute exp(NEG_INF - NEG_INF) == 1
+        p = jnp.where(
+            mask, jnp.exp(s - m_new.reshape(kv_heads, rep, N)[..., None]),
+            0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1).reshape(H, N)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jnp.einsum("grnt,tgd->grnd", p, v).reshape(H, N, dh)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+        m_scr[...] = m_new
+
+    # skip k-blocks entirely above this ROW's causal front (per-row
+    # traced pos0s — the reason the static-q_offset kernel above can't
+    # serve the batched multi-request prefill path)
+    relevant = j * block_k <= pos0 + N - 1
+    if window:
+        relevant = relevant & ((j + 1) * block_k - 1 > pos0 - window)
+    pl.when(relevant)(compute)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = o.transpose(1, 0, 2).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_k", "window", "interpret"))
+def flash_attention_rows(q, k, v, pos0s, lengths, *, block_k: int = 128,
+                         window: int | None = None,
+                         interpret: bool = False):
+    """Per-row-offset batched GQA flash attention (the dense kernel
+    behind multi-request block prefill): row b's query block sits at
+    absolute positions [pos0s[b], pos0s[b]+N) of its own cache row.
+
+    q: [B, N, H, dh] (RoPE applied); k, v: [B, S, Kv, dh]; pos0s,
+    lengths: [B] int32 (scalar-prefetched — they drive the per-row
+    causal k-block skip). S % block_k == 0. Returns [B, N, H, dh] f32."""
+    B, N, H, dh = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    assert S % block_k == 0 and H % Kv == 0
+    grid = (B, S // block_k)
+    kernel = pl.pallas_call(
+        functools.partial(_flash_rows_kernel, block_k=block_k,
+                          kv_heads=Kv, scale=1.0 / (dh ** 0.5),
+                          window=window),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, N, H, dh),
+                             lambda b, j, p0, ln: (b, 0, 0, 0)),
+                pl.BlockSpec((1, block_k, Kv, dh),
+                             lambda b, j, p0, ln: (b, j, 0, 0)),
+                pl.BlockSpec((1, block_k, Kv, dh),
+                             lambda b, j, p0, ln: (b, j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, N, H, dh),
+                                   lambda b, j, p0, ln: (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, N), jnp.float32),
+                pltpu.VMEM((H, N), jnp.float32),
+                pltpu.VMEM((H, N, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, N, H, dh), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    return kernel(jnp.asarray(pos0s, jnp.int32),
+                  jnp.asarray(lengths, jnp.int32), q, k, v)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "block_q", "block_k", "causal", "q_offset", "window", "interpret"))
 def flash_attention(q, k, v, *, block_q: int = 128, block_k: int = 128,

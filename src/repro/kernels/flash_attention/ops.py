@@ -12,6 +12,49 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def mha_flash_rows(q, k, v, pos0s, lengths, *, window=None,
+                   use_kernel: bool | None = None,
+                   interpret: bool | None = None):
+    """Per-row-offset batched GQA block-prefill attention — the
+    kernel-backed dense baseline of the serving path (`attend_block_
+    rows` routes here on TPU; off-TPU its masked-gather math is the
+    fallback). q: [B, N, H, dh] (RoPE applied); k, v: [B, S, Kv, dh];
+    pos0s, lengths: [B] int32. Returns [B, N, H, dh] f32.
+
+    S is padded to a block_k multiple for the kernel (padded keys are
+    masked by `lengths`)."""
+    if use_kernel is None:
+        use_kernel = on_tpu()
+    if interpret is None:
+        interpret = not on_tpu()
+    if use_kernel:
+        block_k = q.shape[1]
+        pad = (-k.shape[1]) % block_k
+        if pad:
+            cfgpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+            k = jnp.pad(k, cfgpad)
+            v = jnp.pad(v, cfgpad)
+        return K.flash_attention_rows(q, k, v, pos0s, lengths,
+                                      block_k=block_k, window=window,
+                                      interpret=interpret)
+    # gather fallback: masked grouped-GQA softmax over the full cache
+    B, N, H, dh = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    qg = q.astype(jnp.float32).reshape(B, N, Kv, rep, dh)
+    s = jnp.einsum("bngrd,bsgd->bgrns", qg, k.astype(jnp.float32))
+    s = s / (dh ** 0.5)
+    qpos = pos0s[:, None] + jnp.arange(N)[None, :]
+    kj = jnp.arange(S)[None, None, :]
+    mask = (kj <= qpos[:, :, None]) & (kj < lengths[:, None, None])
+    if window:
+        mask = mask & (kj > qpos[:, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrns,bsgd->bngrd", p, v.astype(jnp.float32))
+    return o.reshape(B, N, H, dh)
+
+
 def mha_flash(q, k, v, *, causal=True, q_offset=0, window=None,
               use_kernel: bool | None = None, interpret: bool | None = None):
     """q: [B,T,H,dh]; k,v: [B,S,Kv,dh] (GQA: H % Kv == 0). Returns

@@ -26,6 +26,14 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.compat import tpu_compiler_params
 
 
+def _live(ids, cnt, k):
+    """Index-map helper: clamp dead grid steps (k >= cnt) to the last
+    live tile id so they re-request an already-resident slab — Pallas
+    elides the repeat fetch, making dead steps DMA-free as well as
+    (via pl.when) MXU-free. ids: [K], cnt: scalar, k: grid index."""
+    return ids[jnp.minimum(k, jnp.maximum(cnt - 1, 0))]
+
+
 def _sparse_ffn_kernel(ids_ref, cnt_ref, x_ref, wg_ref, wu_ref, wd_ref,
                        o_ref):
     k = pl.program_id(1)
@@ -35,8 +43,9 @@ def _sparse_ffn_kernel(ids_ref, cnt_ref, x_ref, wg_ref, wu_ref, wd_ref,
         o_ref[...] = jnp.zeros_like(o_ref)
 
     # SparsityPlan per-layer counts: tiles past this layer's count are
-    # dead grid steps — skip the whole MXU body (their slab DMAs still
-    # run; DMA skipping is a follow-on, same note as paged attention)
+    # dead grid steps — the MXU body is skipped, and the index_map
+    # clamps their slab requests to the last LIVE tile, so Pallas's
+    # revisit-elision sees an unchanged block and moves no bytes
     @pl.when(k < cnt_ref[0])
     def _step():
         x = x_ref[...].astype(jnp.float32)
@@ -75,12 +84,14 @@ def sparse_ffn(x, wg, wu, wd, tile_ids, k_valid=None, *, tile: int = 128,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((block_n, D), lambda n, k, ids, cnt: (n, 0)),
+                # dead steps (k >= cnt) clamp to the last live tile id:
+                # the revisited slab is already resident, no DMA issued
                 pl.BlockSpec((D, tile),
-                             lambda n, k, ids, cnt: (0, ids[k])),
+                             lambda n, k, ids, cnt: (0, _live(ids, cnt[0], k))),
                 pl.BlockSpec((D, tile),
-                             lambda n, k, ids, cnt: (0, ids[k])),
+                             lambda n, k, ids, cnt: (0, _live(ids, cnt[0], k))),
                 pl.BlockSpec((tile, D),
-                             lambda n, k, ids, cnt: (ids[k], 0)),
+                             lambda n, k, ids, cnt: (_live(ids, cnt[0], k), 0)),
             ],
             out_specs=pl.BlockSpec((block_n, D),
                                    lambda n, k, ids, cnt: (n, 0)),
@@ -105,7 +116,9 @@ def _sparse_ffn_batched_kernel(ids_ref, cnt_ref, x_ref, wg_ref, wu_ref,
 
     # per-ROW valid counts (SparsityPlan layer counts during prefill,
     # per-request effort tiers at decode): row b's tiles past
-    # cnt_ref[b] are dead grid steps — the MXU body is skipped
+    # cnt_ref[b] are dead grid steps — the MXU body is skipped and the
+    # index_map pins their slab requests to row b's last live tile, so
+    # the dead steps DMA nothing new
     @pl.when(k < cnt_ref[b])
     def _step():
         x = x_ref[0].astype(jnp.float32)
@@ -159,12 +172,17 @@ def sparse_ffn_batched(x, wg, wu, wd, tile_ids, k_valid=None, *,
             in_specs=[
                 pl.BlockSpec((1, block_n, D),
                              lambda b, n, k, ids, cnt: (b, n, 0)),
+                # dead steps clamp to row b's last live tile id — the
+                # revisited slab is already resident, no DMA issued
                 pl.BlockSpec((D, tile),
-                             lambda b, n, k, ids, cnt: (0, ids[b, k])),
+                             lambda b, n, k, ids, cnt:
+                             (0, _live(ids[b], cnt[b], k))),
                 pl.BlockSpec((D, tile),
-                             lambda b, n, k, ids, cnt: (0, ids[b, k])),
+                             lambda b, n, k, ids, cnt:
+                             (0, _live(ids[b], cnt[b], k))),
                 pl.BlockSpec((tile, D),
-                             lambda b, n, k, ids, cnt: (ids[b, k], 0)),
+                             lambda b, n, k, ids, cnt:
+                             (_live(ids[b], cnt[b], k), 0)),
             ],
             out_specs=pl.BlockSpec((1, block_n, D),
                                    lambda b, n, k, ids, cnt: (b, n, 0)),

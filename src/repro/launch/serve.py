@@ -48,12 +48,15 @@ and trace records may carry their own `effort` field:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro.configs import ALL, get_config
+from repro.core import scheduler as SCHED
 from repro.core.fastforward import EFFORT_TIERS, resolve_plan
 from repro.models.registry import get_model
 from repro.nn.param import init_params
@@ -71,6 +74,45 @@ def build_params(cfg, checkpoint=None):
         print(f"loaded checkpoint ({meta})")
         return params
     return init_params(model.specs(cfg), jax.random.key(0))
+
+
+def collect_attn_probs(params, cfg, tokens):
+    """One dense forward pass collecting per-layer post-softmax
+    attention probs [L, B, H, T, T] — the Eq. 23 calibration input for
+    `calibrate_layer_importance`. Offline per-layer python loop (like
+    benchmarks.common.capture_ffn_inputs), never on the serving path."""
+    from repro.models import dense as D
+    from repro.nn import attention as A
+    from repro.nn import layers as L
+    from repro.core import fastforward as FF
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    probs_all = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        xn = D.apply_norm(cfg, lp["ln1"], x)
+        q = A.project_q(lp["attn"], xn, pos, cfg.rope_theta)
+        k, v = A.project_kv(lp["attn"], xn, pos, cfg.rope_theta)
+        mask = A.causal_mask(T, T)
+        Kv = k.shape[2]
+        rep = q.shape[2] // Kv
+        qg = q.reshape(B, T, Kv, rep, -1)
+        s = jnp.einsum("btgrk,bsgk->bgrts", qg, k) / np.sqrt(q.shape[-1])
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)                  # [B,Kv,rep,T,T]
+        probs_all.append(p.reshape(B, -1, T, T))
+        o = jnp.einsum("bgrts,bsgk->btgrk", p.astype(v.dtype), v)
+        o = o.reshape(B, T, q.shape[2], -1)
+        x = x + A.output_proj(lp["attn"], o)
+        xn2 = D.apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            from repro.models import moe as M
+            y, _ = M.moe_block(lp["moe"], cfg, xn2, mode="dense")
+            x = x + y.astype(x.dtype)
+        else:
+            x = x + FF.ff_dense(lp["ffn"], cfg, xn2).astype(x.dtype)
+    return jnp.stack(probs_all)
 
 
 def make_prompts(cfg, n, prompt_len, rng):
@@ -136,11 +178,31 @@ def serve_stream(cfg, params, args):
     # default ("balanced" == the cfg budget) is plans[0]; requests
     # without an effort take it. Every (plan, width bucket) pair is
     # pre-compiled by warmup, so the mixed-tier stream never recompiles.
+    # --calibrate N: run Eq. 23 layer-importance calibration over the
+    # first N prompts of the stream (dense offline forward passes) and
+    # feed it to resolve_plan, so the registered plans carry Algorithm-1
+    # layer-wise budgets instead of uniform ones.
+    importance = None
+    if args.calibrate and cfg.ff.enabled:
+        first = sorted(requests, key=lambda r: r.arrival_time or 0.0)
+        samples = [np.asarray(r.prompt, np.int32)[None]
+                   for r in first[:args.calibrate]]
+        importance = SCHED.calibrate_layer_importance(
+            lambda t: collect_attn_probs(params, cfg, jnp.asarray(t)),
+            samples, N)
+        print(f"calibrated layer importance on {len(samples)} prompts: "
+              f"{[round(float(s), 4) for s in importance]}")
+
     plans = None
     if cfg.ff.enabled:
         names = ["balanced"] + [e for e in dict.fromkeys(
             r.effort for r in requests if r.effort) if e != "balanced"]
-        plans = tuple(resolve_plan(cfg, effort=e) for e in names)
+        # register under the bare tier names: calibrated plans resolve
+        # as "<tier>-layerwise", but requests address them by tier
+        plans = tuple(
+            dataclasses.replace(
+                resolve_plan(cfg, effort=e, importance=importance), name=e)
+            for e in names)
     runtime = make_runtime(cfg, params, plans=plans)
 
     sched = ContinuousBatchingScheduler(
@@ -187,9 +249,16 @@ def serve_stream(cfg, params, args):
               f"{row['keep_per_layer']} | ffn flop frac "
               f"{row['ffn_flop_frac']:.3f} | {row['prefill_blocks']} "
               f"prefill blocks, {row['decode_tokens']} decode tokens")
+        if row["attn_flop_frac"] is not None:
+            print(f"  attn[{row['name']}]: keep/layer "
+                  f"{row['attn_keep_per_layer']} | attn block frac "
+                  f"{row['attn_flop_frac']:.3f}")
     if sp["aggregate_ffn_flop_frac"] is not None:
         print(f"sparsity aggregate ffn flop frac (work-weighted): "
               f"{sp['aggregate_ffn_flop_frac']:.3f}")
+    if sp.get("aggregate_attn_flop_frac") is not None:
+        print(f"sparsity aggregate attn block frac (work-weighted): "
+              f"{sp['aggregate_attn_flop_frac']:.3f}")
     print(f"ticks {sched.n_ticks} | prefill blocks "
           f"{sched.n_prefill_blocks} in {sched.n_prefill_ticks} prefill "
           f"ticks (P<={sched.prefill_batch}) | decode steps "
@@ -253,6 +322,16 @@ def main():
                         "list round-robined across requests "
                         "(SLO-tiered sparsity; trace records may carry "
                         "their own 'effort')")
+    p.add_argument("--calibrate", type=int, default=0, metavar="N",
+                   help="stream mode: calibrate Eq. 23 layer importance "
+                        "on the first N prompts (offline dense passes) "
+                        "and resolve Algorithm-1 layer-wise plans from "
+                        "it instead of uniform budgets")
+    p.add_argument("--attn-sparsity", type=float, default=None,
+                   help="enable the block-sparse prefill attention "
+                        "budget (fraction of KV blocks dropped at "
+                        "'balanced'); plans become dual-budget and "
+                        "effort tiers scale both")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
     if args.max_new < 1:
@@ -263,10 +342,14 @@ def main():
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.dense:
         cfg = cfg.with_ff(enabled=False)
+    if args.attn_sparsity is not None:
+        cfg = cfg.with_ff(attn_sparsity=args.attn_sparsity)
     if args.kv_layout:
         cfg = cfg.with_(kv_layout=args.kv_layout)
     if args.trace and not args.stream:
         p.error("--trace requires --stream")
+    if args.calibrate and not args.stream:
+        p.error("--calibrate requires --stream")
     params = build_params(cfg, args.checkpoint)
     if args.stream:
         serve_stream(cfg, params, args)

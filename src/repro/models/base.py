@@ -28,6 +28,15 @@ class FastForwardConfig:
     dense_last_block: bool = True
     apply_to_decode: bool = True   # paper Table 3: reuse for generation
     use_compensator: bool = True
+    # --- block-sparse prefill attention (dual-budget SparsityPlan) ---
+    # Fraction of causally-valid KV blocks each 128-token query block
+    # DROPS during blockwise prefill (0.0 = dense attention, the
+    # pre-dual-budget behavior, bit-identical). Resolved alongside the
+    # FFN budget into the same SparsityPlan: per-layer counts on a
+    # virtual `attn_tiles` grid ride the layer scan as a second traced
+    # k_valid. See the DESIGN note in core/fastforward.py.
+    attn_sparsity: float = 0.0
+    attn_tiles: int = 16           # virtual attention-budget grid per layer
 
     def predictor_r(self, d_model: int) -> int:
         if self.predictor_dim:

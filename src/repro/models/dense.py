@@ -165,16 +165,19 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
     plan = FF._as_plan(cfg, plan, shards=shards) if ff.enabled else None
     counts = (None if plan is None or plan.is_uniform
               else plan.counts_array())
+    attn_counts = (plan.attn_counts_array()
+                   if plan is not None and plan.has_attn else None)
     N = tok_blk.shape[1]
     x = L.embed(params["embed"], tok_blk).astype(cfg.dtype)
     positions = pos0 + jnp.arange(N)[None, :]
 
     def layer_body(x, layer_in):
-        if counts is None:
-            lp, kc, vc = layer_in
-            k_l = None
-        else:
-            lp, kc, vc, k_l = layer_in
+        lp, kc, vc, *rest = layer_in
+        rest = list(rest)
+        k_l = rest.pop(0) if counts is not None else None
+        a_l = rest.pop(0) if attn_counts is not None else None
+        attn_sel = (None if a_l is None
+                    else (plan.attn_k_max, plan.attn_tiles, a_l))
         xn = apply_norm(cfg, lp["ln1"], x)
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
                                     cfg.rope_theta)
@@ -182,7 +185,7 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
         h = A.attend_block_cached(lp["attn"], xn, kc, vc, pos0,
                                   window=cfg.sliding_window,
                                   rope_theta=cfg.rope_theta,
-                                  lengths=lengths)
+                                  lengths=lengths, attn_sel=attn_sel)
         x = x + h
         xn2 = apply_norm(cfg, lp["ln2"], x)
         if plan is not None and cfg.shardmap_ffn and mesh is not None:
@@ -203,6 +206,8 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
     xs = (params["layers"], cache["k"], cache["v"])
     if counts is not None:
         xs = xs + (counts,)
+    if attn_counts is not None:
+        xs = xs + (attn_counts,)
     x, (ks, vs) = jax.lax.scan(layer_body, x, xs)
     return {"k": ks, "v": vs}, x
 
@@ -246,15 +251,18 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
     plan = FF._as_plan(cfg, plan, shards=shards) if ff.enabled else None
     counts = (None if plan is None or plan.is_uniform
               else plan.counts_array())
+    attn_counts = (plan.attn_counts_array()
+                   if plan is not None and plan.has_attn else None)
     N = tok_blks.shape[1]
     x = L.embed(params["embed"], tok_blks).astype(cfg.dtype)
 
     def layer_body(x, layer_in):
-        if counts is None:
-            lp, kc, vc = layer_in
-            k_l = None
-        else:
-            lp, kc, vc, k_l = layer_in
+        lp, kc, vc, *rest = layer_in
+        rest = list(rest)
+        k_l = rest.pop(0) if counts is not None else None
+        a_l = rest.pop(0) if attn_counts is not None else None
+        attn_sel = (None if a_l is None
+                    else (plan.attn_k_max, plan.attn_tiles, a_l))
         xn = apply_norm(cfg, lp["ln1"], x)
         positions = pos0s[:, None] + jnp.arange(N)[None, :]
         k_new, v_new = A.project_kv(lp["attn"], xn, positions,
@@ -264,7 +272,7 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
             h = A.attend_block_rows(lp["attn"], xn, kc, vc, pos0s,
                                     window=cfg.sliding_window,
                                     rope_theta=cfg.rope_theta,
-                                    lengths=lengths)
+                                    lengths=lengths, attn_sel=attn_sel)
         else:
             kc, vc = A.write_kv_rows_paged(kc, vc, k_new, v_new,
                                            page_tables, pos0s,
@@ -273,7 +281,8 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
                                           page_tables, pos0s,
                                           window=cfg.sliding_window,
                                           rope_theta=cfg.rope_theta,
-                                          lengths=lengths)
+                                          lengths=lengths,
+                                          attn_sel=attn_sel)
         x = x + h
         xn2 = apply_norm(cfg, lp["ln2"], x)
         if plan is not None:
@@ -286,6 +295,8 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
     xs = (params["layers"], cache["k"], cache["v"])
     if counts is not None:
         xs = xs + (counts,)
+    if attn_counts is not None:
+        xs = xs + (attn_counts,)
     x, (ks, vs) = jax.lax.scan(layer_body, x, xs)
     return {"k": ks, "v": vs}, x
 

@@ -179,18 +179,36 @@ def attend_full(params, x, positions, *, causal=True, window=None,
 
 def attend_block_cached(params, x_block, k_cache, v_cache, pos0, *,
                         window=None, rope_theta=10000.0, use_rope=True,
-                        lengths=None):
+                        lengths=None, attn_sel=None):
     """Blockwise prefill: query block attends to cache[:pos0+block].
 
     x_block: [B,N,D]; k_cache/v_cache: [B,S,Kv,dh] with the current block
     already written at [pos0, pos0+N). lengths: optional [B] true prompt
-    lengths (right-padded batches never attend past them). Returns [B,N,D].
+    lengths (right-padded batches never attend past them). attn_sel:
+    optional block-sparse attention budget (see `attend_block_rows`) —
+    delegates to the per-row path with a broadcast offset. Returns [B,N,D].
     """
     B, N, _ = x_block.shape
     S = k_cache.shape[1]
+    if attn_sel is not None:
+        pos0s = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32), (B,))
+        return attend_block_rows(params, x_block, k_cache, v_cache,
+                                 pos0s, window=window,
+                                 rope_theta=rope_theta,
+                                 use_rope=use_rope, lengths=lengths,
+                                 attn_sel=attn_sel)
     positions = pos0 + jnp.arange(N)[None, :]
     theta = rope_theta if use_rope else None
     q = project_q(params, x_block, positions, theta)
+    from repro.kernels.flash_attention import ops as FA
+    if FA.on_tpu():
+        # kernel-backed dense baseline (gather/mask fallback off-TPU)
+        lens = (lengths if lengths is not None
+                else jnp.full((B,), S, jnp.int32))
+        pos0s = jnp.broadcast_to(jnp.asarray(pos0, jnp.int32), (B,))
+        o = FA.mha_flash_rows(q, k_cache, v_cache, pos0s, lens,
+                              window=window)
+        return output_proj(params, o.astype(v_cache.dtype))
     if window:
         mask = sliding_mask(N, S, window, q_offset=pos0)
     else:
@@ -201,9 +219,18 @@ def attend_block_cached(params, x_block, k_cache, v_cache, pos0, *,
     return output_proj(params, o)
 
 
+def attn_sel_width(attn_sel, n_blocks: int) -> int:
+    """STATIC top-k selection width for a block-sparse attention budget:
+    the plan's max per-layer count (virtual-grid units) scaled onto the
+    cache's real block grid, floor 2 (forced sink + diagonal)."""
+    attn_k_max, attn_tiles, _ = attn_sel
+    k = -(-attn_k_max * n_blocks // attn_tiles)               # ceil
+    return min(max(2, k), n_blocks)
+
+
 def attend_block_rows(params, x_block, k_cache, v_cache, pos0s, *,
                       window=None, rope_theta=10000.0, use_rope=True,
-                      lengths=None):
+                      lengths=None, attn_sel=None):
     """Per-row-offset blockwise prefill: row b's query block sits at
     absolute positions [pos0s[b], pos0s[b]+N) of ITS OWN sequence.
 
@@ -213,12 +240,43 @@ def attend_block_rows(params, x_block, k_cache, v_cache, pos0s, *,
     sliding-window / length masks are built per row. x_block: [B,N,D];
     k_cache/v_cache: [B,S,Kv,dh] (current block already written);
     pos0s: [B] int32; lengths: optional [B] true prompt lengths.
+
+    attn_sel: optional (attn_k_max, attn_tiles, a_l) block-sparse
+    attention budget from a dual-budget SparsityPlan — attn_k_max and
+    attn_tiles are STATIC (join the plan's jit key), a_l is this
+    layer's traced virtual-grid count riding the layer scan. When set,
+    KV blocks are scored by the pooled-QK proxy and only the kept
+    selection is attended (kernels/block_sparse_attention dispatch:
+    Pallas kernel on TPU, membership-masked GQA core off TPU — the
+    latter is bit-identical to the dense path at full budget).
     Returns [B,N,D]."""
     B, N, _ = x_block.shape
     S = k_cache.shape[1]
     positions = pos0s[:, None] + jnp.arange(N)[None, :]       # [B, N]
     theta = rope_theta if use_rope else None
     q = project_q(params, x_block, positions, theta)
+    if attn_sel is not None:
+        from repro.kernels.block_sparse_attention import ops as BSA
+        _, attn_tiles, a_l = attn_sel
+        nc = -(-S // N)
+        lens = (lengths if lengths is not None
+                else jnp.full((B,), S, jnp.int32))
+        ids, cnts = BSA.select_kv_blocks(
+            q, BSA.pooled_block_keys(k_cache, N), pos0s, lens, blk=N,
+            k_sel=attn_sel_width(attn_sel, nc), attn_tiles=attn_tiles,
+            a_l=a_l, window=window)
+        o = BSA.block_sparse_prefill_op(q, k_cache, v_cache, ids, cnts,
+                                        pos0s, lens, blk=N,
+                                        window=window)
+        return output_proj(params, o.astype(v_cache.dtype))
+    from repro.kernels.flash_attention import ops as FA
+    if FA.on_tpu():
+        # kernel-backed dense baseline (gather/mask fallback off-TPU)
+        lens = (lengths if lengths is not None
+                else jnp.full((B,), S, jnp.int32))
+        o = FA.mha_flash_rows(q, k_cache, v_cache, pos0s, lens,
+                              window=window)
+        return output_proj(params, o.astype(v_cache.dtype))
     kj = jnp.arange(S)[None, None, :]
     valid = kj <= positions[:, :, None]                       # [B, N, S]
     if window:
@@ -404,11 +462,33 @@ def write_kv_tok_paged(k_pages, v_pages, k_new, v_new, page_table,
 
 def attend_block_rows_paged(params, x_block, k_pages, v_pages, page_table,
                             pos0s, *, window=None, rope_theta=10000.0,
-                            use_rope=True, lengths=None):
+                            use_rope=True, lengths=None, attn_sel=None):
     """Paged twin of `attend_block_rows`: per-row-offset blockwise
-    prefill attention indexing the KV pool through page tables. The
-    gathered contiguous views feed the identical masked GQA core, so
-    output is bit-identical to the slot layout."""
+    prefill attention indexing the KV pool through page tables. Without
+    a block-sparse budget the gathered contiguous views feed the
+    identical masked GQA core, so output is bit-identical to the slot
+    layout; with `attn_sel` the page-table-aware prefill kernel reads
+    the selected slabs straight out of the raw page pool on TPU (the
+    XLA branch masks the gathered view — same bit-identity contract)."""
+    if attn_sel is not None:
+        from repro.kernels.block_sparse_attention import ops as BSA
+        B, N = x_block.shape[:2]
+        S = page_table.shape[1] * k_pages.shape[1]
+        positions = pos0s[:, None] + jnp.arange(N)[None, :]
+        theta = rope_theta if use_rope else None
+        q = project_q(params, x_block, positions, theta)
+        _, attn_tiles, a_l = attn_sel
+        lens = (lengths if lengths is not None
+                else jnp.full((B,), S, jnp.int32))
+        nc = -(-S // N)
+        ids, cnts = BSA.select_kv_blocks(
+            q, BSA.pooled_block_keys_paged(k_pages, page_table, N),
+            pos0s, lens, blk=N, k_sel=attn_sel_width(attn_sel, nc),
+            attn_tiles=attn_tiles, a_l=a_l, window=window)
+        o = BSA.block_sparse_prefill_paged_op(
+            q, k_pages, v_pages, page_table, ids, cnts, pos0s, lens,
+            blk=N, window=window)
+        return output_proj(params, o.astype(v_pages.dtype))
     kc, vc = gather_kv_pages(k_pages, v_pages, page_table)
     return attend_block_rows(params, x_block, kc, vc, pos0s,
                              window=window, rope_theta=rope_theta,

@@ -614,21 +614,33 @@ class ContinuousBatchingScheduler:
         tokens) actually ran under it; plus the work-weighted aggregate
         FFN FLOP fraction of the whole stream."""
         N = self.runtime.block_size
-        out = {"plans": [], "aggregate_ffn_flop_frac": None}
+        out = {"plans": [], "aggregate_ffn_flop_frac": None,
+               "aggregate_attn_flop_frac": None}
         if not self.plans:
             return out
         weights = (self.plan_prefill_blocks * N
                    + self.plan_decode_tokens).astype(np.float64)
         fracs = np.array([p.flop_frac() for p in self.plans])
+        # dual-budget plans also carry an attention-block budget; plans
+        # without one run dense attention (fraction 1.0)
+        afracs = np.array([p.attn_flop_frac() if p.has_attn else 1.0
+                           for p in self.plans])
         if weights.sum() > 0:
             out["aggregate_ffn_flop_frac"] = float(
                 (weights * fracs).sum() / weights.sum())
+            out["aggregate_attn_flop_frac"] = float(
+                (weights * afracs).sum() / weights.sum())
         for i, p in enumerate(self.plans):
             out["plans"].append({
                 "name": p.name,
                 "keep_per_layer": [round(float(f), 4)
                                    for f in p.keep_fracs],
                 "ffn_flop_frac": round(p.flop_frac(), 4),
+                "attn_keep_per_layer": (
+                    [round(float(f), 4) for f in p.attn_keep_fracs]
+                    if p.has_attn else None),
+                "attn_flop_frac": (round(p.attn_flop_frac(), 4)
+                                   if p.has_attn else None),
                 "prefill_blocks": int(self.plan_prefill_blocks[i]),
                 "decode_tokens": int(self.plan_decode_tokens[i]),
             })

@@ -1,0 +1,311 @@
+"""Block-sparse prefill attention: pooled-QK selection, the Pallas
+kernel (interpret mode) vs its online-softmax twin (BITWISE) vs the
+masked serving path vs the dense oracle, the paged dispatch, the
+full-budget bit-identity contract at the attention-op level, and the
+per-row flash kernel behind the dense TPU routing (satellite 6)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_sparse_attention import kernel as K
+from repro.kernels.block_sparse_attention import ops as BSA
+from repro.kernels.block_sparse_attention import ref as R
+from repro.kernels.flash_attention import ops as FA
+from repro.nn import attention as A
+from repro.nn.attention import attn_sel_width
+
+
+def _setup(seed=0, B=3, N=8, H=4, Kv=2, dh=16, S=40,
+           pos0s=(0, 16, 32), lengths=(8, 24, 40)):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, N, H, dh)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(B, S, Kv, dh)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, S, Kv, dh)), jnp.float32)
+    return (q, kc, vc, jnp.asarray(pos0s, jnp.int32),
+            jnp.asarray(lengths, jnp.int32))
+
+
+def _select(q, kc, pos0s, lengths, blk, attn_tiles, a_l, window=None):
+    nc = -(-kc.shape[1] // blk)
+    return BSA.select_kv_blocks(
+        q, BSA.pooled_block_keys(kc, blk), pos0s, lengths, blk=blk,
+        k_sel=attn_sel_width((int(a_l), attn_tiles, None), nc),
+        attn_tiles=attn_tiles, a_l=jnp.int32(a_l), window=window)
+
+
+# ------------------------------------------------ selection properties
+
+
+def test_selection_forced_blocks_and_ascending_prefix():
+    q, kc, vc, pos0s, lengths = _setup()
+    blk = 8
+    ids, cnts = _select(q, kc, pos0s, lengths, blk, attn_tiles=8, a_l=4)
+    ids, cnts = np.asarray(ids), np.asarray(cnts)
+    cur = (np.asarray(pos0s) + q.shape[1] - 1) // blk
+    nv = cur + 1
+    # per-row kept count: budget fraction scaled onto the causal ramp
+    want = np.clip(-(-4 * nv // 8), np.minimum(2, nv), nv)
+    np.testing.assert_array_equal(cnts, want)
+    for b in range(ids.shape[0]):
+        live = ids[b, :cnts[b]]
+        assert 0 in live, "sink block must be force-included"
+        assert cur[b] in live, "diagonal block must be force-included"
+        assert np.all(np.diff(live) > 0), "live prefix must ascend"
+        assert np.all(live <= cur[b]), "no acausal blocks"
+
+
+def test_selection_full_budget_keeps_every_valid_block():
+    q, kc, vc, pos0s, lengths = _setup()
+    ids, cnts = _select(q, kc, pos0s, lengths, 8, attn_tiles=8, a_l=8)
+    cur = (np.asarray(pos0s) + q.shape[1] - 1) // 8
+    np.testing.assert_array_equal(np.asarray(cnts), cur + 1)
+    for b in range(ids.shape[0]):
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(ids)[b, :cnts[b]]), np.arange(cur[b] + 1))
+
+
+# ------------------------------------- oracles and kernel cross-checks
+
+
+def test_full_budget_masked_path_bit_identical_to_dense():
+    """The serving contract: at a_l == attn_tiles the membership mask
+    keeps every causally-valid key, so the masked XLA path is BITWISE
+    equal to dense attention — not merely allclose."""
+    q, kc, vc, pos0s, lengths = _setup(seed=1)
+    ids, cnts = _select(q, kc, pos0s, lengths, 8, attn_tiles=8, a_l=8)
+    got = R.block_sparse_attention_masked(q, kc, vc, ids, cnts, pos0s,
+                                          lengths, blk=8)
+    want = R.dense_oracle(q, kc, vc, pos0s, lengths)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_interpret_bitwise_matches_twin():
+    """Interpret kernel == online-softmax twin BITWISE, with per-row
+    DISTINCT block ids and counts (the causal ramp guarantees rows
+    differ; we also scatter rows across a shared slab pool)."""
+    q, kc, vc, pos0s, lengths = _setup(seed=2)
+    B, N = q.shape[:2]
+    S, Kv, dh = kc.shape[1:]
+    blk, nc = N, S // N
+    for a_l in (3, 8):
+        ids, cnts = _select(q, kc, pos0s, lengths, blk, 8, a_l)
+        assert len({tuple(np.asarray(ids)[b, :int(cnts[b])])
+                    for b in range(B)}) > 1          # rows truly differ
+        kb = kc.reshape(B * nc, blk, Kv, dh)
+        vb = vc.reshape(B * nc, blk, Kv, dh)
+        pool_ids = ids + nc * jnp.arange(B, dtype=jnp.int32)[:, None]
+        blk_pos = ids * blk
+        kern = K.block_sparse_prefill(q, kb, vb, pool_ids, blk_pos, cnts,
+                                      pos0s, lengths, interpret=True)
+        twin = R.block_sparse_attention_twin(q, kb, vb, pool_ids,
+                                             blk_pos, cnts, pos0s,
+                                             lengths)
+        np.testing.assert_array_equal(np.asarray(kern), np.asarray(twin))
+
+
+def test_kernel_dispatch_full_budget_allclose_dense_oracle():
+    q, kc, vc, pos0s, lengths = _setup(seed=3)
+    ids, cnts = _select(q, kc, pos0s, lengths, 8, attn_tiles=8, a_l=8)
+    kern = BSA.block_sparse_prefill_op(q, kc, vc, ids, cnts, pos0s,
+                                       lengths, blk=8, use_kernel=True)
+    want = R.dense_oracle(q, kc, vc, pos0s, lengths)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_dispatch_sparse_budget_matches_masked_path():
+    q, kc, vc, pos0s, lengths = _setup(seed=4)
+    ids, cnts = _select(q, kc, pos0s, lengths, 8, attn_tiles=8, a_l=4)
+    kern = BSA.block_sparse_prefill_op(q, kc, vc, ids, cnts, pos0s,
+                                       lengths, blk=8, use_kernel=True)
+    xla = BSA.block_sparse_prefill_op(q, kc, vc, ids, cnts, pos0s,
+                                      lengths, blk=8, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(xla),
+                               rtol=1e-5, atol=1e-5)
+    # the budget genuinely bites vs dense
+    dense = R.dense_oracle(q, kc, vc, pos0s, lengths)
+    assert np.abs(np.asarray(xla) - np.asarray(dense)).max() > 1e-4
+
+
+def test_sliding_window_selection_and_attention():
+    q, kc, vc, pos0s, lengths = _setup(seed=5)
+    win = 12
+    ids, cnts = _select(q, kc, pos0s, lengths, 8, 8, 8, window=win)
+    kern = BSA.block_sparse_prefill_op(q, kc, vc, ids, cnts, pos0s,
+                                       lengths, blk=8, window=win,
+                                       use_kernel=True)
+    want = R.dense_oracle(q, kc, vc, pos0s, lengths, window=win)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    full = R.dense_oracle(q, kc, vc, pos0s, lengths)
+    assert not np.allclose(np.asarray(want), np.asarray(full))
+
+
+# --------------------------------------------------------- paged twin
+
+
+def test_paged_dispatch_matches_slot_dispatch():
+    """The page-table-aware kernel (slab granularity = page size) and
+    the paged XLA gather branch both match the slot-layout answer on a
+    shuffled page pool holding the same KV."""
+    q, kc, vc, pos0s, lengths = _setup(seed=6)
+    B, S, Kv, dh = kc.shape
+    psz, blk = 4, 8
+    mp = S // psz
+    rng = np.random.default_rng(6)
+    perm = rng.permutation(np.arange(1, 1 + B * mp))
+    table = np.zeros((B, mp), np.int32)
+    k_pool = np.zeros((1 + B * mp, psz, Kv, dh), np.float32)
+    v_pool = np.zeros((1 + B * mp, psz, Kv, dh), np.float32)
+    for b in range(B):
+        for j in range(mp):
+            pid = int(perm[b * mp + j])
+            table[b, j] = pid
+            k_pool[pid] = np.asarray(kc[b, j * psz:(j + 1) * psz])
+            v_pool[pid] = np.asarray(vc[b, j * psz:(j + 1) * psz])
+    k_pool, v_pool = jnp.asarray(k_pool), jnp.asarray(v_pool)
+    table = jnp.asarray(table)
+    for a_l in (4, 8):
+        ids, cnts = _select(q, kc, pos0s, lengths, blk, 8, a_l)
+        slot = BSA.block_sparse_prefill_op(q, kc, vc, ids, cnts, pos0s,
+                                           lengths, blk=blk,
+                                           use_kernel=False)
+        paged_x = BSA.block_sparse_prefill_paged_op(
+            q, k_pool, v_pool, table, ids, cnts, pos0s, lengths,
+            blk=blk, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(paged_x),
+                                      np.asarray(slot))
+        paged_k = BSA.block_sparse_prefill_paged_op(
+            q, k_pool, v_pool, table, ids, cnts, pos0s, lengths,
+            blk=blk, use_kernel=True)
+        np.testing.assert_allclose(np.asarray(paged_k),
+                                   np.asarray(slot), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_pooled_block_keys_paged_matches_slot():
+    q, kc, vc, pos0s, lengths = _setup(seed=7)
+    B, S, Kv, dh = kc.shape
+    psz = 4
+    mp = S // psz
+    table = np.arange(1, 1 + B * mp).reshape(B, mp).astype(np.int32)
+    pool = np.zeros((1 + B * mp, psz, Kv, dh), np.float32)
+    pool[1:] = np.asarray(kc).reshape(B * mp, psz, Kv, dh)
+    want = BSA.pooled_block_keys(kc, 8)
+    got = BSA.pooled_block_keys_paged(jnp.asarray(pool),
+                                      jnp.asarray(table), 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+# -------------------------------- attention-op level (serving wiring)
+
+
+def _attn_params(rng, D, H, Kv, dh):
+    return {
+        "wq": jnp.asarray(rng.standard_normal((D, H, dh)) * 0.1,
+                          jnp.float32),
+        "wk": jnp.asarray(rng.standard_normal((D, Kv, dh)) * 0.1,
+                          jnp.float32),
+        "wv": jnp.asarray(rng.standard_normal((D, Kv, dh)) * 0.1,
+                          jnp.float32),
+        "wo": jnp.asarray(rng.standard_normal((H, dh, D)) * 0.1,
+                          jnp.float32),
+    }
+
+
+def test_attend_block_rows_full_budget_bit_identical_to_dense():
+    """attend_block_rows with a FULL attention budget must return the
+    bit-exact dense answer on the XLA path — the zero-regression
+    contract the dense effort tier and tier-1 parity rest on."""
+    rng = np.random.default_rng(8)
+    B, N, D, H, Kv, dh, S = 3, 8, 16, 4, 2, 8, 40
+    params = _attn_params(rng, D, H, Kv, dh)
+    x = jnp.asarray(rng.standard_normal((B, N, D)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)), jnp.float32)
+    pos0s = jnp.asarray([0, 16, 32], jnp.int32)
+    lengths = jnp.asarray([8, 24, 40], jnp.int32)
+    dense = A.attend_block_rows(params, x, kc, vc, pos0s,
+                                lengths=lengths)
+    full = A.attend_block_rows(params, x, kc, vc, pos0s,
+                               lengths=lengths,
+                               attn_sel=(8, 8, jnp.int32(8)))
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(dense))
+    # a sparse budget gives a different (but finite) answer
+    sparse = A.attend_block_rows(params, x, kc, vc, pos0s,
+                                 lengths=lengths,
+                                 attn_sel=(4, 8, jnp.int32(4)))
+    assert np.all(np.isfinite(np.asarray(sparse)))
+    assert not np.array_equal(np.asarray(sparse), np.asarray(dense))
+    # attend_block_cached delegates to the same path (broadcast pos0)
+    cached = A.attend_block_cached(params, x[:1], kc[:1], vc[:1], 32,
+                                   lengths=lengths[2:],
+                                   attn_sel=(8, 8, jnp.int32(8)))
+    plain = A.attend_block_cached(params, x[:1], kc[:1], vc[:1], 32,
+                                  lengths=lengths[2:])
+    np.testing.assert_array_equal(np.asarray(cached), np.asarray(plain))
+
+
+def test_attend_block_rows_paged_full_budget_matches_slot():
+    rng = np.random.default_rng(9)
+    B, N, D, H, Kv, dh, S = 2, 8, 16, 4, 2, 8, 32
+    psz, mp = 4, 8
+    params = _attn_params(rng, D, H, Kv, dh)
+    x = jnp.asarray(rng.standard_normal((B, N, D)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, S, Kv, dh)), jnp.float32)
+    table = np.arange(1, 1 + B * mp).reshape(B, mp).astype(np.int32)
+    k_pool = np.zeros((1 + B * mp, psz, Kv, dh), np.float32)
+    v_pool = np.zeros((1 + B * mp, psz, Kv, dh), np.float32)
+    k_pool[1:] = np.asarray(kc).reshape(B * mp, psz, Kv, dh)
+    v_pool[1:] = np.asarray(vc).reshape(B * mp, psz, Kv, dh)
+    pos0s = jnp.asarray([8, 24], jnp.int32)
+    lengths = jnp.asarray([16, 32], jnp.int32)
+    for sel in ((8, 8, jnp.int32(8)), (4, 8, jnp.int32(4))):
+        slot = A.attend_block_rows(params, x, kc, vc, pos0s,
+                                   lengths=lengths, attn_sel=sel)
+        paged = A.attend_block_rows_paged(
+            params, x, jnp.asarray(k_pool), jnp.asarray(v_pool),
+            jnp.asarray(table), pos0s, lengths=lengths, attn_sel=sel)
+        np.testing.assert_array_equal(np.asarray(paged),
+                                      np.asarray(slot))
+
+
+def test_attn_sel_width_static_bounds():
+    assert attn_sel_width((8, 8, None), 5) == 5       # full budget
+    assert attn_sel_width((4, 8, None), 16) == 8      # half budget
+    assert attn_sel_width((1, 16, None), 4) == 2      # floor: sink+diag
+    assert attn_sel_width((16, 16, None), 1) == 1     # single block
+
+
+# ------------------------------------ satellite 6: per-row flash rows
+
+
+def test_flash_rows_kernel_matches_fallback_and_oracle():
+    """flash_attention_rows (the dense TPU routing behind
+    attend_block_rows) interpret-mode vs the XLA fallback vs the dense
+    oracle, per-row offsets and ragged lengths."""
+    q, kc, vc, pos0s, lengths = _setup(seed=10)
+    kern = FA.mha_flash_rows(q, kc, vc, pos0s, lengths,
+                             use_kernel=True, interpret=True)
+    xla = FA.mha_flash_rows(q, kc, vc, pos0s, lengths, use_kernel=False)
+    want = R.dense_oracle(q, kc, vc, pos0s, lengths)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(xla),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_rows_window_and_ragged_padding():
+    """S not a block_k multiple exercises the pad-and-mask path; the
+    sliding window must agree with the oracle."""
+    q, kc, vc, pos0s, lengths = _setup(seed=11, S=36,
+                                       lengths=(8, 24, 36))
+    for win in (None, 12):
+        kern = FA.mha_flash_rows(q, kc, vc, pos0s, lengths, window=win,
+                                 use_kernel=True, interpret=True)
+        want = R.dense_oracle(q, kc, vc, pos0s, lengths, window=win)
+        np.testing.assert_allclose(np.asarray(kern), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)

@@ -140,6 +140,38 @@ def test_ops_dispatch_batched():
                                rtol=1e-6, atol=1e-6)
 
 
+def test_k_valid_dead_slot_ids_never_read():
+    """DMA-skip contract: dead selection slots (k >= k_valid) are
+    index-map-clamped to the last LIVE tile, so their ids are never
+    dereferenced — two selections differing ONLY in dead-slot ids must
+    produce bit-identical interpret output (single and batched)."""
+    x, wg, wu, wd = make_inputs(128, 128, 512, jnp.float32)
+    ids_a = jnp.asarray([0, 2, 1, 3], jnp.int32)
+    ids_b = jnp.asarray([0, 2, 3, 1], jnp.int32)      # dead tail differs
+    y_a = sparse_ffn(x, wg, wu, wd, ids_a, k_valid=jnp.int32(2),
+                     tile=128, interpret=True)
+    y_b = sparse_ffn(x, wg, wu, wd, ids_b, k_valid=jnp.int32(2),
+                     tile=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_a), np.asarray(y_b))
+    # and the clamped index map changes nothing vs the live prefix alone
+    y_live = sparse_ffn(x, wg, wu, wd, ids_a[:2], tile=128,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(y_a), np.asarray(y_live),
+                               rtol=1e-6, atol=1e-6)
+
+    xb = jnp.stack([x, x * 0.5, x * 2.0])
+    idsb_a = jnp.asarray([[0, 1, 2, 3], [1, 2, 0, 3], [2, 3, 0, 1]],
+                         jnp.int32)
+    idsb_b = jnp.asarray([[0, 3, 1, 2], [1, 2, 3, 0], [2, 3, 0, 1]],
+                         jnp.int32)                   # same live prefixes
+    counts = jnp.asarray([1, 2, 4], jnp.int32)
+    yb_a = sparse_ffn_batched(xb, wg, wu, wd, idsb_a, k_valid=counts,
+                              tile=128, interpret=True)
+    yb_b = sparse_ffn_batched(xb, wg, wu, wd, idsb_b, k_valid=counts,
+                              tile=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(yb_a), np.asarray(yb_b))
+
+
 def test_kernel_flop_scaling():
     """The kernel's HLO cost must scale with K (the point of the paper)."""
     x, wg, wu, wd = make_inputs(128, 256, 2048, jnp.float32)

@@ -384,6 +384,114 @@ def test_unknown_effort_rejected(dense_setup):
                              effort="turbo"))
 
 
+# ------------------------------------- dual-budget attention (tentpole)
+
+
+def test_dual_budget_plan_construction():
+    """with_attention attaches the attention-block budget: counts in
+    [1, attn_tiles], fields survive hashing/equality, the dense tier
+    no-ops, and with_tiles (MoE shared-expert re-derivation) carries
+    the attention budget across the FFN width change."""
+    cfg = CFG.with_ff(attn_sparsity=0.5, attn_tiles=8)
+    bal = FF.resolve_plan(cfg, effort="balanced")
+    tur = FF.resolve_plan(cfg, effort="turbo")
+    dense = FF.resolve_plan(cfg, effort="dense")
+    assert bal.has_attn and tur.has_attn
+    assert not dense.has_attn               # attn_keep 1.0 -> no-op
+    assert len(bal.attn_counts) == cfg.n_layers
+    assert all(1 <= c <= 8 for c in bal.attn_counts)
+    assert bal.attn_k_max == 4 and tur.attn_k_max == 2
+    assert tur.attn_flop_frac() < bal.attn_flop_frac() < 1.0
+    # attention budget joins the plan identity (jit static key)
+    bal2 = FF.resolve_plan(cfg, effort="balanced")
+    assert bal == bal2 and hash(bal) == hash(bal2)
+    assert bal != FF.resolve_plan(CFG.with_ff(attn_sparsity=0.0),
+                                  effort="balanced")
+    # width re-derivation keeps the attention budget untouched
+    small = bal.with_tiles(4)
+    assert small.attn_counts == bal.attn_counts
+    assert small.attn_tiles == bal.attn_tiles
+    np.testing.assert_allclose(np.asarray(bal.attn_keep_fracs), 0.5)
+    np.testing.assert_array_equal(np.asarray(bal.attn_counts_array()),
+                                  np.asarray(bal.attn_counts))
+
+
+def test_dual_budget_layerwise_importance():
+    importance = np.array([1.0, 1.0, 1.0, 5.0])
+    cfg = CFG.with_ff(attn_sparsity=0.5, attn_tiles=8)
+    plan = FF.resolve_plan(cfg, importance=importance)
+    assert plan.has_attn
+    assert plan.attn_counts[3] > plan.attn_counts[0]
+    assert sum(plan.attn_counts) == round(0.5 * cfg.n_layers * 8)
+
+
+def test_attn_budget_full_keep_bit_identical_prefill(dense_setup):
+    """A hand-built FULL attention budget (every virtual slot kept) on
+    the blockwise prefill path must be BIT-identical to the plan
+    without one — the masked XLA path keeps every causally-valid key."""
+    import dataclasses
+    cfg, params = dense_setup
+    model = get_model(cfg)
+    base = FF.resolve_plan(cfg)
+    full = dataclasses.replace(base, attn_counts=(8,) * cfg.n_layers,
+                               attn_tiles=8, attn_keep=1.0)
+    rng = np.random.default_rng(11)
+    T = 4 * cfg.ff.block_size
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, T)), jnp.int32)
+    cache = model.init_cache(cfg, 2, T)
+    _, logits_base = model.prefill(params, cfg, {"tokens": tokens},
+                                   cache, plan=base)
+    _, logits_full = model.prefill(params, cfg, {"tokens": tokens},
+                                   model.init_cache(cfg, 2, T),
+                                   plan=full)
+    np.testing.assert_array_equal(np.asarray(logits_full),
+                                  np.asarray(logits_base))
+    # half budget changes the answer (the budget actually bites)
+    half = dataclasses.replace(base, attn_counts=(4,) * cfg.n_layers,
+                               attn_tiles=8, attn_keep=0.5)
+    _, logits_half = model.prefill(params, cfg, {"tokens": tokens},
+                                   model.init_cache(cfg, 2, T),
+                                   plan=half)
+    assert not np.array_equal(np.asarray(logits_half),
+                              np.asarray(logits_base))
+
+
+@pytest.mark.parametrize("kv_layout", ["slot", "paged"])
+def test_long_context_mixed_tier_greedy_equivalence(dense_setup,
+                                                    kv_layout):
+    """Long-context (>= 4K tokens, reduced config) batch-composition
+    invariance under DUAL budgets: a mixed balanced/turbo stream with
+    block-sparse attention on emits, per request, exactly what a
+    pure-tier engine emits — and compile counts stay flat across the
+    mixed stream (zero recompilation with attention budgets riding the
+    scan)."""
+    cfg, params = dense_setup
+    cfg = cfg.with_(kv_layout=kv_layout).with_ff(attn_sparsity=0.5,
+                                                 attn_tiles=8)
+    bal = FF.resolve_plan(cfg, effort="balanced")
+    tur = FF.resolve_plan(cfg, effort="turbo")
+    assert bal.has_attn and tur.has_attn
+    N = cfg.ff.block_size
+    prompts = make_prompts(cfg, [4096 + N, 4096], seed=13)
+    cache_len = -(-max(len(p) for p in prompts) // N) * N + 8
+    mixed = Engine(cfg, params, plans=(bal, tur), prefill_batch=2)
+    sched = mixed.scheduler(n_slots=2, cache_len=cache_len)
+    counts0 = sched.warmup()
+    sched.submit(Request(rid=0, prompt=prompts[0], max_new=4))
+    sched.submit(Request(rid=1, prompt=prompts[1], max_new=4,
+                         effort="turbo"))
+    outs = sched.run()
+    if None not in counts0.values():
+        assert sched.runtime.compile_counts() == counts0
+
+    pure_bal = Engine(cfg, params, plans=(bal,)).generate(
+        [prompts[0]], max_new=4)
+    pure_tur = Engine(cfg, params, plans=(tur,)).generate(
+        [prompts[1]], max_new=4)
+    assert outs[0].tokens == pure_bal.tokens[0].tolist()
+    assert outs[1].tokens == pure_tur.tokens[0].tolist()
+
+
 # ----------------------------------------------------- trace effort
 
 
