@@ -1,5 +1,6 @@
 """Continuous batching vs static batching under staggered arrivals,
-and batched vs single-block prefill ticks.
+batched vs single-block prefill ticks, and overload resilience
+(deadline goodput with and without graceful effort degradation).
 
 The static engine's pathologies under a request stream are structural:
 
@@ -20,13 +21,25 @@ Emits ``name,value,derived`` CSV rows (harness contract) and writes
 the machine-readable ``results/BENCH_prefill.json`` sections
 ``serving`` (tok/s, TTFT p50/p99, continuous-vs-static and
 batched-vs-single-prefill ratios, measured FastForward-vs-dense
-speedup) and ``kv_memory`` (slot vs paged KV pool at equal device
+speedup), ``kv_memory`` (slot vs paged KV pool at equal device
 bytes: peak concurrent requests, peak pages, stranded tokens at the
-occupancy peak, preemptions) so the perf trajectory is tracked
-PR-over-PR.
+occupancy peak, preemptions) and ``overload`` (goodput = fraction of
+requests finishing ok within deadline at 1x/2x/4x the sustainable
+arrival rate, degrade-on vs degrade-off) so the perf trajectory is
+tracked PR-over-PR.
+
+The overload section runs on a SIMULATED clock: scheduling decisions
+are real (the actual scheduler, admission controller, and jitted model
+calls run), but time advances by an analytical per-tick cost model
+priced from each plan's FFN FLOP fraction — like the repo's
+`analytical` sections, this isolates the policy effect (shedding FLOPs
+instead of requests) from CPU wall-clock noise, so the degrade-on vs
+degrade-off goodput comparison is deterministic and meaningful on a
+shared CI machine.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -34,9 +47,11 @@ import jax
 
 from benchmarks.common import write_bench_json
 from repro.configs import get_config
+from repro.core.fastforward import resolve_plan
 from repro.models.registry import get_model
 from repro.nn.param import init_params
-from repro.serving import (ContinuousBatchingScheduler, Request,
+from repro.serving import (AdmissionConfig, AdmissionController,
+                           ContinuousBatchingScheduler, Request,
                            StaticEngine, drive_stream)
 from repro.serving.runtime import make_runtime
 
@@ -254,6 +269,125 @@ def _run_kv_memory(cfg, params):
     return section
 
 
+# --------------------------------------------- overload (degrade A/B)
+
+OV_REQUESTS = 40
+OV_SLOTS = 4
+OV_PREFILL_BATCH = 4
+OV_PROMPT_BLOCKS = 4          # 4 blocks x 32 tok (reduced block size)
+OV_MAX_NEW = 8
+OV_DEADLINE_MS = 1200.0
+OV_BASE_GAP_S = 0.05          # 1x offered rate: one request / 50 ms
+# cost model: sim seconds a tick costs, priced from the plan mix of the
+# work it actually did. ALPHA is the non-FFN fraction of block time
+# (attention, norms, dispatch) that sparsity cannot remove.
+OV_TICK_S = 0.002
+OV_BLOCK_S = 0.012
+OV_TOKEN_S = 0.002
+OV_ALPHA = 0.3
+
+
+def _run_overload(cfg, params):
+    """Deadline goodput at 1x/2x/4x offered load, degrade-on vs
+    degrade-off, on a simulated clock (see module docstring). The
+    scheduler, admission controller, deadline/shed machinery, and
+    jitted model calls are all real; only elapsed time is modeled, with
+    each plan's block/token cost scaled by ALPHA + (1-ALPHA) *
+    flop_frac — degrading to a sparser tier makes ticks cheaper exactly
+    as the analytical speedup sections say it should. Acceptance: at
+    >= 2x overload, degrade-on achieves STRICTLY higher goodput."""
+    plans = tuple(
+        dataclasses.replace(resolve_plan(cfg, effort=e), name=e)
+        for e in ("dense", "balanced", "turbo"))
+    runtime = make_runtime(cfg, params, plans=plans)
+    fracs = np.array([p.flop_frac() for p in plans])
+    eff = OV_ALPHA + (1 - OV_ALPHA) * fracs
+    N = runtime.block_size
+    prompt_len = OV_PROMPT_BLOCKS * N
+    cache_len = prompt_len + OV_MAX_NEW
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, prompt_len).tolist()
+               for _ in range(OV_REQUESTS)]
+
+    def one_run(rate_x, degrade):
+        clk = [0.0]
+        admission = AdmissionController(plans, AdmissionConfig(
+            queue_high=4, queue_low=1, dwell_ticks=2,
+            degrade=degrade))
+        sched = ContinuousBatchingScheduler(
+            runtime, n_slots=OV_SLOTS, cache_len=cache_len,
+            prefill_batch=OV_PREFILL_BATCH, admission=admission,
+            clock=lambda: clk[0],
+            sleep=lambda dt: clk.__setitem__(0, clk[0] + dt))
+        sched.warmup()
+        prev_pb = sched.plan_prefill_blocks.copy()
+        prev_dt = sched.plan_decode_tokens.copy()
+
+        def advance(s):
+            # price the tick by the work it did, per plan
+            dpb = s.plan_prefill_blocks - prev_pb
+            ddt = s.plan_decode_tokens - prev_dt
+            prev_pb[:] = s.plan_prefill_blocks
+            prev_dt[:] = s.plan_decode_tokens
+            clk[0] += (OV_TICK_S + float((dpb * eff).sum()) * OV_BLOCK_S
+                       + float((ddt * eff).sum()) * OV_TOKEN_S)
+
+        gap = OV_BASE_GAP_S / rate_x
+        requests = [Request(rid=i, prompt=prompts[i], max_new=OV_MAX_NEW,
+                            arrival_time=i * gap,
+                            deadline_ms=OV_DEADLINE_MS)
+                    for i in range(OV_REQUESTS)]
+        sim_s = drive_stream(sched, requests, after_tick=advance)
+        outs = sched.finished
+        assert len(outs) == OV_REQUESTS
+        met = sum(o.status == "ok"
+                  and o.finish_seconds <= OV_DEADLINE_MS / 1e3
+                  for o in outs.values())
+        return {
+            "goodput": round(met / OV_REQUESTS, 3),
+            "n_ok": sum(o.status == "ok" for o in outs.values()),
+            "n_shed": sched.n_shed,
+            "n_timed_out": sched.n_timed_out,
+            "n_degraded": sched.n_degraded,
+            "peak_degradation_level": admission.peak_level,
+            "sim_seconds": round(sim_s, 3),
+        }
+
+    runs = {}
+    for rate_x in (1, 2, 4):
+        runs[f"{rate_x}x"] = {
+            "degrade_on": one_run(rate_x, degrade=True),
+            "degrade_off": one_run(rate_x, degrade=False),
+        }
+    strictly_better = all(
+        runs[k]["degrade_on"]["goodput"] > runs[k]["degrade_off"]["goodput"]
+        for k in ("2x", "4x"))
+    section = {
+        "config": {
+            "requests": OV_REQUESTS, "slots": OV_SLOTS,
+            "prefill_batch": OV_PREFILL_BATCH,
+            "prompt_len": prompt_len, "max_new": OV_MAX_NEW,
+            "deadline_ms": OV_DEADLINE_MS,
+            "base_rate_req_s": round(1 / OV_BASE_GAP_S, 1),
+            "cost_model": {"tick_s": OV_TICK_S, "block_s": OV_BLOCK_S,
+                           "token_s": OV_TOKEN_S, "non_ffn_alpha": OV_ALPHA,
+                           "plan_flop_fracs": [round(float(f), 3)
+                                               for f in fracs]},
+        },
+        "runs": runs,
+        # acceptance: under overload, shedding FLOPs (graceful
+        # degradation to sparser pre-compiled tiers) must beat shedding
+        # requests/deadlines outright
+        "degrade_strictly_better_at_overload": bool(strictly_better),
+        "note": ("simulated-clock cost model (see module docstring): "
+                 "real scheduler + admission decisions, analytical "
+                 "per-plan tick pricing — deterministic, so degrade-on "
+                 "vs degrade-off is a policy comparison, not CPU noise"),
+    }
+    write_bench_json("overload", section)
+    return section
+
+
 def run(csv=True, requests=REQUESTS):
     cfg = get_config("tinyllama-1.1b", reduced=True)
     params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
@@ -314,6 +448,7 @@ def run(csv=True, requests=REQUESTS):
     })
 
     kv = _run_kv_memory(cfg, params)
+    ov = _run_overload(cfg, params)
 
     rows = [
         ("static_tokens_per_s", f"{static['tokens_per_s']:.1f}",
@@ -358,6 +493,23 @@ def run(csv=True, requests=REQUESTS):
          f"{kv['paged']['stranded_tokens_at_peak']} tok, "
          f"{kv['paged']['preemptions']} preemptions "
          f"(target: > slot concurrency)"),
+        ("overload_goodput_2x_degrade_on",
+         f"{ov['runs']['2x']['degrade_on']['goodput']:.3f}",
+         f"deadline-met fraction at 2x offered rate, "
+         f"{ov['runs']['2x']['degrade_on']['n_degraded']} degraded, "
+         f"{ov['runs']['2x']['degrade_on']['n_timed_out']} timed out "
+         f"(simulated clock)"),
+        ("overload_goodput_2x_degrade_off",
+         f"{ov['runs']['2x']['degrade_off']['goodput']:.3f}",
+         f"{ov['runs']['2x']['degrade_off']['n_timed_out']} timed out, "
+         f"{ov['runs']['2x']['degrade_off']['n_shed']} shed"),
+        ("overload_goodput_4x_degrade_on",
+         f"{ov['runs']['4x']['degrade_on']['goodput']:.3f}", ""),
+        ("overload_goodput_4x_degrade_off",
+         f"{ov['runs']['4x']['degrade_off']['goodput']:.3f}", ""),
+        ("overload_degrade_strictly_better",
+         f"{ov['degrade_strictly_better_at_overload']}",
+         "acceptance: degrade-on goodput strictly higher at >= 2x"),
     ]
     if csv:
         for r in rows:

@@ -44,6 +44,19 @@ and trace records may carry their own `effort` field:
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --stream --requests 16 --effort balanced,turbo
+
+Overload resilience (--deadline-ms / --degrade / --chaos-seed):
+requests carry deadlines (expiry frees resources mid-flight with
+status="timed_out"; provably-unmeetable deadlines are shed at submit),
+--degrade routes new admissions to sparser pre-compiled tiers while
+load watermarks trip, and --chaos-seed runs the whole stream under
+deterministic fault injection (forced preemptions, synthetic pool
+pressure, slow ticks — serving/faults.py). A robustness line reports
+per-status counts, goodput, and degradation/fault stats:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --stream --requests 16 --rate 200 --deadline-ms 60000 \
+      --degrade --chaos-seed 0
 """
 from __future__ import annotations
 
@@ -60,8 +73,9 @@ from repro.core import scheduler as SCHED
 from repro.core.fastforward import EFFORT_TIERS, resolve_plan
 from repro.models.registry import get_model
 from repro.nn.param import init_params
-from repro.serving import (ContinuousBatchingScheduler, Request,
-                           StaticEngine, drive_stream, load_trace)
+from repro.serving import (AdmissionController, ContinuousBatchingScheduler,
+                           FaultInjector, Request, StaticEngine,
+                           drive_stream, load_trace)
 from repro.serving.runtime import make_runtime
 from repro.serving.trace import trace_stats
 from repro.training.checkpoint import load_checkpoint
@@ -150,7 +164,8 @@ def serve_stream(cfg, params, args):
         # records without their own `effort` round-robin the CLI tiers
         requests = load_trace(args.trace, cfg.vocab, seed=args.seed,
                               eos_id=args.eos_id,
-                              temperature=args.temperature)
+                              temperature=args.temperature,
+                              deadline_ms=args.deadline_ms)
         for i, r in enumerate(requests):
             if r.effort is None and efforts:
                 r.effort = efforts[i % len(efforts)]
@@ -168,7 +183,7 @@ def serve_stream(cfg, params, args):
         requests = [
             Request(rid=i, prompt=prompts[i], max_new=int(max_news[i]),
                     temperature=args.temperature, arrival_time=arrivals[i],
-                    eos_id=args.eos_id,
+                    eos_id=args.eos_id, deadline_ms=args.deadline_ms,
                     effort=efforts[i % len(efforts)] if efforts else None)
             for i in range(args.requests)]
         max_blocks = -(-args.prompt_len // N)
@@ -197,6 +212,10 @@ def serve_stream(cfg, params, args):
     if cfg.ff.enabled:
         names = ["balanced"] + [e for e in dict.fromkeys(
             r.effort for r in requests if r.effort) if e != "balanced"]
+        if args.degrade:
+            # degradation needs ladder room: register every tier (all
+            # pre-compiled by warmup, so escalation costs zero compiles)
+            names += [e for e in EFFORT_TIERS if e not in names]
         # register under the bare tier names: calibrated plans resolve
         # as "<tier>-layerwise", but requests address them by tier
         plans = tuple(
@@ -205,10 +224,14 @@ def serve_stream(cfg, params, args):
             for e in names)
     runtime = make_runtime(cfg, params, plans=plans)
 
+    admission = (AdmissionController(plans or ())
+                 if args.degrade else None)
+    faults = (FaultInjector(seed=args.chaos_seed)
+              if args.chaos_seed is not None else None)
     sched = ContinuousBatchingScheduler(
         runtime, n_slots=args.slots, cache_len=cache_len, seed=args.seed,
         prefill_batch=args.prefill_batch, page_size=args.page_size,
-        n_pages=args.pool_pages)
+        n_pages=args.pool_pages, admission=admission, faults=faults)
 
     # warmup compiles every entry point through the scheduler's own pool
     counts0 = sched.warmup()
@@ -223,15 +246,37 @@ def serve_stream(cfg, params, args):
             f"jit recompilation during serving: {counts0} -> {counts1}")
 
     outs = sched.finished
-    ttfts = np.array([o.ttft_seconds for o in outs.values()])
+    # latency stats over requests that produced a first token only —
+    # shed/cancelled/timed-out-in-prefill outputs carry ttft None
+    ttfts = np.array([o.ttft_seconds for o in outs.values()
+                      if o.ttft_seconds is not None])
     gen = sum(len(o.tokens) for o in outs.values())
     offered = tstats["offered_rate_req_s"] if args.trace else args.rate
     print(f"served {len(outs)} requests in {wall:.2f}s wall "
           f"({offered:.1f} req/s offered)")
-    print(f"TTFT p50 {np.percentile(ttfts, 50)*1e3:8.1f} ms | "
-          f"p99 {np.percentile(ttfts, 99)*1e3:8.1f} ms")
+    if len(ttfts):
+        print(f"TTFT p50 {np.percentile(ttfts, 50)*1e3:8.1f} ms | "
+              f"p99 {np.percentile(ttfts, 99)*1e3:8.1f} ms "
+              f"({len(ttfts)} of {len(outs)} produced a first token)")
     print(f"throughput {gen / wall:8.1f} generated tok/s "
           f"({gen} tokens)")
+    # robustness line: terminal-status mix, goodput (deadline-met ok
+    # fraction), degradation + fault stats
+    n_ok = sum(o.status == "ok" for o in outs.values())
+    deadlines = {r.rid: r.deadline_ms for r in requests}
+    met = sum(o.status == "ok"
+              and (deadlines.get(o.rid) is None
+                   or o.finish_seconds <= deadlines[o.rid] / 1e3)
+              for o in outs.values())
+    print(f"robustness: ok {n_ok} | shed {sched.n_shed} | timed_out "
+          f"{sched.n_timed_out} | cancelled {sched.n_cancelled} | "
+          f"degraded {sched.n_degraded} | preemptions "
+          f"{sched.n_preemptions} | goodput {met}/{len(outs)} "
+          f"({met / max(len(outs), 1):.0%} finished ok within deadline)")
+    if admission is not None:
+        print(f"admission: {admission.stats()}")
+    if faults is not None:
+        print(f"faults: {faults.stats()}")
     reuse = max(0, sched.pool.total_acquires - args.slots)
     print(f"slots: {args.slots} | max in use {sched.pool.max_in_use} | "
           f"acquires {sched.pool.total_acquires} (slot reuse x{reuse})")
@@ -332,6 +377,22 @@ def main():
                         "budget (fraction of KV blocks dropped at "
                         "'balanced'); plans become dual-budget and "
                         "effort tiers scale both")
+    p.add_argument("--deadline-ms", type=float, default=None,
+                   help="stream mode: end-to-end deadline per request "
+                        "(trace records carrying their own deadline_ms "
+                        "keep it); expiry frees resources mid-flight "
+                        "with status=timed_out, provably-unmeetable "
+                        "deadlines are shed at submit")
+    p.add_argument("--degrade", action="store_true",
+                   help="stream mode: hysteretic graceful degradation — "
+                        "route new admissions to sparser effort tiers "
+                        "while queue/free-space watermarks are tripped "
+                        "(AdmissionController; all tiers pre-compiled)")
+    p.add_argument("--chaos-seed", type=int, default=None,
+                   help="stream mode: run under deterministic fault "
+                        "injection with this seed (forced preemptions, "
+                        "synthetic pool pressure, slow ticks — "
+                        "serving/faults.py)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
     if args.max_new < 1:
@@ -350,6 +411,9 @@ def main():
         p.error("--trace requires --stream")
     if args.calibrate and not args.stream:
         p.error("--calibrate requires --stream")
+    if ((args.deadline_ms is not None or args.degrade
+         or args.chaos_seed is not None) and not args.stream):
+        p.error("--deadline-ms/--degrade/--chaos-seed require --stream")
     params = build_params(cfg, args.checkpoint)
     if args.stream:
         serve_stream(cfg, params, args)

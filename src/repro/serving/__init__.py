@@ -7,7 +7,14 @@ Layering (see ROADMAP.md "Serving architecture"):
                                 admit / chunked prefill / batched decode
                                 (paged: page-gated admission, lazy
                                 per-block allocation, youngest-first
-                                preemption)
+                                preemption; deadline expiry, cancel,
+                                stall watchdog)
+      admission.AdmissionController
+                                deadline-aware shedding + hysteretic
+                                effort-tier degradation under overload
+      faults.FaultInjector      deterministic seed-driven chaos (forced
+                                preemption, synthetic pressure, slow
+                                ticks, random aborts)
       cache_pool.KVSlotPool     slot reuse, free list, per-slot lengths
                                 (cfg.kv_layout="slot", the baseline)
       page_pool.PagedKVPool     block-granular page heap + per-request
@@ -16,18 +23,23 @@ Layering (see ROADMAP.md "Serving architecture"):
                                 model family (dense, MoE) + paged twins
       trace.load_trace          real-traffic jsonl trace replay
 """
+from repro.serving.admission import AdmissionConfig, AdmissionController
 from repro.serving.cache_pool import KVSlotPool
 from repro.serving.engine import Engine, GenerationResult, StaticEngine
+from repro.serving.faults import FaultInjector
 from repro.serving.page_pool import PagedKVPool
 from repro.serving.runtime import (DenseRuntime, ModelRuntime, MoeRuntime,
                                    make_runtime)
 from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
-                                     RequestOutput, drive_stream)
+                                     RequestOutput, SchedulerStallError,
+                                     drive_stream)
 from repro.serving.trace import load_trace
 
 __all__ = [
+    "AdmissionConfig", "AdmissionController",
     "ContinuousBatchingScheduler", "DenseRuntime", "Engine",
-    "GenerationResult", "KVSlotPool", "ModelRuntime", "MoeRuntime",
-    "PagedKVPool", "Request", "RequestOutput", "StaticEngine",
-    "drive_stream", "load_trace", "make_runtime",
+    "FaultInjector", "GenerationResult", "KVSlotPool", "ModelRuntime",
+    "MoeRuntime", "PagedKVPool", "Request", "RequestOutput",
+    "SchedulerStallError", "StaticEngine", "drive_stream", "load_trace",
+    "make_runtime",
 ]

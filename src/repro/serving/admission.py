@@ -1,0 +1,206 @@
+"""Admission control for the continuous-batching scheduler: deadline-
+aware load shedding and hysteretic graceful degradation under overload.
+
+The scheduler today has exactly one pressure valve — youngest-first
+preemption — which trades LATENCY for memory. Under sustained overload
+(arrival rate above service rate) that is the wrong valve: the queue
+grows without bound and every request eventually misses its deadline.
+This module adds the two valves a production server actually turns:
+
+  * SHED — reject a request outright when it provably cannot meet its
+    deadline (its deadline already expired, or its own prefill-block
+    count times an observed LOWER BOUND on per-tick service time
+    already exceeds the time remaining). A shed request costs zero
+    device work and returns `status="shed"` with a reason instead of
+    silently missing its SLO;
+
+  * DEGRADE — route newly admitted requests to SPARSER SparsityPlan
+    effort tiers (dense -> balanced -> turbo) while load watermarks are
+    tripped. This is the paper's FLOP/accuracy knob (Fast Forward
+    Alg. 1) applied as an overload policy: every tier's executables are
+    pre-registered and pre-compiled (PR 5), so degrading costs zero
+    recompilation — the server sheds FLOPs, not requests.
+
+Degradation is HYSTERETIC: it escalates one ladder step when pressure
+crosses the high watermark (queue depth >= queue_high OR free
+resource fraction <= free_low), de-escalates one step when load falls
+below the low watermark (queue depth <= queue_low AND free fraction >=
+free_high), and holds each level for at least `dwell_ticks` ticks so a
+noisy queue doesn't flap tiers tick-to-tick. The gap between the two
+watermark pairs is the hysteresis band.
+
+Ordering contract (see ROADMAP "Overload semantics"): SHED happens at
+submit (zero work wasted), DEGRADE at admission (the request's whole
+lifetime runs one tier), PREEMPT at page pressure (work already done
+is discarded last). A request is never degraded to a tier DENSER than
+it asked for, and explicit effort requests are only ever made sparser.
+
+The controller is pure host-side policy: it never touches device state,
+so it composes with both KV layouts and with the FaultInjector.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Watermarks + hysteresis for the degradation state machine.
+
+    queue_high/queue_low: queue-depth watermarks (requests waiting).
+    free_low/free_high:   free-resource-fraction watermarks (free pages
+                          of the paged heap, free slots of the slot
+                          pool). Pressure trips at `free_low`, recovery
+                          requires `free_high` — the band is the
+                          hysteresis.
+    dwell_ticks:          minimum ticks between level changes (both
+                          directions), so one bursty tick cannot walk
+                          the whole ladder.
+    degrade:              master switch for tier degradation (shedding
+                          of provably-infeasible requests stays on).
+    """
+    queue_high: int = 8
+    queue_low: int = 2
+    free_low: float = 0.25
+    free_high: float = 0.5
+    dwell_ticks: int = 8
+    degrade: bool = True
+
+    def __post_init__(self):
+        if self.queue_low > self.queue_high:
+            raise ValueError(f"queue_low={self.queue_low} must be <= "
+                             f"queue_high={self.queue_high}")
+        if self.free_low > self.free_high:
+            raise ValueError(f"free_low={self.free_low} must be <= "
+                             f"free_high={self.free_high}")
+
+
+class AdmissionController:
+    """Deadline-aware shedding + hysteretic effort degradation.
+
+    Owned by a ContinuousBatchingScheduler (pass `admission=` to its
+    constructor). The scheduler calls:
+
+      observe(queue_depth, free_frac)   once per tick — advances the
+                                        hysteretic degradation level;
+      degraded_plan(plan_idx)           at admission — maps the
+                                        requested plan to the (possibly
+                                        sparser) tier the current level
+                                        dictates;
+      shed_reason(...)                  at submit — non-None when the
+                                        request provably cannot meet a
+                                        deadline and must be shed.
+    """
+
+    def __init__(self, plans: Sequence = (),
+                 config: Optional[AdmissionConfig] = None):
+        self.cfg = config or AdmissionConfig()
+        self.plans = tuple(plans)
+        # ladder: plan indices ordered densest -> sparsest (by
+        # analytical FFN FLOP fraction; ties keep registration order,
+        # so plans[0] — the default tier — wins them). level L routes
+        # new admissions to at least ladder position L.
+        self.ladder: List[int] = sorted(
+            range(len(self.plans)),
+            key=lambda i: (-self.plans[i].flop_frac(), i))
+        self._rank = {p: r for r, p in enumerate(self.ladder)}
+        self.level = 0
+        self._last_change_tick = -self.cfg.dwell_ticks
+        self._tick = 0
+        # stats (serve.py robustness line / benchmarks)
+        self.n_escalations = 0
+        self.n_deescalations = 0
+        self.peak_level = 0
+
+    # ------------------------------------------------------ hysteresis
+
+    @property
+    def max_level(self) -> int:
+        return max(len(self.ladder) - 1, 0)
+
+    def observe(self, queue_depth: int, free_frac: float) -> None:
+        """One tick of the hysteretic state machine. Escalates on the
+        high watermarks, de-escalates on the low ones, holds the level
+        for at least dwell_ticks between changes."""
+        self._tick += 1
+        if not self.cfg.degrade or not self.ladder:
+            return
+        if self._tick - self._last_change_tick < self.cfg.dwell_ticks:
+            return
+        c = self.cfg
+        pressured = queue_depth >= c.queue_high or free_frac <= c.free_low
+        relaxed = queue_depth <= c.queue_low and free_frac >= c.free_high
+        if pressured and self.level < self.max_level:
+            self.level += 1
+            self.peak_level = max(self.peak_level, self.level)
+            self.n_escalations += 1
+            self._last_change_tick = self._tick
+        elif relaxed and self.level > 0:
+            self.level -= 1
+            self.n_deescalations += 1
+            self._last_change_tick = self._tick
+
+    def degraded_plan(self, plan_idx: int) -> int:
+        """Plan index a NEW admission should run under: at least as
+        sparse as both the request's own tier and the current level
+        (never denser than requested — degradation is one-way)."""
+        if not self.cfg.degrade or not self.ladder:
+            return plan_idx
+        rank = max(self._rank.get(plan_idx, 0), self.level)
+        return self.ladder[rank]
+
+    def reset(self) -> None:
+        """Back to level 0 with cleared stats (scheduler warmup)."""
+        self.level = 0
+        self._tick = 0
+        self._last_change_tick = -self.cfg.dwell_ticks
+        self.n_escalations = self.n_deescalations = 0
+        self.peak_level = 0
+
+    # -------------------------------------------------------- shedding
+
+    @staticmethod
+    def shed_reason(req, now: float, n_blocks: int,
+                    min_block_s: Optional[float]) -> Optional[str]:
+        """Non-None when `req` PROVABLY cannot meet one of its
+        deadlines, with the reason. Provable means a true lower bound:
+
+          * the deadline has already expired at submit time;
+          * the request's own prefill needs `n_blocks` sequential
+            ticks (one 128-token block per request per tick), and the
+            fastest prefill tick ever observed (`min_block_s`) times
+            that count already exceeds the time remaining. Optimistic
+            on every axis (empty queue, widest batch, fastest ticks),
+            so a shed here could not have been served in time by ANY
+            schedule.
+
+        Returns None while no tick time has been observed yet (nothing
+        is provable about an unmeasured system) or when the request
+        carries no deadline."""
+        arrival = req.arrival_time if req.arrival_time is not None else now
+        for label, dl_ms in (("ttft", req.ttft_deadline_ms),
+                             ("deadline", req.deadline_ms)):
+            if dl_ms is None:
+                continue
+            remaining = arrival + dl_ms / 1e3 - now
+            if remaining <= 0:
+                return (f"{label} ({dl_ms:g} ms) already expired at "
+                        f"submit")
+            if min_block_s and n_blocks * min_block_s > remaining:
+                return (f"cannot meet {label}: needs >= "
+                        f"{n_blocks} prefill ticks x {min_block_s:.4g}s "
+                        f"> {remaining:.4g}s remaining")
+        return None
+
+    # ----------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        return {
+            "level": self.level,
+            "peak_level": self.peak_level,
+            "ladder": [getattr(self.plans[i], "name", str(i))
+                       for i in self.ladder],
+            "escalations": self.n_escalations,
+            "deescalations": self.n_deescalations,
+        }

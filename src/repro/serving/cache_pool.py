@@ -98,6 +98,22 @@ class KVSlotPool:
         be served by this pool."""
         return n_tokens <= self.cache_len
 
+    # ----------------------------------------- fault-injection pressure
+
+    def steal_free_slots(self, n: int) -> list:
+        """Fault-injection hook (serving/faults.py): temporarily remove
+        up to n FREE slots from the free list so admission sees a full
+        pool. Stolen slots are not held (acquire never returns them)
+        and must come back via `restore_free_slots` — the injector
+        guarantees it, so leak accounting stays exact."""
+        taken = []
+        for _ in range(min(n, len(self._free))):
+            taken.append(self._free.popleft())
+        return taken
+
+    def restore_free_slots(self, slots: list) -> None:
+        self._free.extend(slots)
+
     # ------------------------------------------------------------ stats
 
     def stranded_tokens(self) -> int:

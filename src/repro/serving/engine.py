@@ -67,12 +67,16 @@ class Engine:
         # select others via Request.effort (see scheduler)
         self.runtime = make_runtime(cfg, params, plans=plans)
 
-    def scheduler(self, n_slots: int, cache_len: int, seed: int = 0
+    def scheduler(self, n_slots: int, cache_len: int, seed: int = 0,
+                  admission=None, faults=None
                   ) -> ContinuousBatchingScheduler:
+        """admission/faults: optional AdmissionController /
+        FaultInjector (overload resilience; see serving/admission.py
+        and serving/faults.py)."""
         return ContinuousBatchingScheduler(
             self.runtime, n_slots=n_slots, cache_len=cache_len, seed=seed,
             prefill_batch=self.prefill_batch, page_size=self.page_size,
-            n_pages=self.n_pages)
+            n_pages=self.n_pages, admission=admission, faults=faults)
 
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
                  temperature: float = 0.0, seed: int = 0,

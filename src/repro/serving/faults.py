@@ -1,0 +1,188 @@
+"""Deterministic fault injection for the serving scheduler.
+
+The robustness contract of the serving stack ("no slot/page leaks,
+the oldest request always progresses, surviving outputs bit-identical
+to a fault-free run, compile counts flat") is only worth as much as the
+adversity it survives. `FaultInjector` manufactures that adversity
+DETERMINISTICALLY: every fault is drawn from one seeded
+`np.random.default_rng` stream advanced once per scheduler tick, so a
+fault schedule is a pure function of (seed, tick sequence) — a failing
+chaos run replays exactly, in CI or locally.
+
+Fault classes (each with an independent per-tick probability):
+
+  forced preemption   evict the youngest active request (never the
+                      oldest — the injector honours the same
+                      strictly-younger rule as page-pressure
+                      preemption, so liveness is preserved by
+                      construction). Works on BOTH KV layouts: the
+                      victim releases its slot/pages and re-prefills
+                      from scratch; greedy output is unchanged.
+  synthetic pressure  temporarily steal a fraction of the FREE pages
+                      (paged) or FREE slots (slot layout) from the
+                      pool for `pressure_hold_ticks` ticks — admission
+                      and page growth see a dry heap and must cope
+                      (skip, preempt, retry) without leaking. Stolen
+                      resources are always returned by a later tick or
+                      by `finalize()`, so leak accounting stays exact.
+  slow ticks          advance an injected clock offset (the scheduler's
+                      clock is wrapped via `wrap_clock`), simulating a
+                      stalled host — this is what fires deadline
+                      timeouts under test without real waiting.
+  random aborts       cancel a random queued-or-active request
+                      (`status="cancelled"`), as a disconnecting
+                      client would. Capped by `max_aborts` so chaos
+                      runs keep survivors to bit-compare.
+
+Wiring: pass `faults=FaultInjector(seed)` to the scheduler
+constructor; the scheduler calls `on_tick(self)` at the top of every
+tick (warmup suspends injection) and `finalize(self)` when a run
+drains. The injector never touches device state — it only drives the
+scheduler's own public fault surfaces (preempt, cancel, pool
+steal/restore hooks, clock), so anything a chaos run breaks is a real
+scheduler bug, not an injector artifact.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+class FaultInjector:
+    """Seed-driven chaos: forced preemptions, synthetic pool pressure,
+    slow ticks, and random request aborts, one draw batch per tick."""
+
+    def __init__(self, seed: int = 0, p_preempt: float = 0.05,
+                 p_pressure: float = 0.05, p_slow: float = 0.05,
+                 p_abort: float = 0.0, pressure_frac: float = 0.5,
+                 pressure_hold_ticks: int = 4, slow_tick_s: float = 0.01,
+                 max_aborts: Optional[int] = None):
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.p_preempt = p_preempt
+        self.p_pressure = p_pressure
+        self.p_slow = p_slow
+        self.p_abort = p_abort
+        self.pressure_frac = pressure_frac
+        self.pressure_hold_ticks = pressure_hold_ticks
+        self.slow_tick_s = slow_tick_s
+        self.max_aborts = max_aborts
+        self._offset = 0.0
+        # (return_at_tick, kind, items): kind is "pages" or "slots"
+        self._stolen: List[Tuple[int, str, list]] = []
+        self._tick = 0
+        self.enabled = True
+        # stats (chaos tests assert faults actually fired)
+        self.n_forced_preempts = 0
+        self.n_pressure_events = 0
+        self.n_slow_ticks = 0
+        self.n_aborts = 0
+        self.aborted_rids: List[int] = []
+
+    # ------------------------------------------------------------ clock
+
+    def wrap_clock(self, clock):
+        """Wrap the scheduler's clock so injected slow ticks advance
+        observed time (firing deadline/timeout paths) without real
+        waiting."""
+        return lambda: clock() + self._offset
+
+    # ------------------------------------------------------------- tick
+
+    def on_tick(self, sched) -> None:
+        """Scheduler hook, called at the top of every tick. Draws one
+        fault batch from the seeded stream (always the same number of
+        draws per tick, so the schedule is independent of scheduler
+        state) and applies whichever faults fire."""
+        self._tick += 1
+        draws = self.rng.random(4)
+        pick = self.rng.integers(0, 1 << 30)   # victim selector draw
+        self._restore_due(sched.pool)
+        if not self.enabled:
+            return
+        if draws[0] < self.p_slow:
+            self._offset += self.slow_tick_s
+            self.n_slow_ticks += 1
+        if draws[1] < self.p_preempt:
+            self._force_preempt(sched)
+        if draws[2] < self.p_pressure:
+            self._apply_pressure(sched)
+        if draws[3] < self.p_abort and (
+                self.max_aborts is None or self.n_aborts < self.max_aborts):
+            self._abort_random(sched, int(pick))
+
+    def finalize(self, sched) -> None:
+        """Return every still-stolen resource (a drained run must leave
+        the pools whole for leak accounting)."""
+        for _, kind, items in self._stolen:
+            self._restore(sched.pool, kind, items)
+        self._stolen.clear()
+
+    # ------------------------------------------------------ fault impls
+
+    def _force_preempt(self, sched) -> None:
+        """Evict the youngest active request actually holding work —
+        never the oldest, and never when it is alone (the liveness
+        invariant is the injector's to respect, not to test)."""
+        states = sorted(sched.active.values(), key=lambda s: s.seq)
+        if len(states) < 2:
+            return
+        victim = states[-1]
+        sched._preempt(victim)
+        self.n_forced_preempts += 1
+
+    def _apply_pressure(self, sched) -> None:
+        pool = sched.pool
+        if sched.paged:
+            n = int(pool.n_free_pages * self.pressure_frac)
+            items = pool.steal_free_pages(n)
+            kind = "pages"
+        else:
+            n = int(pool.n_free * self.pressure_frac)
+            items = pool.steal_free_slots(n)
+            kind = "slots"
+        if not items:
+            return
+        self._stolen.append((self._tick + self.pressure_hold_ticks,
+                             kind, items))
+        self.n_pressure_events += 1
+
+    def _abort_random(self, sched, pick: int) -> None:
+        rids = sorted([r.rid for r in sched.queue]
+                      + [s.req.rid for s in sched.active.values()])
+        if not rids:
+            return
+        rid = rids[pick % len(rids)]
+        if sched.cancel(rid, reason=f"fault injection abort "
+                                    f"(seed={self.seed})"):
+            self.n_aborts += 1
+            self.aborted_rids.append(rid)
+
+    def _restore_due(self, pool) -> None:
+        due = [e for e in self._stolen if e[0] <= self._tick]
+        if not due:
+            return
+        self._stolen = [e for e in self._stolen if e[0] > self._tick]
+        for _, kind, items in due:
+            self._restore(pool, kind, items)
+
+    def _restore(self, pool, kind: str, items: list) -> None:
+        if kind == "pages":
+            pool.restore_free_pages(items)
+        else:
+            pool.restore_free_slots(items)
+
+    # ------------------------------------------------------------ stats
+
+    def stats(self) -> dict:
+        return {
+            "seed": self.seed,
+            "forced_preempts": self.n_forced_preempts,
+            "pressure_events": self.n_pressure_events,
+            "slow_ticks": self.n_slow_ticks,
+            "aborts": self.n_aborts,
+            "aborted_rids": list(self.aborted_rids),
+            "clock_offset_s": round(self._offset, 6),
+            "outstanding_stolen": sum(len(i) for _, _, i in self._stolen),
+        }

@@ -171,6 +171,23 @@ class PagedKVPool:
         return (n_tokens <= self.cache_len
                 and self.pages_for(n_tokens) <= self.n_pages - 1)
 
+    # ----------------------------------------- fault-injection pressure
+
+    def steal_free_pages(self, n: int) -> list:
+        """Fault-injection hook (serving/faults.py): temporarily remove
+        up to n FREE pages from the heap — admission gating and
+        `ensure` growth see a dry heap and must skip/preempt/retry.
+        Stolen pages belong to no slot (never page 0) and must come
+        back via `restore_free_pages`; the injector guarantees it, so
+        leak accounting stays exact."""
+        taken = []
+        for _ in range(min(n, len(self._free_pages))):
+            taken.append(self._free_pages.popleft())
+        return taken
+
+    def restore_free_pages(self, pages: list) -> None:
+        self._free_pages.extend(pages)
+
     # ------------------------------------------------------------ stats
 
     def stranded_tokens(self) -> int:

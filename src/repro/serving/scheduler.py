@@ -43,16 +43,37 @@ strictly-younger requests are ever evicted, so the oldest always makes
 progress and a stream that fits the heap per-request always drains.
 Page tables are traced values, so the paged entries compile once per
 width bucket exactly like the slot entries.
+
+OVERLOAD SEMANTICS (the robustness contract, as load-bearing as the
+bit-equivalence contract): requests carry optional deadlines
+(`ttft_deadline_ms`, `deadline_ms`) and every request finishes with a
+`RequestOutput.status` in {ok, timed_out, shed, cancelled}. The
+pressure valves fire in a fixed order — SHED at submit (a request that
+cannot fit the pool, or provably cannot meet its deadline, costs zero
+device work), DEGRADE at admission (an `AdmissionController` routes
+new admissions to sparser pre-compiled SparsityPlan tiers while
+watermarks are tripped; the decision STICKS for the request's
+lifetime, so preemption re-admits under the same tier and stays
+output-transparent), PREEMPT under page pressure (work already done is
+discarded last, youngest first). Deadline expiry and client
+cancellation (`cancel(rid)`) free slots/pages idempotently mid-flight,
+and a stall watchdog raises `SchedulerStallError` with a full state
+dump when `stall_ticks` consecutive ticks make no observable progress
+— a livelocked scheduler fails loudly instead of spinning. A seeded
+`FaultInjector` (serving/faults.py, `faults=`) can drive all of these
+paths deterministically.
 """
 from __future__ import annotations
 
 import dataclasses
+import pprint
 import time
 from collections import deque
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.serving.admission import AdmissionController
 from repro.serving.cache_pool import KVSlotPool
 from repro.serving.page_pool import PagedKVPool
 from repro.serving.runtime import ModelRuntime
@@ -71,6 +92,18 @@ class Request:
     # The per-request sparsity knob: SLO-tiered traffic mixes tiers in
     # one stream with zero recompilation (plans are pre-compiled).
     effort: Optional[str] = None
+    # deadlines, measured from arrival_time. Expiry frees the request's
+    # resources mid-flight with status="timed_out"; at submit, a
+    # provably-unmeetable deadline sheds instead (status="shed").
+    ttft_deadline_ms: Optional[float] = None   # arrival -> first token
+    deadline_ms: Optional[float] = None        # arrival -> last token
+    # trace replay: the client cancels this many seconds after arrival
+    # (drive_stream issues the cancel; see serving/trace.py)
+    cancel_after_s: Optional[float] = None
+    # scheduler-internal: plan index pinned at FIRST admission (the
+    # degradation decision sticks, so preemption re-admits under the
+    # SAME tier and stays output-transparent). Not a user field.
+    assigned_plan_idx: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -78,8 +111,19 @@ class RequestOutput:
     rid: int
     tokens: List[int]
     prompt_len: int
-    ttft_seconds: float          # arrival -> first token
-    finish_seconds: float        # arrival -> last token
+    ttft_seconds: Optional[float]  # arrival -> first token (None when
+    #                                none was produced: shed, cancelled
+    #                                or timed out during prefill)
+    finish_seconds: float        # arrival -> terminal state
+    # terminal status: "ok" | "timed_out" | "shed" | "cancelled".
+    # Non-ok outputs keep whatever tokens were produced before the
+    # terminal event (timed_out/cancelled may be partial; shed is
+    # always empty).
+    status: str = "ok"
+    reason: Optional[str] = None   # human-readable cause for non-ok
+    effort: Optional[str] = None   # REALIZED plan name (degradation
+    #                                may have made it sparser than the
+    #                                request asked)
 
 
 @dataclasses.dataclass
@@ -105,6 +149,17 @@ class _ActiveState:
     first_token_time: Optional[float] = None
 
 
+class SchedulerStallError(RuntimeError):
+    """The scheduler made no observable progress for `stall_ticks`
+    consecutive ticks while work was pending — a livelock. Carries the
+    full scheduler-state dump (`.state`) that is also formatted into
+    the message, so the failure is diagnosable from the raise alone."""
+
+    def __init__(self, message: str, state: dict):
+        super().__init__(message)
+        self.state = state
+
+
 class ContinuousBatchingScheduler:
     """Admits requests from a queue into KV slots mid-flight and
     interleaves chunked blockwise prefill with batched decode."""
@@ -113,7 +168,9 @@ class ContinuousBatchingScheduler:
                  cache_len: int = 2048, seed: int = 0,
                  prefill_batch: int = 4, clock=time.perf_counter,
                  sleep=time.sleep, page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 admission: Optional[AdmissionController] = None,
+                 faults=None, stall_ticks: int = 1000):
         self.runtime = runtime
         layout = getattr(runtime.cfg, "kv_layout", "slot")
         self.kv_layout = layout
@@ -166,6 +223,15 @@ class ContinuousBatchingScheduler:
         n_plans = max(len(self.plans), 1)
         self.plan_prefill_blocks = np.zeros(n_plans, np.int64)
         self.plan_decode_tokens = np.zeros(n_plans, np.int64)
+        # overload-resilience layer: admission controller (deadline
+        # shedding + hysteretic tier degradation, serving/admission.py)
+        # and deterministic fault injector (serving/faults.py). The
+        # injector wraps the clock so injected slow ticks advance
+        # observed time for the deadline/timeout paths.
+        self.admission = admission
+        self.faults = faults
+        if faults is not None:
+            clock = faults.wrap_clock(clock)
         self.clock = clock
         # idle wait between stream arrivals (drive_stream). Injected
         # alongside `clock` so a fake/simulated clock brings a matching
@@ -184,24 +250,33 @@ class ContinuousBatchingScheduler:
         self.n_decode_steps = 0
         self.n_eos_stops = 0
         self.n_preemptions = 0
+        # robustness counters (terminal statuses + degradation)
+        self.n_shed = 0
+        self.n_timed_out = 0
+        self.n_cancelled = 0
+        self.n_degraded = 0
+        # stall watchdog: raise after this many consecutive ticks with
+        # no observable progress while work is pending (see tick())
+        self.stall_ticks = stall_ticks
+        self._stall_count = 0
+        self._last_sig = None
+        self._total_emitted = 0
+        # fastest prefill tick ever observed — the LOWER BOUND the
+        # predictive deadline shed is proved against (None until a
+        # nonzero duration is measured; fake clocks never shed
+        # predictively)
+        self._min_prefill_tick_s: Optional[float] = None
 
     # --------------------------------------------------------- submit
 
     def submit(self, req: Request) -> None:
-        need = max(self._n_blocks(req) * self.runtime.block_size,
-                   len(req.prompt) + req.max_new)
-        if not self.pool.fits(need):
-            if self.paged:
-                raise ValueError(
-                    f"request {req.rid} needs {need} cache positions "
-                    f"({self.pool.pages_for(need)} pages) but the paged "
-                    f"pool backs at most {self.pool.n_pages - 1} usable "
-                    f"pages of {self.pool.page_size} tokens per request "
-                    f"(table width {self.pool.max_pages} pages) — grow "
-                    f"n_pages/--pool-pages or cache_len")
-            raise ValueError(
-                f"request {req.rid} needs {need} cache positions but the "
-                f"pool's cache_len is {self.cache_len}")
+        """Validate and enqueue. Malformed requests (empty prompt,
+        max_new < 1, unknown effort) are CALLER bugs and still raise;
+        a well-formed request the pool can never hold, or that provably
+        cannot meet its deadline, is SHED instead — it finishes
+        immediately with status="shed" and a reason, so one oversized
+        request in a stream no longer kills the whole replay (and can
+        never livelock admission waiting for pages that cannot exist)."""
         if not req.prompt:
             raise ValueError(f"request {req.rid} has an empty prompt")
         if req.max_new < 1:
@@ -216,6 +291,28 @@ class ContinuousBatchingScheduler:
                 f"make_runtime / serve.py --effort")
         if req.arrival_time is None:
             req.arrival_time = self.clock()
+        need = max(self._n_blocks(req) * self.runtime.block_size,
+                   len(req.prompt) + req.max_new)
+        if not self.pool.fits(need):
+            if self.paged:
+                reason = (
+                    f"needs {need} cache positions "
+                    f"({self.pool.pages_for(need)} pages) but the paged "
+                    f"pool backs at most {self.pool.n_pages - 1} usable "
+                    f"pages of {self.pool.page_size} tokens per request "
+                    f"(table width {self.pool.max_pages} pages) — grow "
+                    f"n_pages/--pool-pages or cache_len")
+            else:
+                reason = (f"needs {need} cache positions but the pool's "
+                          f"cache_len is {self.cache_len}")
+            self._finish_queued(req, "shed", reason)
+            return
+        reason = AdmissionController.shed_reason(
+            req, now=self.clock(), n_blocks=self._n_blocks(req),
+            min_block_s=self._min_prefill_tick_s)
+        if reason is not None:
+            self._finish_queued(req, "shed", reason)
+            return
         self.queue.append(req)
 
     def _n_blocks(self, req: Request) -> int:
@@ -229,10 +326,33 @@ class ContinuousBatchingScheduler:
         return not self.queue and not self.active
 
     def tick(self) -> int:
-        """One scheduling step; returns the number of tokens emitted."""
+        """One scheduling step; returns the number of tokens emitted.
+
+        Order of the overload valves: fault injection (chaos runs),
+        admission-pressure observation, deadline expiry (frees
+        resources BEFORE admission so an expired request's pages seat
+        the next one), admit (with degradation), prefill, decode, and
+        finally the stall watchdog — `stall_ticks` consecutive ticks
+        with pending work and no observable progress raise
+        `SchedulerStallError` with a full state dump."""
         self.n_ticks += 1
+        if self.faults is not None:
+            self.faults.on_tick(self)
+        if self.admission is not None:
+            self.admission.observe(len(self.queue), self._free_frac())
+        self._expire_deadlines()
         self._admit()
+        t0 = self.clock()
+        before = self.n_prefill_ticks
         emitted = self._prefill_blocks()
+        if self.n_prefill_ticks > before:
+            dt = self.clock() - t0
+            # fastest observed prefill tick: the provable lower bound
+            # behind predictive deadline shedding (fake clocks measure
+            # 0.0 and therefore never enable it)
+            if dt > 0 and (self._min_prefill_tick_s is None
+                           or dt < self._min_prefill_tick_s):
+                self._min_prefill_tick_s = dt
         # sample occupancy/stranding stats mid-tick too: short requests
         # can admit, prefill, decode, and release within ONE tick, and
         # the peak the kv_memory benchmark compares is the post-prefill
@@ -240,18 +360,108 @@ class ContinuousBatchingScheduler:
         self.pool.note_tick()
         emitted += self._decode_all()
         self.pool.note_tick()
+        self._total_emitted += emitted
+        self._watchdog()
         return emitted
 
+    def _free_frac(self) -> float:
+        """Free-resource fraction for the admission watermarks: free
+        pages of the paged heap, free slots of the slot pool."""
+        if self.paged:
+            usable = self.pool.n_pages - 1
+            return self.pool.n_free_pages / usable if usable else 0.0
+        return self.pool.n_free / self.n_slots
+
+    def _watchdog(self) -> None:
+        if self.drained:
+            self._stall_count = 0
+            self._last_sig = None
+            return
+        # every way the scheduler can make progress moves one of these:
+        # admissions/finishes change the queue/finished lengths, prefill
+        # moves n_prefill_blocks, decode moves _total_emitted, and
+        # preemption churn moves n_preemptions
+        sig = (len(self.queue), len(self.active), len(self.finished),
+               self.n_prefill_blocks, self.n_preemptions,
+               self._total_emitted)
+        if sig == self._last_sig:
+            self._stall_count += 1
+        else:
+            self._stall_count = 0
+            self._last_sig = sig
+        if self._stall_count >= self.stall_ticks:
+            state = self.dump_state()
+            raise SchedulerStallError(
+                f"scheduler stalled: no progress for {self._stall_count} "
+                f"consecutive ticks with work pending\n"
+                f"{pprint.pformat(state, width=78)}", state)
+
     def run(self, max_ticks: int = 1_000_000) -> Dict[int, RequestOutput]:
-        """Drive ticks until every submitted request has finished."""
+        """Drive ticks until every submitted request has finished (any
+        terminal status). Raises SchedulerStallError — with a full
+        scheduler-state dump — instead of spinning when ticks stop
+        making progress."""
         for _ in range(max_ticks):
             if self.drained:
                 break
             self.tick()
         if not self.drained:
-            raise RuntimeError(f"scheduler not drained after {max_ticks} "
-                               f"ticks")
+            state = self.dump_state()
+            raise SchedulerStallError(
+                f"scheduler not drained after {max_ticks} ticks\n"
+                f"{pprint.pformat(state, width=78)}", state)
+        if self.faults is not None:
+            self.faults.finalize(self)
         return self.finished
+
+    # ----------------------------------------------------- state dump
+
+    def dump_state(self) -> dict:
+        """Full host-side scheduler state (watchdog raises carry it;
+        also handy interactively). Device buffers are summarized, not
+        dumped."""
+        pool_state = {
+            "layout": self.kv_layout,
+            "n_free_slots": self.pool.n_free,
+            "acquires": self.pool.total_acquires,
+            "releases": self.pool.total_releases,
+        }
+        if self.paged:
+            pool_state.update(
+                n_free_pages=self.pool.n_free_pages,
+                usable_pages=self.pool.n_pages - 1,
+                pages_in_use=self.pool.n_pages_in_use)
+        return {
+            "tick": self.n_ticks,
+            "queue": [
+                {"rid": r.rid, "prompt_len": len(r.prompt),
+                 "blocks": self._n_blocks(r), "effort": r.effort,
+                 "deadline_ms": r.deadline_ms}
+                for r in self.queue],
+            "active": [
+                {"rid": st.req.rid, "slot": st.slot, "seq": st.seq,
+                 "phase": st.phase, "blocks_done": st.blocks_done,
+                 "n_blocks": st.n_blocks, "pos": st.pos,
+                 "out_tokens": len(st.out),
+                 "plan": self._plan_name(st.plan_idx)}
+                for st in sorted(self.active.values(),
+                                 key=lambda s: s.seq)],
+            "pool": pool_state,
+            "counters": {
+                "finished": len(self.finished),
+                "emitted": self._total_emitted,
+                "prefill_blocks": self.n_prefill_blocks,
+                "decode_steps": self.n_decode_steps,
+                "preemptions": self.n_preemptions,
+                "shed": self.n_shed, "timed_out": self.n_timed_out,
+                "cancelled": self.n_cancelled,
+                "degraded": self.n_degraded,
+            },
+            "admission": (self.admission.stats()
+                          if self.admission is not None else None),
+            "faults": (self.faults.stats()
+                       if self.faults is not None else None),
+        }
 
     def warmup(self) -> dict:
         """Compile every serving executable by running one throwaway
@@ -264,6 +474,9 @@ class ContinuousBatchingScheduler:
         post-warmup compile counts."""
         if self.active or self.queue or self.finished:
             raise RuntimeError("warmup() must run before real traffic")
+        # chaos must not perturb compilation: the injector is suspended
+        # for the duration of warmup and re-attached after
+        faults, self.faults = self.faults, None
         N = self.runtime.block_size
         self.submit(Request(rid=-1, prompt=[1] * min(N, self.cache_len - 2),
                             max_new=2))
@@ -307,6 +520,14 @@ class ContinuousBatchingScheduler:
         self.n_ticks = self.n_prefill_blocks = self.n_decode_steps = 0
         self.n_prefill_ticks = self.n_eos_stops = 0
         self.n_preemptions = 0
+        self.n_shed = self.n_timed_out = self.n_cancelled = 0
+        self.n_degraded = 0
+        self._stall_count = 0
+        self._last_sig = None
+        self._total_emitted = 0
+        if self.admission is not None:
+            self.admission.reset()
+        self.faults = faults
         self.plan_prefill_blocks[:] = 0
         self.plan_decode_tokens[:] = 0
         self.pool.total_acquires = self.pool.total_releases = 0
@@ -341,25 +562,138 @@ class ContinuousBatchingScheduler:
             if slot is None:
                 return
             req = self.queue.popleft()
+            if req.assigned_plan_idx is not None:
+                # re-admission after preemption: the degradation
+                # decision was made at FIRST admission and sticks, so
+                # preemption stays output-transparent even if the
+                # controller's level moved meanwhile
+                plan_idx = req.assigned_plan_idx
+            else:
+                plan_idx = self.plan_index.get(req.effort, 0)
+                if self.admission is not None and self.plans:
+                    degraded = self.admission.degraded_plan(plan_idx)
+                    if degraded != plan_idx:
+                        self.n_degraded += 1
+                        plan_idx = degraded
+                req.assigned_plan_idx = plan_idx
             self.active[slot] = _ActiveState(
                 req=req, slot=slot, seq=self._admit_seq,
                 n_blocks=self._n_blocks(req),
-                plan_idx=self.plan_index.get(req.effort, 0),
+                plan_idx=plan_idx,
                 # rid folded to uint32: seed sequences reject negative
                 # entries (the warmup throwaway request carries rid=-1)
                 rng=np.random.default_rng(
                     (self.seed, req.rid % (1 << 32))))
             self._admit_seq += 1
 
+    # ------------------------------------------- lifecycle: cancel/expiry
+
+    def _plan_name(self, plan_idx: int) -> Optional[str]:
+        return self.plans[plan_idx].name if self.plans else None
+
+    def _count_status(self, status: str) -> None:
+        if status == "shed":
+            self.n_shed += 1
+        elif status == "timed_out":
+            self.n_timed_out += 1
+        elif status == "cancelled":
+            self.n_cancelled += 1
+
+    def _finish_queued(self, req: Request, status: str,
+                       reason: str) -> None:
+        """Terminal state for a request that never held resources
+        (shed at submit, expired/cancelled while queued)."""
+        now = self.clock()
+        arrival = (req.arrival_time if req.arrival_time is not None
+                   else now)
+        self.finished[req.rid] = RequestOutput(
+            rid=req.rid, tokens=[], prompt_len=len(req.prompt),
+            ttft_seconds=None, finish_seconds=now - arrival,
+            status=status, reason=reason, effort=None)
+        self._count_status(status)
+
+    def _finish_abnormal(self, st: _ActiveState, status: str,
+                         reason: str) -> None:
+        """Terminal state for an ACTIVE request (timeout/cancel):
+        records whatever tokens were produced and frees the slot and —
+        paged — every page, idempotently (the pool guards double
+        release)."""
+        now = self.clock()
+        self.finished[st.req.rid] = RequestOutput(
+            rid=st.req.rid, tokens=list(st.out),
+            prompt_len=len(st.req.prompt),
+            ttft_seconds=(st.first_token_time - st.req.arrival_time
+                          if st.first_token_time is not None else None),
+            finish_seconds=now - st.req.arrival_time,
+            status=status, reason=reason,
+            effort=self._plan_name(st.plan_idx))
+        if self.active.get(st.slot) is st:
+            del self.active[st.slot]
+        self.pool.release(st.slot)
+        self._count_status(status)
+
+    def cancel(self, rid: int, reason: str = "client cancelled") -> bool:
+        """Mid-flight cancellation: finish `rid` with
+        status="cancelled" wherever it currently lives — still queued
+        (zero work done) or active (slot/pages freed idempotently,
+        partial tokens kept). Returns False when the request is
+        unknown or already finished (cancelling twice is a no-op)."""
+        for r in self.queue:
+            if r.rid == rid:
+                self.queue.remove(r)
+                self._finish_queued(r, "cancelled", reason)
+                return True
+        for st in list(self.active.values()):
+            if st.req.rid == rid:
+                self._finish_abnormal(st, "cancelled", reason)
+                return True
+        return False
+
+    def _expire_deadlines(self) -> None:
+        """Enforce per-request deadlines (tick-entry hook): expired
+        requests finish with status="timed_out" and free their
+        resources immediately — BEFORE admission, so the pages a dead
+        request held can seat the next queued one on the same tick."""
+        now = self.clock()
+
+        def expired(req: Request, phase: str) -> Optional[str]:
+            waited = now - req.arrival_time
+            if (req.deadline_ms is not None
+                    and waited >= req.deadline_ms / 1e3):
+                return (f"end-to-end deadline {req.deadline_ms:g} ms "
+                        f"expired ({phase})")
+            if (req.ttft_deadline_ms is not None and phase != "decode"
+                    and waited >= req.ttft_deadline_ms / 1e3):
+                return (f"ttft deadline {req.ttft_deadline_ms:g} ms "
+                        f"expired ({phase})")
+            return None
+
+        for r in [r for r in self.queue
+                  if r.deadline_ms is not None
+                  or r.ttft_deadline_ms is not None]:
+            reason = expired(r, "queued")
+            if reason is not None:
+                self.queue.remove(r)
+                self._finish_queued(r, "timed_out", reason)
+        for st in list(self.active.values()):
+            if self.active.get(st.slot) is not st:
+                continue
+            reason = expired(st.req, st.phase)
+            if reason is not None:
+                self._finish_abnormal(st, "timed_out", reason)
+
     # ---------------------------------------------- paged page pressure
 
     def _preempt(self, st: _ActiveState) -> None:
-        """Evict a request: release its pages and slot, requeue it at
-        the FRONT of the queue for re-prefill from scratch (preempted
-        requests are older than anything still queued). Preemption is
-        output-transparent: greedy decode is deterministic, and
-        temperature sampling replays the request's own (seed, rid) RNG
-        stream on re-admission — only TTFT/latency suffer."""
+        """Evict a request: release its slot (and — paged — its pages),
+        requeue it at the FRONT of the queue for re-prefill from
+        scratch (preempted requests are older than anything still
+        queued). Preemption is output-transparent: greedy decode is
+        deterministic, the request re-admits under its PINNED plan
+        (assigned_plan_idx), and temperature sampling replays its own
+        (seed, rid) RNG stream on re-admission — only TTFT/latency
+        suffer. Layout-independent (the FaultInjector forces it on the
+        slot layout too)."""
         del self.active[st.slot]
         self.pool.release(st.slot)
         self.queue.appendleft(st.req)
@@ -659,7 +993,8 @@ class ContinuousBatchingScheduler:
             rid=st.req.rid, tokens=list(st.out),
             prompt_len=len(st.req.prompt),
             ttft_seconds=st.first_token_time - st.req.arrival_time,
-            finish_seconds=now - st.req.arrival_time)
+            finish_seconds=now - st.req.arrival_time,
+            status="ok", effort=self._plan_name(st.plan_idx))
         del self.active[st.slot]
         self.pool.release(st.slot)
 
@@ -675,7 +1010,7 @@ class ContinuousBatchingScheduler:
 
 
 def drive_stream(sched: ContinuousBatchingScheduler,
-                 requests: List[Request]) -> float:
+                 requests: List[Request], after_tick=None) -> float:
     """Drive a timed request stream to completion.
 
     Each request's `arrival_time` is an OFFSET in seconds from stream
@@ -684,10 +1019,19 @@ def drive_stream(sched: ContinuousBatchingScheduler,
     sleeps instead of spinning while the pool is idle between
     arrivals. The caller's Request objects are never mutated (absolute
     deadlines are stamped onto copies), so the same list can drive
-    several schedulers for A/B runs. Returns the wall-clock seconds
-    for the whole stream. Used by launch/serve.py --stream and the
-    continuous-batching benchmark so both exercise the identical
-    serving loop."""
+    several schedulers for A/B runs.
+
+    Requests carrying `cancel_after_s` are cancelled by this loop that
+    many seconds after their arrival (the trace-replay form of a
+    client disconnect). `after_tick(sched)`, when given, runs after
+    every tick — the hook the overload benchmark uses to advance its
+    simulated clock by a per-tick cost model. When the scheduler
+    carries a FaultInjector, its still-stolen resources are restored
+    at stream end so leak accounting over the whole stream is exact.
+
+    Returns the clock seconds for the whole stream. Used by
+    launch/serve.py --stream and the continuous-batching benchmark so
+    both exercise the identical serving loop."""
     clock = sched.clock
     t0 = clock()
     # ascending stable sort + popleft keeps FIFO order for tied arrivals
@@ -695,11 +1039,21 @@ def drive_stream(sched: ContinuousBatchingScheduler,
         dataclasses.replace(r, prompt=list(r.prompt),
                             arrival_time=t0 + (r.arrival_time or 0.0))
         for r in sorted(requests, key=lambda r: r.arrival_time or 0.0))
+    cancels = deque(sorted(
+        (r.arrival_time + r.cancel_after_s, r.rid)
+        for r in pending if r.cancel_after_s is not None))
     while pending or not sched.drained:
         now = clock()
         while pending and pending[0].arrival_time <= now:
             sched.submit(pending.popleft())
+        while cancels and cancels[0][0] <= now:
+            _, rid = cancels.popleft()
+            # False (already finished) is fine: a cancel that loses the
+            # race to completion is a no-op, as for a real client
+            sched.cancel(rid, reason="client cancelled (cancel_after_s)")
         if sched.drained:
+            if not pending:
+                break
             # route the idle wait through the scheduler's injected sleep:
             # the delta is measured on sched.clock, so a simulated clock
             # must come with a simulated sleep (time.sleep on a fake-
@@ -707,4 +1061,8 @@ def drive_stream(sched: ContinuousBatchingScheduler,
             sched.sleep(max(0.0, pending[0].arrival_time - clock()))
             continue
         sched.tick()
+        if after_tick is not None:
+            after_tick(sched)
+    if sched.faults is not None:
+        sched.faults.finalize(sched)
     return clock() - t0

@@ -20,9 +20,20 @@ line):
   effort       str     optional SparsityPlan tier name ("dense" /
                        "balanced" / "turbo") — per-request sparsity;
                        records without it use the default plan
+  deadline_ms  float   optional end-to-end deadline (arrival -> last
+                       token); expiry frees the request mid-flight
+                       with status="timed_out", a provably-unmeetable
+                       deadline is shed at submit
+  ttft_deadline_ms
+               float   optional arrival -> first-token deadline
+  cancel_after_s
+               float   optional: the client disconnects this many
+                       seconds after arrival (drive_stream issues the
+                       cancel; status="cancelled")
 
-Unknown keys are ignored (real traces carry extra metadata). A sample
-trace lives at benchmarks/traces/sample_trace.jsonl.
+Unknown keys are ignored (real traces carry extra metadata). Sample
+traces live at benchmarks/traces/sample_trace.jsonl and — for the
+overload fields — benchmarks/traces/sample_overload.jsonl.
 """
 from __future__ import annotations
 
@@ -38,14 +49,16 @@ def load_trace(path: str, vocab: int, seed: int = 0,
                eos_id: Optional[int] = None,
                temperature: Optional[float] = None,
                max_requests: Optional[int] = None,
-               effort: Optional[str] = None) -> List[Request]:
+               effort: Optional[str] = None,
+               deadline_ms: Optional[float] = None,
+               ttft_deadline_ms: Optional[float] = None) -> List[Request]:
     """Parse a jsonl trace into `Request`s for `drive_stream`.
 
     Prompt tokens are synthesized from a per-record deterministic RNG
     stream (seeded by `seed` and the record index), so replaying the
     same trace is bit-reproducible run-to-run and engine-to-engine.
-    `eos_id`, `temperature` and `effort` apply to records that do not
-    carry their own."""
+    `eos_id`, `temperature`, `effort` and the deadline defaults apply
+    to records that do not carry their own."""
     requests: List[Request] = []
     with open(path) as f:
         for idx, line in enumerate(f):
@@ -80,6 +93,13 @@ def load_trace(path: str, vocab: int, seed: int = 0,
                         else eos_id),
                 effort=(str(rec["effort"]) if "effort" in rec
                         else effort),
+                deadline_ms=(float(rec["deadline_ms"])
+                             if "deadline_ms" in rec else deadline_ms),
+                ttft_deadline_ms=(float(rec["ttft_deadline_ms"])
+                                  if "ttft_deadline_ms" in rec
+                                  else ttft_deadline_ms),
+                cancel_after_s=(float(rec["cancel_after_s"])
+                                if "cancel_after_s" in rec else None),
                 arrival_time=float(rec.get("arrival_s", 0.0))))
     if not requests:
         raise ValueError(f"trace {path} contains no requests")
@@ -105,4 +125,10 @@ def trace_stats(requests: List[Request]) -> dict:
         "gen_len_max": int(gens.max()),
         # effort-tier mix (None -> the default plan)
         "efforts": sorted({r.effort or "default" for r in requests}),
+        # overload-field counts (serve.py robustness line)
+        "with_deadline": sum(r.deadline_ms is not None
+                             or r.ttft_deadline_ms is not None
+                             for r in requests),
+        "with_cancel": sum(r.cancel_after_s is not None
+                           for r in requests),
     }

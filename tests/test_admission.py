@@ -1,0 +1,308 @@
+"""Overload-resilience layer: admission watermarks + hysteresis,
+deadline-aware shedding, graceful effort degradation, mid-flight
+cancellation and timeout enforcement — the scheduler-side half of the
+robustness contract (the chaos half lives in test_faults.py)."""
+import numpy as np
+import pytest
+import jax
+
+import repro.core.fastforward as FF
+from repro.configs import get_config
+from repro.models.registry import get_model
+from repro.nn.param import init_params
+from repro.serving import (AdmissionConfig, AdmissionController,
+                           ContinuousBatchingScheduler, Request,
+                           drive_stream)
+from repro.serving.runtime import make_runtime
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+    return cfg, params
+
+
+def make_prompts(cfg, lengths, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, int(n)).tolist() for n in lengths]
+
+
+class FakeClock:
+    """Manually-advanced clock + matching sleep (drive_stream routes
+    idle waits through it)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+
+# ------------------------------------------------- controller unit tests
+
+
+def test_admission_config_validates():
+    with pytest.raises(ValueError):
+        AdmissionConfig(queue_high=2, queue_low=5)
+    with pytest.raises(ValueError):
+        AdmissionConfig(free_low=0.8, free_high=0.2)
+
+
+def test_ladder_orders_densest_to_sparsest(dense_setup):
+    cfg, _ = dense_setup
+    plans = tuple(FF.resolve_plan(cfg, effort=e)
+                  for e in ("turbo", "dense", "balanced"))
+    ctl = AdmissionController(plans)
+    names = [plans[i].name for i in ctl.ladder]
+    assert names == ["dense", "balanced", "turbo"]
+    fracs = [plans[i].flop_frac() for i in ctl.ladder]
+    assert fracs == sorted(fracs, reverse=True)
+
+
+def test_degraded_plan_never_denser_than_requested(dense_setup):
+    cfg, _ = dense_setup
+    plans = tuple(FF.resolve_plan(cfg, effort=e)
+                  for e in ("dense", "balanced", "turbo"))
+    ctl = AdmissionController(plans)          # ladder == registration
+    assert ctl.degraded_plan(0) == 0          # level 0: everything as-is
+    assert ctl.degraded_plan(2) == 2
+    ctl.level = 1
+    assert ctl.degraded_plan(0) == 1          # dense -> balanced
+    assert ctl.degraded_plan(2) == 2          # turbo stays turbo
+    ctl.level = 2
+    assert ctl.degraded_plan(0) == 2          # dense -> turbo
+    assert ctl.degraded_plan(1) == 2
+
+
+def test_hysteresis_dwell_and_watermarks(dense_setup):
+    cfg, _ = dense_setup
+    plans = tuple(FF.resolve_plan(cfg, effort=e)
+                  for e in ("dense", "balanced", "turbo"))
+    ctl = AdmissionController(plans, AdmissionConfig(
+        queue_high=4, queue_low=1, free_low=0.1, free_high=0.5,
+        dwell_ticks=3))
+    ctl.observe(queue_depth=10, free_frac=1.0)   # pressured -> level 1
+    assert ctl.level == 1
+    ctl.observe(10, 1.0)                          # inside dwell: held
+    ctl.observe(10, 1.0)
+    assert ctl.level == 1
+    ctl.observe(10, 1.0)                          # dwell over -> level 2
+    assert ctl.level == 2 == ctl.max_level
+    ctl.observe(10, 1.0)
+    ctl.observe(10, 1.0)
+    ctl.observe(10, 1.0)
+    assert ctl.level == 2                         # saturates at the top
+    # free-page watermark alone also pressures (OR semantics)
+    ctl2 = AdmissionController(plans, AdmissionConfig(dwell_ticks=0))
+    ctl2.observe(queue_depth=0, free_frac=0.05)
+    assert ctl2.level == 1
+    # recovery needs BOTH low watermarks (AND semantics)
+    ctl2.observe(queue_depth=0, free_frac=0.3)    # free still < free_high
+    assert ctl2.level == 1
+    ctl2.observe(queue_depth=0, free_frac=0.9)
+    assert ctl2.level == 0
+    assert ctl2.n_escalations == 1 and ctl2.n_deescalations == 1
+    assert ctl2.peak_level == 1
+    # degrade=False freezes the ladder entirely
+    off = AdmissionController(plans, AdmissionConfig(degrade=False))
+    off.observe(queue_depth=100, free_frac=0.0)
+    assert off.level == 0 and off.degraded_plan(0) == 0
+
+
+def test_shed_reason_provability():
+    req = Request(rid=0, prompt=[1] * 64, deadline_ms=100.0,
+                  arrival_time=10.0)
+    # expired at submit
+    assert "expired" in AdmissionController.shed_reason(
+        req, now=10.2, n_blocks=2, min_block_s=None)
+    # unmeasured system: nothing is provable
+    assert AdmissionController.shed_reason(
+        req, now=10.0, n_blocks=2, min_block_s=None) is None
+    assert AdmissionController.shed_reason(
+        req, now=10.0, n_blocks=2, min_block_s=0.0) is None
+    # 2 blocks x 0.08s lower bound > 0.1s remaining: provably late
+    assert "cannot meet" in AdmissionController.shed_reason(
+        req, now=10.0, n_blocks=2, min_block_s=0.08)
+    # but 2 x 0.04 = 0.08 < 0.1: could still make it
+    assert AdmissionController.shed_reason(
+        req, now=10.0, n_blocks=2, min_block_s=0.04) is None
+    # ttft deadline proves the same way
+    treq = Request(rid=1, prompt=[1] * 64, ttft_deadline_ms=50.0,
+                   arrival_time=0.0)
+    assert "ttft" in AdmissionController.shed_reason(
+        treq, now=0.0, n_blocks=2, min_block_s=0.03)
+    # no deadlines -> never shed
+    free = Request(rid=2, prompt=[1] * 64, arrival_time=0.0)
+    assert AdmissionController.shed_reason(
+        free, now=99.0, n_blocks=9, min_block_s=9.0) is None
+
+
+# ------------------------------------------- scheduler integration tests
+
+
+def test_expired_deadline_sheds_at_submit(dense_setup):
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    clk = FakeClock()
+    sched = ContinuousBatchingScheduler(runtime, n_slots=2, cache_len=128,
+                                        clock=clk, sleep=clk.sleep)
+    clk.t = 5.0
+    sched.submit(Request(rid=0, prompt=[1] * 40, max_new=4,
+                         deadline_ms=100.0, arrival_time=4.0))
+    out = sched.finished[0]
+    assert out.status == "shed" and "expired" in out.reason
+    assert sched.n_shed == 1 and sched.drained
+
+
+def test_deadline_timeout_mid_flight_frees_slot(dense_setup):
+    """An e2e deadline expiring mid-decode finishes the request with
+    status="timed_out", keeps the partial tokens, and frees the slot
+    for the next queued request on the same tick."""
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    clk = FakeClock()
+    sched = ContinuousBatchingScheduler(runtime, n_slots=1, cache_len=128,
+                                        clock=clk, sleep=clk.sleep)
+    sched.submit(Request(rid=0, prompt=[1] * 40, max_new=64,
+                         deadline_ms=1000.0))
+    sched.submit(Request(rid=1, prompt=[2] * 40, max_new=2))
+    for _ in range(4):
+        sched.tick()                       # prefill + a few decode steps
+    assert sched.active and sched.finished == {}
+    clk.t = 2.0                            # past the 1s deadline
+    sched.tick()
+    out = sched.finished[0]
+    assert out.status == "timed_out" and "deadline" in out.reason
+    assert 0 < len(out.tokens) < 64        # partial output kept
+    assert out.ttft_seconds is not None
+    # rid 1 seated in the freed slot on that same tick
+    assert any(st.req.rid == 1 for st in sched.active.values())
+    sched.run()
+    assert sched.finished[1].status == "ok"
+    assert len(sched.finished[1].tokens) == 2
+    assert sched.pool.total_acquires == sched.pool.total_releases == 2
+    assert sched.n_timed_out == 1
+
+
+def test_ttft_deadline_expires_queued_request(dense_setup):
+    """A ttft deadline only binds before the first token: it expires a
+    QUEUED request but never an actively decoding one."""
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    clk = FakeClock()
+    sched = ContinuousBatchingScheduler(runtime, n_slots=1, cache_len=128,
+                                        clock=clk, sleep=clk.sleep)
+    sched.submit(Request(rid=0, prompt=[1] * 40, max_new=8,
+                         ttft_deadline_ms=10_000.0))
+    sched.submit(Request(rid=1, prompt=[2] * 40, max_new=8,
+                         ttft_deadline_ms=500.0))
+    sched.tick()                           # rid 0 seated, rid 1 queued
+    clk.t = 1.0                            # rid 1's ttft window gone
+    sched.tick()
+    assert sched.finished[1].status == "timed_out"
+    assert sched.finished[1].tokens == []
+    assert sched.finished[1].ttft_seconds is None
+    sched.run()
+    assert sched.finished[0].status == "ok"   # its own window: 10s
+
+
+def test_cancel_queued_and_active(dense_setup):
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    sched = ContinuousBatchingScheduler(runtime, n_slots=1, cache_len=128)
+    sched.submit(Request(rid=0, prompt=[1] * 40, max_new=32))
+    sched.submit(Request(rid=1, prompt=[2] * 40, max_new=4))
+    sched.tick()                           # rid 0 active, rid 1 queued
+    assert sched.cancel(1)                 # queued: zero work done
+    assert sched.finished[1].status == "cancelled"
+    assert sched.finished[1].tokens == []
+    sched.tick()
+    assert sched.cancel(0, reason="client went away")   # active
+    out = sched.finished[0]
+    assert out.status == "cancelled" and out.reason == "client went away"
+    assert out.tokens                      # partial decode kept
+    assert not sched.cancel(0)             # cancelling twice: no-op
+    assert not sched.cancel(99)            # unknown rid
+    assert sched.drained
+    assert sched.pool.n_free == 1
+    assert sched.pool.total_acquires == sched.pool.total_releases == 1
+    assert sched.n_cancelled == 2
+
+
+def test_drive_stream_cancel_after_s(dense_setup):
+    """Trace replay of a client disconnect: drive_stream cancels the
+    request `cancel_after_s` seconds after its arrival."""
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    clk = FakeClock()
+    sched = ContinuousBatchingScheduler(runtime, n_slots=2, cache_len=256,
+                                        clock=clk, sleep=clk.sleep)
+
+    def advance(_):
+        clk.t += 0.1                       # 10 ticks/simulated second
+
+    reqs = [Request(rid=0, prompt=[1] * 40, max_new=200,
+                    cancel_after_s=1.0),
+            Request(rid=1, prompt=[2] * 40, max_new=4)]
+    drive_stream(sched, reqs, after_tick=advance)
+    assert sched.finished[0].status == "cancelled"
+    assert "cancel_after_s" in sched.finished[0].reason
+    assert len(sched.finished[0].tokens) < 200
+    assert sched.finished[1].status == "ok"
+    assert sched.pool.total_acquires == sched.pool.total_releases
+
+
+@pytest.mark.parametrize("kv_layout", ["slot", "paged"])
+def test_overload_degrades_new_admissions(dense_setup, kv_layout):
+    """Sustained overload walks the hysteretic ladder and routes new
+    admissions to sparser tiers with ZERO recompilation; the realized
+    tier is reported on RequestOutput.effort. When load drains the
+    controller de-escalates back toward dense."""
+    cfg, params = dense_setup
+    cfg = cfg.with_(kv_layout=kv_layout)
+    plans = tuple(FF.resolve_plan(cfg, effort=e)
+                  for e in ("dense", "balanced", "turbo"))
+    runtime = make_runtime(cfg, params, plans=plans)
+    ctl = AdmissionController(plans, AdmissionConfig(
+        queue_high=3, queue_low=0, dwell_ticks=1))
+    sched = ContinuousBatchingScheduler(runtime, n_slots=2, cache_len=128,
+                                        prefill_batch=1, admission=ctl)
+    counts0 = sched.warmup()
+    assert ctl.level == 0                  # warmup reset the controller
+    prompts = make_prompts(cfg, [40] * 10)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p, max_new=4))
+    outs = sched.run()
+    assert len(outs) == 10
+    assert all(o.status == "ok" for o in outs.values())
+    assert sched.n_degraded > 0
+    efforts = {o.effort for o in outs.values()}
+    assert efforts - {"dense"}             # some ran sparser than asked
+    assert ctl.peak_level > 0
+    assert ctl.level < ctl.peak_level      # drained: de-escalated
+    counts1 = runtime.compile_counts()
+    if None not in counts0.values():
+        assert counts1 == counts0, (counts0, counts1)
+
+
+def test_explicit_turbo_not_upgraded_under_load(dense_setup):
+    """Degradation is one-way: a request explicitly asking for turbo
+    keeps turbo at every level, and the pinned tier survives."""
+    cfg, params = dense_setup
+    plans = tuple(FF.resolve_plan(cfg, effort=e)
+                  for e in ("dense", "balanced", "turbo"))
+    runtime = make_runtime(cfg, params, plans=plans)
+    ctl = AdmissionController(plans, AdmissionConfig(
+        queue_high=1, queue_low=0, dwell_ticks=0))
+    sched = ContinuousBatchingScheduler(runtime, n_slots=1, cache_len=128,
+                                        prefill_batch=1, admission=ctl)
+    for i in range(4):
+        sched.submit(Request(rid=i, prompt=[1] * 40, max_new=2,
+                             effort="turbo"))
+    outs = sched.run()
+    assert all(o.effort == "turbo" for o in outs.values())
+    assert sched.n_degraded == 0           # turbo -> turbo is no change

@@ -1,0 +1,197 @@
+"""Deterministic chaos suite: the scheduler survives seed-driven fault
+injection (forced preemptions, synthetic pool pressure, slow ticks,
+random aborts) on BOTH KV layouts with
+
+  * no slot/page leaks — total_releases == total_acquires, free lists
+    whole, page tables zeroed;
+  * liveness — every submitted request reaches a terminal status
+    (the oldest always progresses, so chaos runs drain);
+  * output transparency — surviving requests' greedy outputs are
+    bit-identical to the fault-free run;
+  * flat compile counts — chaos churn never triggers recompilation;
+
+plus the stall watchdog (a livelocked scheduler raises with a full
+state dump instead of spinning) and schedule determinism (same seed
+-> same fault schedule -> same outputs and stats)."""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_config
+from repro.models.registry import get_model
+from repro.nn.param import init_params
+from repro.serving import (ContinuousBatchingScheduler, FaultInjector,
+                           Request, SchedulerStallError)
+from repro.serving.runtime import make_runtime
+
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+    return cfg, params
+
+
+def make_prompts(cfg, lengths, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, int(n)).tolist() for n in lengths]
+
+
+def build(dense_setup, kv_layout, faults=None, n_slots=3):
+    cfg, params = dense_setup
+    cfg = cfg.with_(kv_layout=kv_layout,
+                    kv_page_size=PAGE if kv_layout == "paged" else None)
+    runtime = make_runtime(cfg, params)
+    sched = ContinuousBatchingScheduler(runtime, n_slots=n_slots,
+                                        cache_len=160, prefill_batch=2,
+                                        faults=faults)
+    counts0 = sched.warmup()
+    return sched, counts0
+
+
+def submit_all(sched, cfg):
+    prompts = make_prompts(cfg, [40, 70, 33, 90, 64, 50, 25, 58])
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p, max_new=6,
+                             eos_id=(3 if i % 3 == 0 else None)))
+    return len(prompts)
+
+
+def assert_pools_whole(sched):
+    pool = sched.pool
+    assert pool.total_acquires == pool.total_releases, \
+        f"slot leak: {pool.total_acquires} acquired, " \
+        f"{pool.total_releases} released"
+    assert pool.n_free == sched.n_slots
+    if sched.paged:
+        assert pool.total_page_allocs == pool.total_page_frees, \
+            f"page leak: {pool.total_page_allocs} allocated, " \
+            f"{pool.total_page_frees} freed"
+        assert pool.n_free_pages == pool.n_pages - 1
+        assert (pool.page_table == 0).all()
+        assert (pool.allocated == 0).all()
+
+
+@pytest.mark.parametrize("kv_layout", ["slot", "paged"])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_chaos_run_invariants(dense_setup, kv_layout, seed):
+    """Every seeded fault schedule must leave the scheduler's contract
+    intact: terminal status for all, no leaks, survivors bit-identical
+    to the fault-free run, compile counts flat."""
+    cfg, _ = dense_setup
+    # fault-free reference
+    ref, _ = build(dense_setup, kv_layout)
+    n = submit_all(ref, cfg)
+    ref_outs = ref.run()
+    # chaos run: aggressive probabilities so every fault class gets
+    # real airtime within a short stream
+    inj = FaultInjector(seed=seed, p_preempt=0.4, p_pressure=0.4,
+                        p_slow=0.3, p_abort=0.15, pressure_frac=0.6,
+                        pressure_hold_ticks=3, max_aborts=2)
+    sched, counts0 = build(dense_setup, kv_layout, faults=inj)
+    submit_all(sched, cfg)
+    outs = sched.run()
+    assert sorted(outs) == list(range(n))          # liveness: all finish
+    for rid, out in outs.items():
+        assert out.status in ("ok", "cancelled"), (rid, out.status)
+        if out.status == "ok":
+            # output transparency: preemption/pressure churn never
+            # changes what a surviving request generates
+            assert out.tokens == ref_outs[rid].tokens, rid
+    assert {o.rid for o in outs.values()
+            if o.status == "cancelled"} == set(inj.aborted_rids)
+    assert_pools_whole(sched)
+    assert inj.stats()["outstanding_stolen"] == 0
+    counts1 = sched.runtime.compile_counts()
+    if None not in counts0.values():
+        assert counts1 == counts0, (counts0, counts1)
+
+
+@pytest.mark.parametrize("kv_layout", ["slot", "paged"])
+def test_chaos_faults_actually_fire(dense_setup, kv_layout):
+    """The invariants above are only meaningful if the injector is
+    genuinely perturbing the run — with these probabilities over a
+    long stream every fault class must fire at least once."""
+    cfg, _ = dense_setup
+    inj = FaultInjector(seed=7, p_preempt=0.5, p_pressure=0.5,
+                        p_slow=0.5, p_abort=0.2, max_aborts=2)
+    sched, _ = build(dense_setup, kv_layout, faults=inj)
+    submit_all(sched, cfg)
+    sched.run()
+    s = inj.stats()
+    assert s["forced_preempts"] > 0
+    assert s["pressure_events"] > 0
+    assert s["slow_ticks"] > 0
+    assert s["aborts"] > 0
+    assert sched.n_preemptions >= s["forced_preempts"]
+    assert sched.n_cancelled == s["aborts"]
+
+
+def test_chaos_schedule_is_deterministic(dense_setup):
+    """Same seed -> bit-identical fault schedule, outputs, and stats
+    (a failing chaos run replays exactly)."""
+    cfg, _ = dense_setup
+
+    def one(seed):
+        inj = FaultInjector(seed=seed, p_preempt=0.4, p_pressure=0.4,
+                            p_slow=0.3, p_abort=0.15, max_aborts=2)
+        sched, _ = build(dense_setup, "paged", faults=inj)
+        submit_all(sched, cfg)
+        outs = sched.run()
+        return ({r: (o.status, tuple(o.tokens)) for r, o in outs.items()},
+                inj.stats())
+
+    outs_a, stats_a = one(11)
+    outs_b, stats_b = one(11)
+    assert outs_a == outs_b
+    assert stats_a == stats_b
+    outs_c, stats_c = one(12)              # and the seed actually matters
+    assert stats_c != stats_a or outs_c != outs_a
+
+
+def test_warmup_suspends_fault_injection(dense_setup):
+    """Chaos must not perturb compilation: the injector draws nothing
+    during warmup, so warmup still pre-compiles every executable and
+    the chaos stream starts from a clean, fault-free compile state."""
+    inj = FaultInjector(seed=0, p_preempt=1.0, p_pressure=1.0,
+                        p_slow=1.0, p_abort=1.0)
+    sched, _ = build(dense_setup, "slot", faults=inj)
+    assert inj.stats()["forced_preempts"] == 0
+    assert inj.stats()["slow_ticks"] == 0
+    assert inj.stats()["clock_offset_s"] == 0.0
+    assert sched.faults is inj             # re-attached after warmup
+
+
+def test_stall_watchdog_raises_with_state_dump(dense_setup):
+    """A scheduler that can make no progress (here: every slot stolen,
+    so admission starves forever) must raise SchedulerStallError with a
+    full state dump instead of spinning."""
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    sched = ContinuousBatchingScheduler(runtime, n_slots=1, cache_len=128,
+                                        stall_ticks=8)
+    stolen = sched.pool.steal_free_slots(1)
+    sched.submit(Request(rid=0, prompt=[1] * 40, max_new=4))
+    with pytest.raises(SchedulerStallError) as ei:
+        sched.run()
+    state = ei.value.state
+    assert state["queue"][0]["rid"] == 0
+    assert state["pool"]["n_free_slots"] == 0
+    assert "no progress" in str(ei.value)
+    sched.pool.restore_free_slots(stolen)
+    sched.run()                            # unblocked: drains normally
+    assert sched.finished[0].status == "ok"
+
+
+def test_run_max_ticks_raises_with_state_dump(dense_setup):
+    """run() exhausting its tick budget is the same loud failure."""
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)
+    sched = ContinuousBatchingScheduler(runtime, n_slots=1, cache_len=128)
+    sched.submit(Request(rid=0, prompt=[1] * 40, max_new=50))
+    with pytest.raises(SchedulerStallError) as ei:
+        sched.run(max_ticks=3)
+    assert ei.value.state["counters"]["finished"] == 0
+    assert "not drained" in str(ei.value)

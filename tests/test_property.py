@@ -145,3 +145,78 @@ def test_sparse_ffn_subset_monotone(seed):
     y_dense = S.ffn_dense(params, x)
     np.testing.assert_allclose(np.asarray(y_all), np.asarray(y_dense),
                                rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------- serving churn (robustness)
+
+_CHURN_RUNTIMES = {}
+
+
+def _churn_runtime(kv_layout):
+    """One shared runtime per layout across hypothesis examples: the
+    jitted executables live on the runtime, so only the first example
+    pays compilation."""
+    if kv_layout not in _CHURN_RUNTIMES:
+        from repro.configs import get_config
+        from repro.models.registry import get_model
+        from repro.nn.param import init_params
+        from repro.serving.runtime import make_runtime
+        cfg = get_config("tinyllama-1.1b", reduced=True)
+        if kv_layout == "paged":
+            cfg = cfg.with_(kv_layout="paged", kv_page_size=8)
+        params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+        _CHURN_RUNTIMES[kv_layout] = (cfg, make_runtime(cfg, params))
+    return _CHURN_RUNTIMES[kv_layout]
+
+
+@pytest.mark.parametrize("kv_layout", ["slot", "paged"])
+@given(seed=st.integers(min_value=0, max_value=1 << 16),
+       ops=st.lists(st.sampled_from(
+           ["tick", "tick", "tick", "advance", "cancel0", "cancel1",
+            "cancel2", "cancel3", "preempt"]),
+           min_size=4, max_size=24))
+@settings(max_examples=8, deadline=None)
+def test_scheduler_churn_never_leaks(kv_layout, seed, ops):
+    """ANY interleaving of ticks, client cancels, clock jumps (firing
+    deadline timeouts), forced preemptions, and EOS early-stops must
+    end fully accounted on both KV layouts: total_releases ==
+    total_acquires, the free list exactly its initial set, and — paged
+    — every page back on the heap with zeroed tables."""
+    from repro.serving import ContinuousBatchingScheduler, Request
+    cfg, runtime = _churn_runtime(kv_layout)
+    clk = [0.0]
+    sched = ContinuousBatchingScheduler(
+        runtime, n_slots=2, cache_len=96, prefill_batch=2,
+        clock=lambda: clk[0],
+        sleep=lambda dt: clk.__setitem__(0, clk[0] + dt))
+    rng = np.random.default_rng(seed)
+    for i in range(5):
+        sched.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab,
+                                int(rng.integers(8, 80))).tolist(),
+            max_new=int(rng.integers(1, 5)),
+            eos_id=(3 if rng.random() < 0.3 else None),
+            deadline_ms=(float(rng.integers(50, 2000))
+                         if rng.random() < 0.4 else None)))
+    for op in ops:
+        if op == "tick" and not sched.drained:
+            sched.tick()
+        elif op == "advance":
+            clk[0] += 0.25
+        elif op.startswith("cancel"):
+            sched.cancel(int(op[-1]))      # False for done/shed: fine
+        elif op == "preempt" and sched.active:
+            sched._preempt(max(sched.active.values(),
+                               key=lambda s: s.seq))
+    sched.run()
+    pool = sched.pool
+    assert len(sched.finished) == 5        # every request terminal
+    assert pool.total_acquires == pool.total_releases
+    free = pool._free if kv_layout == "slot" else pool._free_slots
+    assert sorted(free) == [0, 1]          # free-list delta empty
+    if kv_layout == "paged":
+        assert pool.total_page_allocs == pool.total_page_frees
+        assert pool.n_free_pages == pool.n_pages - 1
+        assert (pool.page_table == 0).all()
+        assert (pool.allocated == 0).all()

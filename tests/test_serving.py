@@ -342,15 +342,23 @@ def test_runtime_dispatch(dense_setup):
         make_runtime(cfg.with_(arch="ssm"), params)
 
 
-def test_scheduler_rejects_oversized_request(dense_setup):
+def test_scheduler_sheds_oversized_request(dense_setup):
+    """A well-formed request the pool can NEVER hold is shed at submit
+    (status="shed" with a reason, zero device work) instead of raising
+    — one oversized record no longer kills a whole trace replay.
+    Malformed requests (caller bugs) still raise."""
     cfg, params = dense_setup
     runtime = make_runtime(cfg, params)
     sched = ContinuousBatchingScheduler(runtime, n_slots=1, cache_len=64)
-    with pytest.raises(ValueError):
-        sched.submit(Request(rid=0, prompt=list(range(1, 61)),
-                             max_new=32))
+    sched.submit(Request(rid=0, prompt=list(range(1, 61)), max_new=32))
+    out = sched.finished[0]
+    assert out.status == "shed" and out.tokens == []
+    assert "cache positions" in out.reason
+    assert sched.n_shed == 1 and not sched.queue
     with pytest.raises(ValueError):
         sched.submit(Request(rid=1, prompt=[]))
+    with pytest.raises(ValueError):
+        sched.submit(Request(rid=2, prompt=[1, 2], max_new=0))
 
 
 def test_temperature_sampling_stays_in_vocab(dense_setup):
