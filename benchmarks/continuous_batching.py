@@ -23,7 +23,10 @@ the machine-readable ``results/BENCH_prefill.json`` sections
 batched-vs-single-prefill ratios, measured FastForward-vs-dense
 speedup), ``kv_memory`` (slot vs paged KV pool at equal device
 bytes: peak concurrent requests, peak pages, stranded tokens at the
-occupancy peak, preemptions) and ``overload`` (goodput = fraction of
+occupancy peak, preemptions), ``prefix_sharing`` (refcounted
+prefix cache OFF vs ON on the same paged heap: hit rate, prefill
+blocks skipped, sustained concurrency and TTFT p50 both ways,
+bit-identity of greedy outputs) and ``overload`` (goodput = fraction of
 requests finishing ok within deadline at 1x/2x/4x the sustainable
 arrival rate, degrade-on vs degrade-off) so the perf trajectory is
 tracked PR-over-PR.
@@ -269,6 +272,143 @@ def _run_kv_memory(cfg, params):
     return section
 
 
+# ---------------------------------------- prefix sharing (refcounted)
+
+PS_PAGE = 16                  # tokens per page (npb = 2)
+PS_GROUPS = 2                 # distinct "system prompts"
+PS_GROUP_SIZE = 6             # requests per group (1 leader + 5)
+PS_PREFIX_BLOCKS = 4          # shared prefix: 128 tok = 8 pages
+PS_TAIL_BLOCKS = 1            # unique tail: 32 tok
+PS_MAX_NEW = 24               # decode dwell: followers stay in flight
+                              # long enough for concurrency to mean
+                              # something
+PS_POOL_PAGES = 40            # usable heap pages, BOTH runs: at 12
+                              # pages/request full footprint, sharing
+                              # off sustains ~3 in flight; sharing on
+                              # charges only the ~4 unshared pages
+
+
+def _prefix_sharing_workload(cfg, seed=7):
+    """Shared-system-prompt traffic: PS_GROUPS families, each one
+    leader then a simultaneous burst of followers with identical
+    128-token prefixes and unique 32-token tails. Leaders get ~0.4 s
+    of air so their prefix blocks are published before the follower
+    burst asks for them — the steady state a production prefix cache
+    serves. The burst lands together so sustained concurrency is
+    limited ONLY by what the heap admits."""
+    rng = np.random.default_rng(seed)
+    N = cfg.ff.block_size
+    prompts, arrivals = [], []
+    for g in range(PS_GROUPS):
+        grng = np.random.default_rng((seed, 100 + g))
+        prefix = grng.integers(0, cfg.vocab,
+                               PS_PREFIX_BLOCKS * N).tolist()
+        t0 = g * 0.9
+        for j in range(PS_GROUP_SIZE):
+            tail = rng.integers(0, cfg.vocab, PS_TAIL_BLOCKS * N).tolist()
+            prompts.append(prefix + tail)
+            arrivals.append(t0 if j == 0 else t0 + 0.4)
+    order = np.argsort(arrivals, kind="stable")
+    return ([prompts[i] for i in order],
+            [PS_MAX_NEW] * len(prompts),
+            np.array([arrivals[i] for i in order]))
+
+
+def _run_prefix_sharing(cfg, params):
+    """Refcounted prefix sharing OFF vs ON on the SAME paged heap (equal
+    pool bytes, equal workload). Off: every admission charges its full
+    12-page footprint, so the 40-page heap sustains ~3 requests and
+    followers queue behind strangers' prefill. On: followers map the
+    leader's published prefix read-only, charge only the ~4 unshared
+    pages, and start prefill at the first unshared block. Writes the
+    `prefix_sharing` section: hit rate, blocks skipped, pages saved at
+    peak, TTFT p50 and sustained concurrency both ways, plus the
+    bit-identity and compile-flatness acceptance booleans."""
+    cfg = cfg.with_(kv_layout="paged")
+    prompts, max_news, arrivals = _prefix_sharing_workload(cfg)
+    N = cfg.ff.block_size
+    cache_len = -(-max(len(p) for p in prompts) // N) * N + PS_MAX_NEW
+    requests = [Request(rid=i, prompt=prompts[i], max_new=max_news[i],
+                        arrival_time=arrivals[i])
+                for i in range(len(prompts))]
+
+    def drive(prefix_cache):
+        runtime = make_runtime(cfg, params)
+        sched = ContinuousBatchingScheduler(
+            runtime, n_slots=len(requests), cache_len=cache_len,
+            prefill_batch=PREFILL_BATCH, page_size=PS_PAGE,
+            n_pages=PS_POOL_PAGES + 1, prefix_cache=prefix_cache)
+        counts0 = sched.warmup()
+        wall = drive_stream(sched, requests)
+        flat = None
+        if None not in counts0.values():
+            flat = runtime.compile_counts() == counts0
+        outs = sched.finished
+        assert len(outs) == len(requests)
+        gen = sum(len(o.tokens) for o in outs.values())
+        ttfts = np.array([outs[r.rid].ttft_seconds for r in requests])
+        return sched, wall, gen, ttfts, flat
+
+    off_sched, off_wall, off_gen, off_ttft, off_flat = drive(False)
+    on_sched, on_wall, on_gen, on_ttft, on_flat = drive(True)
+
+    identical = all(
+        off_sched.finished[r.rid].tokens == on_sched.finished[r.rid].tokens
+        for r in requests)
+    ps = on_sched.prefix_stats()
+    pool_on, pool_off = on_sched.pool, off_sched.pool
+    section = {
+        "config": {"page_size": PS_PAGE, "usable_pages": PS_POOL_PAGES,
+                   "cache_len": cache_len, "groups": PS_GROUPS,
+                   "group_size": PS_GROUP_SIZE,
+                   "prefix_tokens": PS_PREFIX_BLOCKS * N,
+                   "tail_tokens": PS_TAIL_BLOCKS * N,
+                   "max_new": PS_MAX_NEW, "requests": len(requests)},
+        "sharing_off": {
+            "max_concurrent_requests": pool_off.max_in_use,
+            "peak_pages_in_use": pool_off.max_pages_in_use,
+            "ttft_p50_ms": round(float(np.percentile(off_ttft, 50)) * 1e3,
+                                 2),
+            "tokens_per_s": round(off_gen / off_wall, 1),
+            "prefill_blocks": off_sched.n_prefill_blocks,
+        },
+        "sharing_on": {
+            "max_concurrent_requests": pool_on.max_in_use,
+            "peak_pages_in_use": pool_on.max_pages_in_use,
+            "ttft_p50_ms": round(float(np.percentile(on_ttft, 50)) * 1e3,
+                                 2),
+            "tokens_per_s": round(on_gen / on_wall, 1),
+            "prefill_blocks": on_sched.n_prefill_blocks,
+            "hit_rate": round(ps["hit_rate"], 3),
+            "hits": ps["hits"], "lookups": ps["lookups"],
+            "requests_hit": ps["requests_hit"],
+            "blocks_skipped": ps["blocks_skipped"],
+            "pages_shared": ps["pages_shared"],
+            "pages_published": ps["pages_published"],
+            "cow_pages": ps["cow_pages"],
+            "evictions": ps["evictions"],
+        },
+        # acceptance: from the SAME heap bytes, sharing must buy
+        # strictly more sustained concurrency and a lower TTFT p50
+        # while keeping greedy outputs bit-identical and the jit cache
+        # flat after warmup
+        "sharing_more_concurrent":
+            bool(pool_on.max_in_use > pool_off.max_in_use),
+        "sharing_lower_ttft_p50": bool(
+            np.percentile(on_ttft, 50) < np.percentile(off_ttft, 50)),
+        "hit_rate_nonzero": bool(ps["hit_rate"] > 0),
+        "outputs_bit_identical": bool(identical),
+        "compile_counts_flat": (None if off_flat is None or on_flat is None
+                                else bool(off_flat and on_flat)),
+        "note": ("equal-pool-bytes A/B on the refcounted paged heap; "
+                 "followers map the leader's published prefix read-only "
+                 "(copy-on-write only at a misaligned tail), so pages "
+                 "saved = prefix pages x (group size - 1) at peak"),
+    }
+    write_bench_json("prefix_sharing", section)
+    return section
+
+
 # --------------------------------------------- overload (degrade A/B)
 
 OV_REQUESTS = 40
@@ -448,6 +588,7 @@ def run(csv=True, requests=REQUESTS):
     })
 
     kv = _run_kv_memory(cfg, params)
+    px = _run_prefix_sharing(cfg, params)
     ov = _run_overload(cfg, params)
 
     rows = [
@@ -493,6 +634,27 @@ def run(csv=True, requests=REQUESTS):
          f"{kv['paged']['stranded_tokens_at_peak']} tok, "
          f"{kv['paged']['preemptions']} preemptions "
          f"(target: > slot concurrency)"),
+        ("prefix_hit_rate",
+         f"{px['sharing_on']['hit_rate']:.2f}",
+         f"{px['sharing_on']['hits']}/{px['sharing_on']['lookups']} "
+         f"admissions mapped a cached prefix, "
+         f"{px['sharing_on']['blocks_skipped']} prefill blocks skipped "
+         f"({px['sharing_off']['prefill_blocks']} -> "
+         f"{px['sharing_on']['prefill_blocks']})"),
+        ("prefix_max_concurrent_on",
+         f"{px['sharing_on']['max_concurrent_requests']}",
+         f"vs {px['sharing_off']['max_concurrent_requests']} sharing "
+         f"off at the same {px['config']['usable_pages']}-page heap; "
+         f"peak pages {px['sharing_on']['peak_pages_in_use']} vs "
+         f"{px['sharing_off']['peak_pages_in_use']} "
+         f"(target: strictly more requests in flight)"),
+        ("prefix_ttft_p50_ms_on",
+         f"{px['sharing_on']['ttft_p50_ms']:.1f}",
+         f"vs {px['sharing_off']['ttft_p50_ms']:.1f} sharing off "
+         f"(target: lower — followers skip the shared prefill)"),
+        ("prefix_outputs_bit_identical",
+         f"{px['outputs_bit_identical']}",
+         "acceptance: greedy outputs identical sharing on vs off"),
         ("overload_goodput_2x_degrade_on",
          f"{ov['runs']['2x']['degrade_on']['goodput']:.3f}",
          f"deadline-met fraction at 2x offered rate, "

@@ -10,11 +10,16 @@ a row owns straight out of the shared pool.
 
 Grid: (B, max_pages), online softmax over the page axis with running
 max / sum / accumulator scratch in VMEM (flash-attention recurrence).
-Pages entirely past a row's decode position are skipped via pl.when (no
-MXU work; their DMA still lands — a production version wants DMA
-skipping, same note as the grouped-matmul kernel). GQA is computed
-grouped: q [H, dh] reshaped to [Kv, rep, dh] against the page's
-[psz, Kv, dh] keys.
+Pages entirely past a row's decode position (the unallocated null-page
+tail) or fully behind the sliding window are DEAD: their compute is
+skipped via pl.when AND their DMA is elided via the index-map clamp
+used by the sparse-FFN / block-sparse-attention dead slots — a dead
+grid step's K/V index map re-requests the nearest LIVE page's slab, and
+Pallas skips the copy when consecutive steps ask for the same block.
+Dead pages' bytes therefore never cross HBM->VMEM (the bit-test points
+dead table entries at a poisoned page and the output is unchanged).
+GQA is computed grouped: q [H, dh] reshaped to [Kv, rep, dh] against
+the page's [psz, Kv, dh] keys.
 
 VMEM working set per step: q (1, H, dh), one K page + one V page
 (1, psz, Kv, dh), scratch m/l (H, 1) + acc (H, dh).
@@ -105,6 +110,23 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, positions, *,
     assert H % Kv == 0
 
     grid = (B, max_pages)
+
+    def kv_index(b, j, tbl, pos):
+        # DMA-skip dead pages (same clamp idiom as the sparse-FFN /
+        # block-sparse-attention dead slots): clamp the page-axis step
+        # into the row's LIVE range [first windowed page, pos // psz].
+        # Dead steps re-request the boundary live page — consecutive
+        # identical block indices elide the copy — so bytes of pages
+        # past the decode position (null tail) or fully behind the
+        # window never cross HBM->VMEM. Compute stays gated by the
+        # matching pl.when(relevant) in the kernel body.
+        live_hi = pos[b] // psz
+        jj = jnp.minimum(j, live_hi)
+        if window:
+            live_lo = jnp.maximum((pos[b] - window + 1) // psz, 0)
+            jj = jnp.maximum(jj, live_lo)
+        return (tbl[b, jj], 0, 0, 0)
+
     kernel = pl.pallas_call(
         functools.partial(_paged_decode_kernel, psz=psz, kv_heads=Kv,
                           scale=1.0 / (dh ** 0.5), window=window),
@@ -113,10 +135,8 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, positions, *,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, H, dh), lambda b, j, tbl, pos: (b, 0, 0)),
-                pl.BlockSpec((1, psz, Kv, dh),
-                             lambda b, j, tbl, pos: (tbl[b, j], 0, 0, 0)),
-                pl.BlockSpec((1, psz, Kv, dh),
-                             lambda b, j, tbl, pos: (tbl[b, j], 0, 0, 0)),
+                pl.BlockSpec((1, psz, Kv, dh), kv_index),
+                pl.BlockSpec((1, psz, Kv, dh), kv_index),
             ],
             out_specs=pl.BlockSpec((1, H, dh),
                                    lambda b, j, tbl, pos: (b, 0, 0)),

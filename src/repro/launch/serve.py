@@ -29,6 +29,17 @@ pages, allocation is lazy per prefill block, and an oversubscribed heap
       --reduced --stream --requests 16 --kv-layout paged \
       --page-size 16 --slots 8 --pool-pages 48
 
+Prefix sharing (--prefix-cache, paged layout only): finished prompt
+blocks are published to a host-side prefix index; later requests with
+the same page-aligned (prompt-prefix, SparsityPlan) key map those pages
+read-only (refcounted), are charged only their unshared footprint at
+admission, and start prefill at the first unshared block. Greedy
+outputs are bit-identical with sharing on or off:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --stream --kv-layout paged --prefix-cache \
+      --trace benchmarks/traces/sample_shared_prefix.jsonl
+
 Real-traffic trace replay (--trace): arrival-time / prompt-len /
 gen-len records (jsonl, see repro.serving.trace) drive the SAME stream
 loop as the Poisson simulator:
@@ -62,6 +73,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 
 import numpy as np
@@ -90,11 +102,16 @@ def build_params(cfg, checkpoint=None):
     return init_params(model.specs(cfg), jax.random.key(0))
 
 
-def collect_attn_probs(params, cfg, tokens):
-    """One dense forward pass collecting per-layer post-softmax
-    attention probs [L, B, H, T, T] — the Eq. 23 calibration input for
-    `calibrate_layer_importance`. Offline per-layer python loop (like
-    benchmarks.common.capture_ffn_inputs), never on the serving path."""
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _attn_probs_pass(params, cfg, tokens):
+    """Jitted Eq. 23 capture: ONE compiled forward pass whose lax.scan
+    over the stacked layer params emits every layer's post-softmax
+    attention probs [L, B, H, T, T]. cfg is a frozen (hashable)
+    dataclass, so it rides as a static argument; the moe/dense FFN
+    branch is python-static (stacked param structure is uniform across
+    layers). One compile per calibration prompt SHAPE — fine offline,
+    and ~n_layers fewer dispatches per prompt than the old per-layer
+    python loop."""
     from repro.models import dense as D
     from repro.nn import attention as A
     from repro.nn import layers as L
@@ -102,31 +119,42 @@ def collect_attn_probs(params, cfg, tokens):
     x = L.embed(params["embed"], tokens).astype(cfg.dtype)
     B, T = tokens.shape
     pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
-    probs_all = []
-    for i in range(cfg.n_layers):
-        lp = jax.tree.map(lambda a: a[i], params["layers"])
+    mask = A.causal_mask(T, T)
+    is_moe = "moe" in params["layers"]
+    if is_moe:
+        from repro.models import moe as M
+
+    def layer(x, lp):
         xn = D.apply_norm(cfg, lp["ln1"], x)
         q = A.project_q(lp["attn"], xn, pos, cfg.rope_theta)
         k, v = A.project_kv(lp["attn"], xn, pos, cfg.rope_theta)
-        mask = A.causal_mask(T, T)
         Kv = k.shape[2]
         rep = q.shape[2] // Kv
         qg = q.reshape(B, T, Kv, rep, -1)
         s = jnp.einsum("btgrk,bsgk->bgrts", qg, k) / np.sqrt(q.shape[-1])
         s = jnp.where(mask, s, -1e30)
         p = jax.nn.softmax(s, axis=-1)                  # [B,Kv,rep,T,T]
-        probs_all.append(p.reshape(B, -1, T, T))
         o = jnp.einsum("bgrts,bsgk->btgrk", p.astype(v.dtype), v)
         o = o.reshape(B, T, q.shape[2], -1)
         x = x + A.output_proj(lp["attn"], o)
         xn2 = D.apply_norm(cfg, lp["ln2"], x)
-        if "moe" in lp:
-            from repro.models import moe as M
+        if is_moe:
             y, _ = M.moe_block(lp["moe"], cfg, xn2, mode="dense")
             x = x + y.astype(x.dtype)
         else:
             x = x + FF.ff_dense(lp["ffn"], cfg, xn2).astype(x.dtype)
-    return jnp.stack(probs_all)
+        return x, p.reshape(B, -1, T, T)
+
+    _, probs = jax.lax.scan(layer, x, params["layers"])
+    return probs
+
+
+def collect_attn_probs(params, cfg, tokens):
+    """Per-layer post-softmax attention probs [L, B, H, T, T] — the
+    Eq. 23 calibration input for `calibrate_layer_importance`. Thin
+    wrapper over the jitted single-pass capture (`_attn_probs_pass`);
+    offline only, never on the serving path."""
+    return _attn_probs_pass(params, cfg, jnp.asarray(tokens))
 
 
 def make_prompts(cfg, n, prompt_len, rng):
@@ -231,7 +259,8 @@ def serve_stream(cfg, params, args):
     sched = ContinuousBatchingScheduler(
         runtime, n_slots=args.slots, cache_len=cache_len, seed=args.seed,
         prefill_batch=args.prefill_batch, page_size=args.page_size,
-        n_pages=args.pool_pages, admission=admission, faults=faults)
+        n_pages=args.pool_pages, admission=admission, faults=faults,
+        prefix_cache=args.prefix_cache)
 
     # warmup compiles every entry point through the scheduler's own pool
     counts0 = sched.warmup()
@@ -288,6 +317,15 @@ def serve_stream(cfg, params, args):
               f"{pool.total_page_allocs} / frees {pool.total_page_frees} "
               f"| stranded@peak {pool.stranded_tokens_at_peak} tok | "
               f"preemptions {sched.n_preemptions}")
+    if sched.prefix_index is not None:
+        ps = sched.prefix_stats()
+        print(f"prefix sharing: hit rate {ps['hit_rate']:.0%} "
+              f"({ps['hits']}/{ps['lookups']} admissions) | "
+              f"{ps['requests_hit']} requests skipped "
+              f"{ps['blocks_skipped']} prefill blocks | pages shared "
+              f"{ps['pages_shared']} / published {ps['pages_published']} "
+              f"/ cached now {ps['pages_cached']} | cow {ps['cow_pages']} "
+              f"| evictions {ps['evictions']}")
     sp = sched.sparsity_stats()
     for row in sp["plans"]:
         print(f"sparsity[{row['name']}]: keep/layer "
@@ -356,6 +394,13 @@ def main():
                         "reserved null page (default: full backing — "
                         "smaller values oversubscribe and exercise "
                         "preemption)")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="paged layout: refcounted prefix sharing — "
+                        "admission maps the longest cached page-aligned "
+                        "(prompt, plan) prefix read-only into new "
+                        "requests, charges only the unshared footprint, "
+                        "and skips the covered prefill blocks "
+                        "(serving/prefix_index.py)")
     p.add_argument("--trace", default=None,
                    help="stream mode: replay a jsonl arrival trace "
                         "(see repro.serving.trace) instead of the "
@@ -411,6 +456,10 @@ def main():
         p.error("--trace requires --stream")
     if args.calibrate and not args.stream:
         p.error("--calibrate requires --stream")
+    if args.prefix_cache and cfg.kv_layout != "paged":
+        p.error("--prefix-cache requires --kv-layout paged")
+    if args.prefix_cache and not args.stream:
+        p.error("--prefix-cache requires --stream")
     if ((args.deadline_ms is not None or args.degrade
          or args.chaos_seed is not None) and not args.stream):
         p.error("--deadline-ms/--degrade/--chaos-seed require --stream")

@@ -371,6 +371,16 @@ def attend_decode_ragged(params, x_tok, k_cache, v_cache, positions, *,
 # at the reserved null page 0 — a shared write sink that no mask ever
 # lets a query attend. Page tables are TRACED values (fixed
 # [B, max_pages] int32 shapes), so churning tables never recompile.
+#
+# Ownership is refcounted (serving/page_pool.py): a page may appear in
+# SEVERAL rows' tables when their prompts share a prefix. Writes stay
+# race-free because shared pages are READ-ONLY until copy-on-write
+# detaches them — every scatter below targets either (a) a page its
+# row exclusively owns (fresh allocation or COW copy for the block
+# being prefilled / the decode tail), (b) the null page, or (c) an
+# inactive row's self-copy, which rewrites identical bytes. Pages a
+# request publishes to the prefix index belong to COMPLETED blocks it
+# never rewrites, so sharing adds readers, never writers.
 
 
 def gather_pages(pages, page_table):
@@ -394,13 +404,31 @@ def gather_kv_pages(k_pages, v_pages, page_table):
             gather_pages(v_pages, page_table))
 
 
+def copy_kv_pages(cache, src_pages, dst_pages):
+    """Copy-on-write detach: duplicate page payloads src -> dst across
+    every cache leaf ([L, n_pages, psz, Kv, dh]; page axis 1). The
+    device half of PagedKVPool.cow — a request admitted onto a shared
+    prefix whose tail page it must overwrite (partial-block tail) gets
+    a private bit-identical copy before any write lands.
+
+    src_pages/dst_pages: [W] int32, FIXED width (the scheduler pads
+    with 0 -> 0 null-page self-copies), so every COW batch hits one
+    executable regardless of how many pages actually detach. dst
+    entries are freshly-allocated distinct pages (plus padding zeros
+    writing identical null bytes), so duplicate-index scatter order
+    never matters."""
+    return jax.tree.map(
+        lambda a: a.at[:, dst_pages].set(a[:, src_pages]), cache)
+
+
 def write_kv_rows_paged(k_pages, v_pages, k_new, v_new, page_table, pos0s,
                         active=None):
     """Per-row paged block write: row b's [N] new K/V land on the
     N/psz pages its table maps for [pos0s[b], pos0s[b]+N). The paged
     twin of `write_kv_rows` — but it scatters straight into the POOL
-    (pages are exclusively owned, so live rows never collide), instead
-    of updating a gathered per-row view.
+    (the block being written is backed by exclusively-owned pages —
+    shared prefix pages are read-only until COW — so live rows never
+    collide), instead of updating a gathered per-row view.
 
     k_new/v_new: [B, N, Kv, dh]; page_table: [B, max_pages] int32;
     pos0s: [B] int32 block offsets (block-aligned, so psz | pos0).

@@ -18,7 +18,11 @@ Layering (see ROADMAP.md "Serving architecture"):
       cache_pool.KVSlotPool     slot reuse, free list, per-slot lengths
                                 (cfg.kv_layout="slot", the baseline)
       page_pool.PagedKVPool     block-granular page heap + per-request
-                                page tables (cfg.kv_layout="paged")
+                                page tables (cfg.kv_layout="paged"),
+                                refcounted ownership (prefix sharing)
+      prefix_index.PrefixIndex  host-side (plan, token-chain) trie over
+                                cached pages (prefix_cache=True): prefix
+                                hits skip whole prefill blocks
       runtime.ModelRuntime      jitted prefill_block / decode_step per
                                 model family (dense, MoE) + paged twins
       trace.load_trace          real-traffic jsonl trace replay
@@ -28,6 +32,7 @@ from repro.serving.cache_pool import KVSlotPool
 from repro.serving.engine import Engine, GenerationResult, StaticEngine
 from repro.serving.faults import FaultInjector
 from repro.serving.page_pool import PagedKVPool
+from repro.serving.prefix_index import PrefixIndex
 from repro.serving.runtime import (DenseRuntime, ModelRuntime, MoeRuntime,
                                    make_runtime)
 from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
@@ -39,7 +44,9 @@ __all__ = [
     "AdmissionConfig", "AdmissionController",
     "ContinuousBatchingScheduler", "DenseRuntime", "Engine",
     "FaultInjector", "GenerationResult", "KVSlotPool", "ModelRuntime",
-    "MoeRuntime", "PagedKVPool", "Request", "RequestOutput",
-    "SchedulerStallError", "StaticEngine", "drive_stream", "load_trace",
+    "MoeRuntime", "PagedKVPool", "PrefixIndex", "Request",
+    "RequestOutput",
+    "SchedulerStallError", "StaticEngine", "drive_stream",
+    "load_trace",
     "make_runtime",
 ]

@@ -49,11 +49,13 @@ class AdmissionConfig:
     """Watermarks + hysteresis for the degradation state machine.
 
     queue_high/queue_low: queue-depth watermarks (requests waiting).
-    free_low/free_high:   free-resource-fraction watermarks (free pages
-                          of the paged heap, free slots of the slot
-                          pool). Pressure trips at `free_low`, recovery
-                          requires `free_high` — the band is the
-                          hysteresis.
+    free_low/free_high:   free-resource-fraction watermarks (AVAILABLE
+                          pages of the paged heap — truly free plus
+                          reclaimable cached-idle prefix pages, which
+                          surrender to eviction on demand; free slots
+                          of the slot pool). Pressure trips at
+                          `free_low`, recovery requires `free_high` —
+                          the band is the hysteresis.
     dwell_ticks:          minimum ticks between level changes (both
                           directions), so one bursty tick cannot walk
                           the whole ladder.
@@ -174,6 +176,14 @@ class AdmissionController:
             on every axis (empty queue, widest batch, fastest ticks),
             so a shed here could not have been served in time by ANY
             schedule.
+
+        With the prefix cache on, the scheduler passes the UNSHARED
+        block count — blocks covered by the currently-cached chain run
+        zero prefill ticks, so charging them would shed requests that
+        sharing serves in time. That keeps the bound quasi-provable:
+        coverage can only grow while the request queues (evictions
+        fire only under page pressure, i.e. when the request was
+        waiting anyway), so the bound never over-charges.
 
         Returns None while no tick time has been observed yet (nothing
         is provable about an unmeasured system) or when the request

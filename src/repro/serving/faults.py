@@ -135,6 +135,11 @@ class FaultInjector:
     def _apply_pressure(self, sched) -> None:
         pool = sched.pool
         if sched.paged:
+            # steals only off the FREE list, which under refcounted
+            # ownership holds exactly the refcount-zero uncached pages
+            # — the injector can never steal a page a request still
+            # reads or a cached prefix the index still serves (those
+            # must be evicted by the scheduler first)
             n = int(pool.n_free_pages * self.pressure_frac)
             items = pool.steal_free_pages(n)
             kind = "pages"

@@ -9,9 +9,15 @@ max-cache_len slot up front (KVSlotPool — a short request strands the
 same memory as a 16K-token one), a request holds a PAGE TABLE — a row
 of the host-side [n_slots, max_pages] int32 array — and claims pages
 from the free heap lazily, one prefill block / decode token at a time.
-On completion (or EOS early-stop, or preemption) its pages return to
-the heap individually, so the device bytes a request pins track its
-LIVE length, not its worst case.
+
+Ownership is REFCOUNTED (prefix sharing, vLLM-style prefix cache): a
+page may appear in several slots' tables at once when their prompts
+share a prefix (serving/prefix_index.py maps token chains to pages).
+`release` decrements instead of freeing; a page physically returns to
+the heap only at refcount zero. A refcount-zero page that is still
+CACHED (published in the prefix index) parks on a reclaimable LRU list
+instead — it costs nothing until the heap runs dry, at which point the
+scheduler evicts it (index subtree drop -> `uncache` -> free list).
 
 Invariants the jitted runtime relies on:
 
@@ -19,23 +25,38 @@ Invariants the jitted runtime relies on:
     unallocated table entry points at it, masked writes self-copy into
     it, and no attention mask ever reaches it — it is a shared write
     sink, not data;
-  * a page is owned by at most one slot, so page-table-directed
-    scatters from distinct live rows are write-disjoint;
+  * a page with refcount > 1 (or refcount 1 + cached) is READ-ONLY:
+    writers only ever target exclusively-owned uncached pages (fresh
+    `ensure` growth or `cow` copies) or published pages of their OWN
+    completed blocks they never rewrite, so page-table-directed
+    scatters from distinct live rows remain write-disjoint — the old
+    "one owner per page" disjointness argument survives sharing
+    because shared pages are read-only until copy-on-write detaches
+    them;
   * buffer shapes ([n_pages, psz, Kv, dh] pools, [*, max_pages] tables)
     are fixed — tables/positions are traced values, so a churning
-    request mix (and preemption churn) reuses one executable per entry
-    point: the zero-recompilation invariant survives the paged layout.
+    request mix (and preemption/sharing churn) reuses one executable
+    per entry point: the zero-recompilation invariant survives both
+    the paged layout and prefix sharing.
 
-Host-side metadata (page heap, tables, lengths, stats) lives in plain
-Python/numpy; only the KV pytree is on device. `release` is idempotent
-per slot (same hardening as KVSlotPool): scheduler paths that free a
-request mid-tick (EOS early-stop, preemption) cannot double-count
-stats or double-free pages.
+Host-side metadata (page heap, refcounts, tables, lengths, stats)
+lives in plain Python/numpy; only the KV pytree is on device.
+`release` is idempotent per slot (same hardening as KVSlotPool):
+scheduler paths that free a request mid-tick (EOS early-stop,
+preemption) cannot double-count stats or double-free pages.
+
+Accounting: `total_page_allocs` counts pops off the free list into a
+table (lazy `ensure` growth + `cow` copies); `total_page_frees` counts
+physical returns TO the free list (last-reference release of an
+uncached page, or `uncache` of an idle cached page). Shared mappings
+(`share`) touch neither — so allocs == frees once every request has
+drained AND the prefix index has been cleared, which is exactly the
+leak check the churn tests assert.
 """
 from __future__ import annotations
 
-from collections import deque
-from typing import Optional
+from collections import OrderedDict, deque
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -59,6 +80,13 @@ class PagedKVPool:
         self._free_slots = deque(range(n_slots))
         self._free_pages = deque(range(1, n_pages))   # 0 = null page
         self._held = np.zeros(n_slots, bool)
+        # per-page sharing state: how many slot tables map the page,
+        # and whether the prefix index still holds it (cached pages at
+        # refcount 0 are reclaimable, not free)
+        self.refcount = np.zeros(n_pages, np.int32)
+        self.cached = np.zeros(n_pages, bool)
+        # refcount-0 AND cached, LRU-ordered (front = evict first)
+        self._reclaimable: "OrderedDict[int, None]" = OrderedDict()
         # table entry j of slot s: page holding s's positions
         # [j*psz, (j+1)*psz); 0 (null) where unallocated
         self.page_table = np.zeros((n_slots, max_pages), np.int32)
@@ -72,6 +100,9 @@ class PagedKVPool:
         self.total_page_frees = 0
         self.max_pages_in_use = 0
         self.stranded_tokens_at_peak = 0
+        # prefix-sharing stats
+        self.total_page_shares = 0    # shared mappings handed out
+        self.n_cow_pages = 0          # copy-on-write detaches
 
     @classmethod
     def create(cls, runtime, n_pages: int, page_size: int, n_slots: int,
@@ -94,8 +125,22 @@ class PagedKVPool:
         return len(self._free_pages)
 
     @property
+    def n_reclaimable(self) -> int:
+        """Cached-but-unreferenced pages (evictable on demand)."""
+        return len(self._reclaimable)
+
+    @property
+    def n_available_pages(self) -> int:
+        """Pages admission may count on: truly free + reclaimable
+        (cached idle pages surrender to eviction, so they are capacity,
+        not occupancy)."""
+        return len(self._free_pages) + len(self._reclaimable)
+
+    @property
     def n_pages_in_use(self) -> int:
-        return (self.n_pages - 1) - len(self._free_pages)
+        """Pages pinned by live requests (cached idle pages are NOT in
+        use — they are reclaimable capacity)."""
+        return (self.n_pages - 1) - self.n_available_pages
 
     def acquire(self) -> Optional[int]:
         """Claim a free slot (its page table starts empty — admission
@@ -111,32 +156,56 @@ class PagedKVPool:
         return slot
 
     def release(self, slot: int) -> None:
-        """Return a slot AND all its pages. Idempotent per request: a
-        second release of an already-free slot is a no-op (EOS
-        early-stop and preemption can both try to free mid-tick)."""
+        """Return a slot and DECREF all its pages (deepest first, so a
+        released chain's tail becomes the LRU eviction victim before
+        its root — evicting a mid-chain page drops the subtree below
+        it, never the shared trunk). Idempotent per request: a second
+        release of an already-free slot is a no-op (EOS early-stop and
+        preemption can both try to free mid-tick)."""
         if not 0 <= slot < self.n_slots:
             raise ValueError(f"slot {slot} out of range")
         if not self._held[slot]:
             return
         self._held[slot] = False
         n = int(self.allocated[slot])
-        for j in range(n):
-            self._free_pages.append(int(self.page_table[slot, j]))
-        self.total_page_frees += n
+        for j in range(n - 1, -1, -1):
+            self._decref(int(self.page_table[slot, j]))
         self.page_table[slot, :] = 0
         self.allocated[slot] = 0
         self.lengths[slot] = 0
         self._free_slots.append(slot)
         self.total_releases += 1
 
+    # ------------------------------------------------------- refcounting
+
+    def _incref(self, page: int) -> None:
+        if self.refcount[page] == 0:
+            # must be parked on the reclaimable list (a cached idle
+            # page being re-shared); truly-free pages enter tables via
+            # ensure/cow, not incref
+            self._reclaimable.pop(page)
+        self.refcount[page] += 1
+
+    def _decref(self, page: int) -> None:
+        self.refcount[page] -= 1
+        assert self.refcount[page] >= 0, f"page {page} refcount underflow"
+        if self.refcount[page] == 0:
+            if self.cached[page]:
+                # most-recently-released end of the LRU
+                self._reclaimable[page] = None
+            else:
+                self._free_pages.append(page)
+                self.total_page_frees += 1
+
     # ------------------------------------------------------------ pages
 
     def ensure(self, slot: int, n_total: int) -> bool:
         """Grow slot's table to cover n_total pages (lazy per-block /
-        per-token allocation). Returns False — allocating NOTHING — when
-        the heap cannot cover the growth (the scheduler then preempts or
-        skips); True when the slot already covers n_total or after
-        allocating the delta."""
+        per-token allocation) with FRESH exclusively-owned pages.
+        Returns False — allocating NOTHING — when the free heap cannot
+        cover the growth (the scheduler then evicts cached prefixes,
+        preempts, or skips); True when the slot already covers n_total
+        or after allocating the delta."""
         if not self._held[slot]:
             raise ValueError(f"slot {slot} is not held")
         if n_total > self.max_pages:
@@ -149,12 +218,97 @@ class PagedKVPool:
             return False
         base = int(self.allocated[slot])
         for j in range(delta):
-            self.page_table[slot, base + j] = self._free_pages.popleft()
+            page = self._free_pages.popleft()
+            self.page_table[slot, base + j] = page
+            self.refcount[page] = 1
         self.allocated[slot] = n_total
         self.total_page_allocs += delta
         self.max_pages_in_use = max(self.max_pages_in_use,
                                     self.n_pages_in_use)
         return True
+
+    def share(self, slot: int, pages: List[int]) -> None:
+        """Map already-populated CACHED pages into slot's table (prefix
+        hit at admission): appends at the table tail and increfs each —
+        idle pages leave the reclaimable list, active ones just gain a
+        reader. The mapped pages are read-only for this slot (its
+        prefill starts after them; a partial tail is `cow`-detached by
+        the scheduler before any write)."""
+        if not self._held[slot]:
+            raise ValueError(f"slot {slot} is not held")
+        base = int(self.allocated[slot])
+        if base + len(pages) > self.max_pages:
+            raise ValueError(f"slot {slot}: sharing {len(pages)} pages "
+                             f"overflows the table width {self.max_pages}")
+        for j, page in enumerate(pages):
+            assert self.cached[page], f"sharing uncached page {page}"
+            self.page_table[slot, base + j] = page
+            self._incref(int(page))
+        self.allocated[slot] = base + len(pages)
+        self.total_page_shares += len(pages)
+        self.max_pages_in_use = max(self.max_pages_in_use,
+                                    self.n_pages_in_use)
+
+    def cow(self, slot: int, j: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write detach of table entry j: swap the shared page
+        for a fresh exclusively-owned one and return (src, dst) for the
+        device-side payload copy (runtime.copy_pages). Returns None —
+        changing nothing — when the free heap is dry (caller evicts or
+        falls back to unmapping the tail and re-prefilling it)."""
+        if not self._held[slot]:
+            raise ValueError(f"slot {slot} is not held")
+        if not self._free_pages:
+            return None
+        src = int(self.page_table[slot, j])
+        dst = self._free_pages.popleft()
+        self.page_table[slot, j] = dst
+        self.refcount[dst] = 1
+        self.total_page_allocs += 1
+        self.n_cow_pages += 1
+        self._decref(src)
+        self.max_pages_in_use = max(self.max_pages_in_use,
+                                    self.n_pages_in_use)
+        return src, dst
+
+    def unmap_tail(self, slot: int, n: int) -> None:
+        """Drop the last n table entries (decref, zero, shrink) — the
+        dry-heap fallback when a partial-block tail cannot be COWed:
+        the scheduler re-prefills those positions instead."""
+        if not self._held[slot]:
+            raise ValueError(f"slot {slot} is not held")
+        base = int(self.allocated[slot])
+        for j in range(base - 1, base - 1 - n, -1):
+            self._decref(int(self.page_table[slot, j]))
+            self.page_table[slot, j] = 0
+        self.allocated[slot] = base - n
+
+    # --------------------------------------------------- prefix caching
+
+    def mark_cached(self, page: int) -> None:
+        """Prefix-index hook: the page is now published (its payload is
+        reachable by future lookups), so at refcount zero it parks on
+        the reclaimable list instead of the free list."""
+        assert self.refcount[page] > 0, \
+            f"publishing idle page {page} (must be held by its writer)"
+        self.cached[page] = True
+
+    def uncache(self, page: int) -> None:
+        """Prefix-index hook: the page left the index (eviction or
+        clear). If idle it physically frees right now."""
+        if not self.cached[page]:
+            return
+        self.cached[page] = False
+        if self.refcount[page] == 0:
+            self._reclaimable.pop(page)
+            self._free_pages.append(page)
+            self.total_page_frees += 1
+
+    def lru_reclaimable(self) -> Optional[int]:
+        """Least-recently-released cached idle page (the scheduler's
+        eviction victim), or None when nothing is reclaimable."""
+        if not self._reclaimable:
+            return None
+        return next(iter(self._reclaimable))
 
     def covers(self, slot: int, position: int) -> bool:
         """Whether slot's table already maps token `position`."""
@@ -167,7 +321,8 @@ class PagedKVPool:
         """Whether a request needing n_tokens cache positions can ever
         be served: its table must hold them and the heap must be able
         to back them all at once (the oldest request can preempt every
-        younger one, so heap capacity == worst-case guarantee)."""
+        younger one and evict every cached prefix, so heap capacity ==
+        worst-case guarantee)."""
         return (n_tokens <= self.cache_len
                 and self.pages_for(n_tokens) <= self.n_pages - 1)
 
@@ -177,9 +332,13 @@ class PagedKVPool:
         """Fault-injection hook (serving/faults.py): temporarily remove
         up to n FREE pages from the heap — admission gating and
         `ensure` growth see a dry heap and must skip/preempt/retry.
-        Stolen pages belong to no slot (never page 0) and must come
-        back via `restore_free_pages`; the injector guarantees it, so
-        leak accounting stays exact."""
+        The free list only ever holds refcount-zero uncached pages, so
+        the injector can never steal a page some request still reads
+        (the refcounted-ownership constraint); cached idle pages are
+        immune until the scheduler actually evicts them. Stolen pages
+        belong to no slot (never page 0) and must come back via
+        `restore_free_pages`; the injector guarantees it, so leak
+        accounting stays exact."""
         taken = []
         for _ in range(min(n, len(self._free_pages))):
             taken.append(self._free_pages.popleft())
@@ -195,7 +354,8 @@ class PagedKVPool:
         fragmentation the paged layout exists to shrink: a slot pool
         strands cache_len - length per request, a page pool at most
         page_size - 1 plus the lazily-unallocated tail of the current
-        page)."""
+        page). Shared pages count once per holder — each table really
+        does map those positions."""
         held = self._held
         return int((self.allocated[held] * self.page_size
                     - self.lengths[held]).sum())
@@ -209,3 +369,31 @@ class PagedKVPool:
         if self.n_pages_in_use >= self.max_pages_in_use:
             self.max_pages_in_use = self.n_pages_in_use
             self.stranded_tokens_at_peak = self.stranded_tokens()
+
+    def check_consistency(self) -> None:
+        """Test hook: recompute refcounts from the held tables and
+        verify the free / reclaimable / referenced partition. Raises
+        AssertionError on any drift."""
+        want = np.zeros(self.n_pages, np.int32)
+        for slot in range(self.n_slots):
+            if not self._held[slot]:
+                assert int(self.allocated[slot]) == 0, \
+                    f"released slot {slot} still maps pages"
+                assert (self.page_table[slot] == 0).all()
+                continue
+            for j in range(int(self.allocated[slot])):
+                want[int(self.page_table[slot, j])] += 1
+        assert (want == self.refcount).all(), \
+            "refcounts drifted from table occupancy"
+        free = set(self._free_pages)
+        recl = set(self._reclaimable)
+        assert not free & recl, "page on both free and reclaimable lists"
+        for page in range(1, self.n_pages):
+            if self.refcount[page] > 0:
+                assert page not in free and page not in recl
+            elif self.cached[page]:
+                assert page in recl, f"idle cached page {page} not parked"
+            # refcount-0 uncached pages are free OR temporarily stolen
+            # by the fault injector — both are off the tables
+        for page in free:
+            assert not self.cached[page], f"free page {page} still cached"

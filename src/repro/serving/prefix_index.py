@@ -1,0 +1,201 @@
+"""Host-side prefix index: token-chain trie mapping page-aligned prompt
+prefixes to cached KV pages (the lookup half of vLLM-style prefix
+caching; PagedKVPool holds the refcounted ownership half).
+
+Structure
+---------
+One trie ROOT per SparsityPlan name: sparse plans change the KV bytes a
+prefill block writes (dense_first/last_block, per-layer FFN + attention
+budgets all feed the residual stream), so requests running DIFFERENT
+plans must never share pages — keying the root on the plan makes cross-
+plan sharing structurally impossible rather than merely checked.
+
+Below a root, each node is one PAGE of a prompt: its edge key is the
+page's literal token tuple (page_size tokens — dict equality on the
+tuple, so lookups are collision-free by construction; no hashing
+scheme to trust), and the node records the cached page id whose device
+payload holds exactly those positions' KV. A path root -> node spells a
+page-aligned token prefix; KV bytes for a page depend only on the
+token chain before it plus the plan (causal attention, position-tied
+RoPE, deterministic routing/selection), so any request whose prompt
+walks the same path can map the chain's pages verbatim — bit-identical
+to recomputing them.
+
+Lifecycle
+---------
+* `publish` is called by the scheduler as each prompt block COMPLETES
+  prefill (never the last prompt block — its pages see the request's
+  own decode-adjacent state and partial fills), inserting nodes for
+  pages not yet cached and `pool.mark_cached`-ing them.
+* `lookup` at admission walks the longest cached chain for a prompt;
+  the scheduler maps those pages via `pool.share` and starts prefill
+  at the first unshared block.
+* `drop_page` (eviction under pressure, LRU victim chosen by the pool)
+  removes the page's ENTIRE SUBTREE — children's KV is meaningless
+  without the ancestor chain, and dropping whole subtrees preserves
+  the invariant "every cached node's parent is cached", which is what
+  lets `publish` skip mid-chain nodes it finds already present.
+
+The index holds no device state and never touches refcounts directly:
+`mark_cached`/`uncache` on the pool flip pages between the free and
+reclaimable-LRU lists; eviction POLICY (when, which victim) stays in
+the scheduler.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class _Node:
+    __slots__ = ("key", "page", "parent", "children")
+
+    def __init__(self, key, page: int, parent):
+        self.key = key                # token tuple of THIS page (root: None)
+        self.page = page              # cached page id (root: -1)
+        self.parent = parent
+        self.children: Dict[tuple, "_Node"] = {}
+
+
+class PrefixIndex:
+    """Trie over (plan name, page token tuples) -> cached page chains."""
+
+    def __init__(self, pool):
+        self.pool = pool
+        self.page_size = pool.page_size
+        self._roots: Dict[Optional[str], _Node] = {}
+        self._by_page: Dict[int, _Node] = {}
+        # stats (serve.py prefix_sharing line / bench section)
+        self.n_lookups = 0
+        self.n_hits = 0
+        self.n_published = 0
+        self.n_evictions = 0
+
+    # ------------------------------------------------------------- keys
+
+    @staticmethod
+    def page_keys(prompt: Sequence[int], page_size: int,
+                  n_pages: int) -> List[tuple]:
+        """The first n_pages page-aligned token tuples of a prompt (the
+        scheduler caps n_pages at (n_blocks - 1) * pages_per_block: the
+        last prompt block is never shared)."""
+        n = min(n_pages, len(prompt) // page_size)
+        return [tuple(prompt[i * page_size:(i + 1) * page_size])
+                for i in range(n)]
+
+    # ----------------------------------------------------------- lookup
+
+    def lookup(self, plan: Optional[str], keys: Sequence[tuple],
+               record: bool = True) -> List[int]:
+        """Pages of the longest cached chain matching `keys` under
+        `plan`'s root. Counts a hit when at least one page matches;
+        record=False skips the stats (advisory probes: the submit-time
+        shed bound would otherwise double-count every request)."""
+        if record:
+            self.n_lookups += 1
+        node = self._roots.get(plan)
+        pages: List[int] = []
+        for key in keys:
+            if node is None:
+                break
+            node = node.children.get(key)
+            if node is None:
+                break
+            pages.append(node.page)
+        if pages and record:
+            self.n_hits += 1
+        return pages
+
+    # ---------------------------------------------------------- publish
+
+    def publish(self, plan: Optional[str], keys: Sequence[tuple],
+                pages: Sequence[int], lo: int, hi: int) -> int:
+        """Insert pages[lo:hi] (a just-prefilled block's pages) under
+        the chain keys[:hi]. Existing nodes are kept (first writer
+        wins — the payloads are bit-identical by construction); a
+        broken chain (ancestor evicted mid-flight) stops insertion so
+        every cached node's parent stays cached. Returns the number of
+        pages newly cached."""
+        node = self._roots.get(plan)
+        if node is None:
+            node = self._roots[plan] = _Node(None, -1, None)
+        published = 0
+        for j in range(hi):
+            if j >= len(keys):
+                break
+            child = node.children.get(keys[j])
+            if child is None:
+                if j < lo:
+                    # ancestor chain broken (evicted while we ran):
+                    # publishing deeper pages would orphan them
+                    return published
+                page = int(pages[j])
+                child = _Node(keys[j], page, node)
+                node.children[keys[j]] = child
+                self._by_page[page] = child
+                self.pool.mark_cached(page)
+                self.n_published += 1
+                published += 1
+            node = child
+        return published
+
+    # --------------------------------------------------------- eviction
+
+    def drop_page(self, page: int) -> int:
+        """Evict the node holding `page` AND its whole subtree (KV below
+        a dropped ancestor is unreachable by any future lookup).
+        Returns the number of pages dropped; each is `pool.uncache`d —
+        idle ones free immediately, still-referenced ones free when
+        their last reader releases."""
+        node = self._by_page.pop(page, None)
+        if node is None:
+            return 0
+        del node.parent.children[node.key]
+        dropped = 0
+        stack = [node]
+        while stack:
+            cur = stack.pop()
+            self._by_page.pop(cur.page, None)
+            self.pool.uncache(cur.page)
+            self.n_evictions += 1
+            dropped += 1
+            stack.extend(cur.children.values())
+            cur.children.clear()
+        return dropped
+
+    def evict_lru(self) -> bool:
+        """Drop the pool's least-recently-released idle cached page
+        (plus its subtree). False when nothing is reclaimable — the
+        caller falls back to preemption."""
+        victim = self.pool.lru_reclaimable()
+        if victim is None:
+            return False
+        dropped = self.drop_page(victim)
+        assert dropped > 0, f"reclaimable page {victim} missing from index"
+        return True
+
+    def clear(self) -> int:
+        """Drop everything (post-warmup reset; drain-time leak checks).
+        Returns the number of pages uncached."""
+        dropped = 0
+        for page in list(self._by_page):
+            node = self._by_page.get(page)
+            if node is not None:
+                dropped += self.drop_page(page)
+        self._roots.clear()
+        return dropped
+
+    # ------------------------------------------------------------ stats
+
+    @property
+    def n_cached_pages(self) -> int:
+        return len(self._by_page)
+
+    def stats(self) -> dict:
+        return {
+            "lookups": self.n_lookups,
+            "hits": self.n_hits,
+            "hit_rate": self.n_hits / max(self.n_lookups, 1),
+            "pages_cached": self.n_cached_pages,
+            "pages_published": self.n_published,
+            "evictions": self.n_evictions,
+        }

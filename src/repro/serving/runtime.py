@@ -55,6 +55,7 @@ from repro.compat import jit_cache_size
 from repro.core import fastforward as FF
 from repro.models.base import ModelConfig
 from repro.models.registry import get_model
+from repro.nn import attention as A
 from repro.nn import layers as L
 
 
@@ -178,6 +179,12 @@ class _JittedRuntime:
             static_argnames=("plan",))
         self._decode_paged = jax.jit(self._decode_paged_impl,
                                      donate_argnums=(1,))
+        # COW page copy (prefix sharing): cache donated like every
+        # other cache-threading entry; src/dst are traced fixed-width
+        # int32 vectors (scheduler pads with null self-copies), so all
+        # COW batches share one executable
+        self._copy_pages = jax.jit(self._copy_pages_impl,
+                                   donate_argnums=(0,))
         self._logits_at = jax.jit(self._logits_at_impl)
 
     # -- plan plumbing -------------------------------------------------
@@ -317,6 +324,9 @@ class _JittedRuntime:
             params, tokens, cache, table, positions, active, plan_ids)
         return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
+    def _copy_pages_impl(self, cache, src, dst):
+        return A.copy_kv_pages(cache, src, dst)
+
     def _logits_at_impl(self, params, hidden, lengths):
         idx = jnp.clip(lengths - 1, 0, hidden.shape[1] - 1)
         h = jnp.take_along_axis(
@@ -382,6 +392,14 @@ class _JittedRuntime:
             jnp.asarray(positions, jnp.int32), jnp.asarray(active, bool),
             jnp.asarray(plan_ids, jnp.int32))
 
+    def copy_pages(self, cache, src_pages, dst_pages):
+        """Device COW copy src -> dst across every cache leaf (page
+        axis 1). Fixed-width traced indices: the scheduler pads short
+        batches with 0 -> 0 null self-copies so one executable covers
+        every COW count."""
+        return self._copy_pages(cache, jnp.asarray(src_pages, jnp.int32),
+                                jnp.asarray(dst_pages, jnp.int32))
+
     def logits_at(self, hidden, lengths):
         return self._logits_at(self.params, hidden,
                                jnp.asarray(lengths, jnp.int32))
@@ -400,6 +418,7 @@ class _JittedRuntime:
             "prefill_blocks_paged": jit_cache_size(
                 self._prefill_blocks_paged),
             "decode_step_paged": jit_cache_size(self._decode_paged),
+            "copy_pages": jit_cache_size(self._copy_pages),
             "logits_at": jit_cache_size(self._logits_at),
         }
 

@@ -44,6 +44,24 @@ progress and a stream that fits the heap per-request always drains.
 Page tables are traced values, so the paged entries compile once per
 width bucket exactly like the slot entries.
 
+PREFIX SHARING (paged only, `prefix_cache=True`): page ownership is
+refcounted (PagedKVPool) and a host-side PrefixIndex maps page-aligned
+(SparsityPlan, token-chain) keys to cached pages. Admission looks up
+the longest cached chain for the queue head, maps those pages into its
+table as shared READERS (`pool.share`), copy-on-writes the partial
+tail of the restart block, charges the gate only the UNSHARED page
+footprint, and starts prefill at the first unshared block — the TTFT
+win: shared prompt blocks never run. Each completed prompt block
+(never the last — its pages see the request's own decode-adjacent
+partial fills) is published back to the index. Release paths decrement
+refcounts; cached pages whose last reader left park on a reclaimable
+LRU, evicted (`PrefixIndex.drop_page`, whole subtrees) before the
+scheduler resorts to preemption. Shared KV is bit-identical to
+recomputing it — block b's KV depends only on the token chain before
+it and the plan — so greedy output with sharing on equals sharing off,
+and requests under DIFFERENT plans never share (plan keys the trie
+root).
+
 OVERLOAD SEMANTICS (the robustness contract, as load-bearing as the
 bit-equivalence contract): requests carry optional deadlines
 (`ttft_deadline_ms`, `deadline_ms`) and every request finishes with a
@@ -76,6 +94,7 @@ import numpy as np
 from repro.serving.admission import AdmissionController
 from repro.serving.cache_pool import KVSlotPool
 from repro.serving.page_pool import PagedKVPool
+from repro.serving.prefix_index import PrefixIndex
 from repro.serving.runtime import ModelRuntime
 
 
@@ -147,6 +166,10 @@ class _ActiveState:
     next_token: int = 0          # last sampled token (decode input)
     pos: int = 0                 # next KV write position
     first_token_time: Optional[float] = None
+    # prefix sharing: the prompt's page-aligned token tuples (None when
+    # the cache is off) — lookup happens at admission, publish per
+    # completed block
+    page_keys: Optional[List[tuple]] = None
 
 
 class SchedulerStallError(RuntimeError):
@@ -170,7 +193,8 @@ class ContinuousBatchingScheduler:
                  sleep=time.sleep, page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
                  admission: Optional[AdmissionController] = None,
-                 faults=None, stall_ticks: int = 1000):
+                 faults=None, stall_ticks: int = 1000,
+                 prefix_cache: bool = False):
         self.runtime = runtime
         layout = getattr(runtime.cfg, "kv_layout", "slot")
         self.kv_layout = layout
@@ -199,6 +223,16 @@ class ContinuousBatchingScheduler:
         else:
             raise ValueError(f"unknown kv_layout={layout!r}; expected "
                              f"'slot' or 'paged'")
+        if prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires kv_layout='paged' "
+                             "(the slot layout has no shareable pages)")
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix_index = (PrefixIndex(self.pool) if self.prefix_cache
+                             else None)
+        # prefix-sharing counters (hit accounting lives here — the
+        # index counts lookups/publishes, the pool counts mappings)
+        self.n_prefix_hits = 0        # admissions that skipped >=1 block
+        self.n_shared_blocks = 0      # prompt blocks never prefilled
         self.n_slots = n_slots
         self.cache_len = cache_len
         # max width of the batched prefill entry: up to this many
@@ -308,7 +342,7 @@ class ContinuousBatchingScheduler:
             self._finish_queued(req, "shed", reason)
             return
         reason = AdmissionController.shed_reason(
-            req, now=self.clock(), n_blocks=self._n_blocks(req),
+            req, now=self.clock(), n_blocks=self._n_unshared_blocks(req),
             min_block_s=self._min_prefill_tick_s)
         if reason is not None:
             self._finish_queued(req, "shed", reason)
@@ -318,6 +352,34 @@ class ContinuousBatchingScheduler:
     def _n_blocks(self, req: Request) -> int:
         N = self.runtime.block_size
         return -(-len(req.prompt) // N)
+
+    def _n_unshared_blocks(self, req: Request) -> int:
+        """Prompt blocks this request would actually RUN if admitted
+        right now — with the prefix cache on, blocks covered by the
+        currently-cached chain are subtracted (the shed bound charges
+        only unshared work). Quasi-provable rather than provable: the
+        cached chain can only GROW a request's coverage while it queues
+        (evictions only fire under pressure, in which case the request
+        was going to wait anyway), so shedding against today's coverage
+        never sheds a request that sharing would have saved."""
+        n_blocks = self._n_blocks(req)
+        if self.prefix_index is None:
+            return n_blocks
+        plan_idx = (req.assigned_plan_idx
+                    if req.assigned_plan_idx is not None
+                    else self.plan_index.get(req.effort, 0))
+        matched = self.prefix_index.lookup(
+            self._plan_name(plan_idx), self._page_keys(req), record=False)
+        return n_blocks - min(len(matched) // self._npb, n_blocks - 1)
+
+    def _page_keys(self, req: Request) -> List[tuple]:
+        """Page-aligned token tuples of the SHAREABLE prompt prefix
+        (everything before the last block — a request's final prompt
+        block is never shared: its pages hold the partial fill and the
+        decode-adjacent state)."""
+        return PrefixIndex.page_keys(
+            req.prompt, self.pool.page_size,
+            (self._n_blocks(req) - 1) * self._npb)
 
     # ----------------------------------------------------------- tick
 
@@ -365,11 +427,15 @@ class ContinuousBatchingScheduler:
         return emitted
 
     def _free_frac(self) -> float:
-        """Free-resource fraction for the admission watermarks: free
-        pages of the paged heap, free slots of the slot pool."""
+        """Free-resource fraction for the admission watermarks:
+        available pages of the paged heap (truly free PLUS reclaimable
+        cached-idle pages — they surrender to eviction on demand, so
+        counting them as pressure would make a popular cached prefix
+        read as an overloaded heap), free slots of the slot pool."""
         if self.paged:
             usable = self.pool.n_pages - 1
-            return self.pool.n_free_pages / usable if usable else 0.0
+            return (self.pool.n_available_pages / usable
+                    if usable else 0.0)
         return self.pool.n_free / self.n_slots
 
     def _watchdog(self) -> None:
@@ -429,8 +495,11 @@ class ContinuousBatchingScheduler:
         if self.paged:
             pool_state.update(
                 n_free_pages=self.pool.n_free_pages,
+                n_reclaimable_pages=self.pool.n_reclaimable,
                 usable_pages=self.pool.n_pages - 1,
                 pages_in_use=self.pool.n_pages_in_use)
+        if self.prefix_index is not None:
+            pool_state["prefix_index"] = self.prefix_stats()
         return {
             "tick": self.n_ticks,
             "queue": [
@@ -536,27 +605,80 @@ class ContinuousBatchingScheduler:
         if self.paged:
             self.pool.total_page_allocs = self.pool.total_page_frees = 0
             self.pool.max_pages_in_use = 0
+        if self.prefix_index is not None:
+            # pre-compile the COW copy entry (all-null self-copy: page
+            # 0 copied onto itself), then drop the throwaway request's
+            # published blocks and zero the sharing stats — real
+            # traffic starts from an empty, fully-counted cache
+            z = np.zeros(self._npb, np.int32)
+            self.pool.cache = self.runtime.copy_pages(self.pool.cache,
+                                                      z, z)
+            self.prefix_index.clear()
+            self.prefix_index.n_lookups = self.prefix_index.n_hits = 0
+            self.prefix_index.n_published = 0
+            self.prefix_index.n_evictions = 0
+            self.n_prefix_hits = self.n_shared_blocks = 0
+            self.pool.total_page_shares = 0
+            self.pool.n_cow_pages = 0
+            self.pool.total_page_allocs = self.pool.total_page_frees = 0
         return self.runtime.compile_counts()
 
     # ------------------------------------------------------- internals
 
+    def _peek_plan_idx(self, req: Request) -> int:
+        """The plan this request would be admitted under RIGHT NOW
+        (pinned index if re-admitting, else the current degradation
+        level applied to its effort tier). Pure — safe to call before
+        the admission gate; the n_degraded counter moves only when the
+        request is actually seated."""
+        if req.assigned_plan_idx is not None:
+            return req.assigned_plan_idx
+        plan_idx = self.plan_index.get(req.effort, 0)
+        if self.admission is not None and self.plans:
+            plan_idx = self.admission.degraded_plan(plan_idx)
+        return plan_idx
+
     def _admit(self) -> None:
         while self.queue:
+            shared: List[int] = []
+            keys: Optional[List[tuple]] = None
             if self.paged:
-                # paged admission gates on free PAGES: seat a request
-                # only when the heap can back its whole PROMPT on top of
-                # what already-seated prefills are still owed (allocation
-                # is lazy, so the free count alone would let a burst
-                # over-admit and thrash re-prefill). Decode growth past
-                # the prompt is deliberately NOT reserved — that would
-                # re-create the slot pool's worst-case reservation and
-                # its stranded bytes; the preemption path absorbs it.
+                # paged admission gates on available PAGES: seat a
+                # request only when the heap can back its whole UNSHARED
+                # prompt footprint on top of what already-seated prefills
+                # are still owed (allocation is lazy, so the free count
+                # alone would let a burst over-admit and thrash
+                # re-prefill). Decode growth past the prompt is
+                # deliberately NOT reserved — that would re-create the
+                # slot pool's worst-case reservation and its stranded
+                # bytes; the preemption path absorbs it.
+                req0 = self.queue[0]
+                n_blocks = self._n_blocks(req0)
+                if self.prefix_index is not None:
+                    # record=False: the same head can be re-probed for
+                    # many gated ticks — stats count admissions below
+                    keys = self._page_keys(req0)
+                    shared = self.prefix_index.lookup(
+                        self._plan_name(self._peek_plan_idx(req0)), keys,
+                        record=False)
                 owed = sum(
                     max(s.n_blocks * self._npb
                         - int(self.pool.allocated[s.slot]), 0)
                     for s in self.active.values() if s.phase == "prefill")
-                need = self._n_blocks(self.queue[0]) * self._npb
-                if self.pool.n_free_pages - owed < need:
+                # whole blocks the shared chain covers are never
+                # prefilled; a partial tail block still re-runs (its
+                # tail pages COW-detach), so it is charged in full
+                m_aligned = len(shared) - len(shared) % self._npb
+                need = n_blocks * self._npb - m_aligned
+                # matched refcount-zero pages sit on the reclaimable
+                # list, so n_available_pages counts them as capacity —
+                # but mapping them consumes that capacity, so charge
+                # them out of the gate (or a full-but-cached heap would
+                # admit work it cannot back)
+                matched_idle = sum(
+                    1 for p in shared if self.pool.refcount[p] == 0)
+                avail = self.pool.n_available_pages - matched_idle
+                if avail - owed < need:
                     return
             slot = self.pool.acquire()
             if slot is None:
@@ -569,22 +691,77 @@ class ContinuousBatchingScheduler:
                 # controller's level moved meanwhile
                 plan_idx = req.assigned_plan_idx
             else:
-                plan_idx = self.plan_index.get(req.effort, 0)
-                if self.admission is not None and self.plans:
-                    degraded = self.admission.degraded_plan(plan_idx)
-                    if degraded != plan_idx:
-                        self.n_degraded += 1
-                        plan_idx = degraded
+                plan_idx = self._peek_plan_idx(req)
+                if plan_idx != self.plan_index.get(req.effort, 0):
+                    self.n_degraded += 1
                 req.assigned_plan_idx = plan_idx
-            self.active[slot] = _ActiveState(
+            st = _ActiveState(
                 req=req, slot=slot, seq=self._admit_seq,
                 n_blocks=self._n_blocks(req),
                 plan_idx=plan_idx,
                 # rid folded to uint32: seed sequences reject negative
                 # entries (the warmup throwaway request carries rid=-1)
                 rng=np.random.default_rng(
-                    (self.seed, req.rid % (1 << 32))))
+                    (self.seed, req.rid % (1 << 32))),
+                page_keys=keys)
+            self.active[slot] = st
             self._admit_seq += 1
+            if self.prefix_index is not None:
+                self.prefix_index.n_lookups += 1
+                if shared:
+                    self.prefix_index.n_hits += 1
+                    self._map_prefix(st, shared)
+
+    def _map_prefix(self, st: _ActiveState, shared: List[int]) -> None:
+        """Seat an admitted request on its matched prefix chain: map
+        the shared pages read-only, copy-on-write the partial tail of
+        the restart block, and fast-forward blocks_done past the fully-
+        covered blocks — those prompt blocks never run (the TTFT win)."""
+        N = self.runtime.block_size
+        self.pool.share(st.slot, shared)
+        tail = len(shared) % self._npb
+        if tail:
+            self._cow_tail(st, tail)
+        start = int(self.pool.allocated[st.slot]) // self._npb
+        st.blocks_done = start
+        self.pool.lengths[st.slot] = start * N
+        if start > 0:
+            self.n_prefix_hits += 1
+            self.n_shared_blocks += start
+
+    def _cow_tail(self, st: _ActiveState, tail: int) -> None:
+        """Detach the last `tail` shared pages (a chain that ends mid-
+        block: partial subtree eviction is the only producer — publishes
+        are whole-block). The restart block's prefill scatters over ALL
+        its pages, so keeping them shared would write pages other
+        requests read; COW gives the writer private bit-identical
+        copies instead, preserving "writes only touch exclusively-owned
+        pages" without special cases. Dry-heap fallback: unmap the rest
+        of the tail (those positions simply re-prefill)."""
+        pool = self.pool
+        base = int(pool.allocated[st.slot])
+        srcs: List[int] = []
+        dsts: List[int] = []
+        for j in range(base - tail, base):
+            while (pool.n_free_pages == 0
+                   and self.prefix_index.evict_lru()):
+                pass
+            res = pool.cow(st.slot, j)
+            if res is None:
+                pool.unmap_tail(st.slot, base - j)
+                break
+            srcs.append(res[0])
+            dsts.append(res[1])
+        if srcs:
+            # one fixed-width jitted device copy per admission: pad
+            # with 0 -> 0 null self-copies so every COW count hits the
+            # single pre-warmed executable
+            src = np.zeros(self._npb, np.int32)
+            dst = np.zeros(self._npb, np.int32)
+            src[:len(srcs)] = srcs
+            dst[:len(dsts)] = dsts
+            self.pool.cache = self.runtime.copy_pages(
+                self.pool.cache, src, dst)
 
     # ------------------------------------------- lifecycle: cancel/expiry
 
@@ -700,18 +877,27 @@ class ContinuousBatchingScheduler:
         self.n_preemptions += 1
 
     def _ensure_pages(self, st: _ActiveState, n_total: int) -> bool:
-        """Grow st's page table to n_total pages, preempting the
-        youngest STRICTLY-YOUNGER active request while the heap is dry.
-        Never evicts older requests (the oldest always progresses, so
-        any stream whose requests individually fit the heap drains).
-        Returns False when st cannot be grown this tick (it is skipped,
-        not evicted — retried next tick)."""
+        """Grow st's page table to n_total pages. While the free heap
+        is dry: first evict cached-but-unreferenced prefixes (LRU, a
+        whole index subtree per victim — reclaiming cold cache is
+        strictly cheaper than discarding live work), then preempt the
+        youngest STRICTLY-YOUNGER active request. Never evicts older
+        requests (the oldest always progresses, so any stream whose
+        requests individually fit the heap drains). Returns False when
+        st cannot be grown this tick (it is skipped, not evicted —
+        retried next tick)."""
         while True:
             if self.pool.ensure(st.slot, n_total):
                 return True
+            if (self.prefix_index is not None
+                    and self.prefix_index.evict_lru()):
+                continue
             # only victims actually HOLDING pages: evicting a just-
             # admitted zero-page request frees nothing and churns
-            # admission for no gain
+            # admission for no gain. Under sharing a victim's release
+            # may free nothing PHYSICALLY (pages still read elsewhere
+            # or parked cached) — its cached pages become reclaimable,
+            # so the next loop iteration evicts them.
             victim = max((s for s in self.active.values()
                           if s.seq > st.seq
                           and self.pool.allocated[s.slot] > 0),
@@ -742,6 +928,17 @@ class ContinuousBatchingScheduler:
         self.plan_prefill_blocks[st.plan_idx] += 1
         self.pool.lengths[st.slot] = min(st.blocks_done * N,
                                          len(st.req.prompt))
+        if self.prefix_index is not None and st.blocks_done < st.n_blocks:
+            # publish the just-completed block's pages (never the LAST
+            # prompt block — excluded by the guard above AND by the
+            # page_keys cap). First writer wins on existing nodes; a
+            # COWed restart block re-publishes under the same keys and
+            # is skipped there.
+            b = st.blocks_done - 1
+            self.prefix_index.publish(
+                self._plan_name(st.plan_idx), st.page_keys,
+                self.pool.page_table[st.slot],
+                b * self._npb, (b + 1) * self._npb)
         if st.blocks_done < st.n_blocks:
             return 0
         tok = self._sample(logits_row(), st)
@@ -979,6 +1176,20 @@ class ContinuousBatchingScheduler:
                 "decode_tokens": int(self.plan_decode_tokens[i]),
             })
         return out
+
+    def prefix_stats(self) -> Optional[dict]:
+        """Prefix-sharing accounting (serve.py stats line + the
+        prefix_sharing bench section); None when the cache is off."""
+        if self.prefix_index is None:
+            return None
+        s = self.prefix_index.stats()
+        s.update(
+            requests_hit=self.n_prefix_hits,
+            blocks_skipped=self.n_shared_blocks,
+            pages_shared=self.pool.total_page_shares,
+            cow_pages=self.pool.n_cow_pages,
+        )
+        return s
 
     def _maybe_finish(self, st: _ActiveState) -> None:
         hit_eos = (st.req.eos_id is not None and st.out

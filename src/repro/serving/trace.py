@@ -30,14 +30,25 @@ line):
                float   optional: the client disconnects this many
                        seconds after arrival (drive_stream issues the
                        cancel; status="cancelled")
+  prefix_group str/int optional: records sharing a group synthesize an
+                       IDENTICAL token prefix of `prefix_len` tokens
+                       (group-seeded stream), with the remainder drawn
+                       from the usual per-record stream — the
+                       shared-system-prompt workload the prefix cache
+                       (--prefix-cache) serves. No-op without the field.
+  prefix_len   int     tokens of shared prefix when `prefix_group` is
+                       set (default: half the prompt, page-aligned by
+                       the cache itself, not the trace)
 
 Unknown keys are ignored (real traces carry extra metadata). Sample
-traces live at benchmarks/traces/sample_trace.jsonl and — for the
-overload fields — benchmarks/traces/sample_overload.jsonl.
+traces live at benchmarks/traces/sample_trace.jsonl, — for the
+overload fields — benchmarks/traces/sample_overload.jsonl, and — for
+prefix_group — benchmarks/traces/sample_shared_prefix.jsonl.
 """
 from __future__ import annotations
 
 import json
+import zlib
 from typing import List, Optional
 
 import numpy as np
@@ -76,7 +87,22 @@ def load_trace(path: str, vocab: int, seed: int = 0,
                     raise ValueError(
                         f"{path}:{idx + 1}: prompt_len must be >= 1")
                 rng = np.random.default_rng((seed, idx))
-                prompt = rng.integers(0, vocab, size=n).tolist()
+                if "prefix_group" in rec:
+                    # group members synthesize an IDENTICAL prefix from
+                    # a group-seeded stream (crc32, not hash() — python
+                    # hashes are per-process randomized) and keep the
+                    # per-record stream for the unique remainder
+                    plen = min(int(rec.get("prefix_len", n // 2)), n)
+                    if plen < 0:
+                        raise ValueError(f"{path}:{idx + 1}: prefix_len "
+                                         f"must be >= 0")
+                    gseed = zlib.crc32(str(rec["prefix_group"]).encode())
+                    grng = np.random.default_rng((seed, gseed))
+                    prompt = (grng.integers(0, vocab, size=plen).tolist()
+                              + rng.integers(0, vocab,
+                                             size=n - plen).tolist())
+                else:
+                    prompt = rng.integers(0, vocab, size=n).tolist()
             gen_len = int(rec.get("gen_len", 16))
             if gen_len < 1:
                 # reject at LOAD time: scheduler.submit would only

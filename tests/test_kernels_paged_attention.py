@@ -67,6 +67,61 @@ def test_kernel_sliding_window():
     assert not np.allclose(np.asarray(full), np.asarray(win))
 
 
+def test_dead_page_bytes_never_read():
+    """DMA-skip contract: grid steps for DEAD pages (past the decode
+    position, or fully behind the sliding window) clamp their K/V
+    index map onto a live page, so dead table entries' pages are never
+    fetched and their BYTES cannot influence the output. Poison a page
+    with NaN/garbage, point every dead table entry at it, and the
+    kernel output is unchanged; poisoning a LIVE entry changes it
+    (the poison is potent, so the invariance is meaningful)."""
+    q, kp, vp, tbl, pos = _setup(seed=6, max_pages=6,
+                                 positions=(9, 5, 18))
+    psz = kp.shape[1]
+    poison = kp.shape[0]                   # append one poisoned page
+    kp_p = jnp.concatenate(
+        [kp, jnp.full((1,) + kp.shape[1:], jnp.nan, kp.dtype)])
+    vp_p = jnp.concatenate(
+        [vp, jnp.full((1,) + vp.shape[1:], 1e30, vp.dtype)])
+    tbl_clean = np.asarray(tbl).copy()
+    tbl = tbl_clean.copy()
+    for b, p in enumerate(np.asarray(pos)):
+        tbl[b, int(p) // psz + 1:] = poison   # dead null tail -> poison
+    want = R.paged_attention_ref(q, kp, vp, jnp.asarray(tbl_clean), pos)
+
+    got = K.paged_decode_attention(q, kp_p, vp_p, jnp.asarray(tbl), pos,
+                                   interpret=True)
+    clean = K.paged_decode_attention(q, kp, vp, jnp.asarray(tbl_clean),
+                                     pos, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(clean))
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+    # sliding window: pages fully behind the window are dead too
+    window = psz + 1
+    tbl_w = tbl.copy()
+    for b, p in enumerate(np.asarray(pos)):
+        lo = max(0, (int(p) - window + 1) // psz)
+        tbl_w[b, :lo] = poison             # behind-window pages -> poison
+    got_w = K.paged_decode_attention(q, kp_p, vp_p, jnp.asarray(tbl_w),
+                                     pos, window=window, interpret=True)
+    ref_w = R.paged_attention_ref(q, kp, vp, jnp.asarray(tbl_clean), pos,
+                                  window=window)
+    assert np.isfinite(np.asarray(got_w)).all()
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(ref_w),
+                               rtol=1e-5, atol=1e-5)
+
+    # sanity: the same poison on a LIVE entry corrupts the output —
+    # the invariance above is not vacuous
+    tbl_live = tbl.copy()
+    tbl_live[0, 0] = poison
+    bad = K.paged_decode_attention(q, kp_p, vp_p, jnp.asarray(tbl_live),
+                                   pos, interpret=True)
+    assert not np.allclose(np.asarray(bad), np.asarray(clean),
+                           equal_nan=False)
+
+
 def test_gathered_pages_bit_match_contiguous_cache():
     """The serving contract: writing KV through page tables and
     attending the gathered view is BIT-identical to the slot layout's

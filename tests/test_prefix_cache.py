@@ -1,0 +1,326 @@
+"""Refcounted prefix-sharing paged KV: bit-identity of greedy output
+with sharing on vs off (dense + MoE, through preemption, eviction and
+chaos), plan isolation (different SparsityPlans never share), the
+copy-on-write partial-tail path, unshared-footprint shedding, and the
+zero-recompilation invariant with the cache on."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_config
+from repro.core.fastforward import resolve_plan
+from repro.models.registry import get_model
+from repro.nn.param import init_params
+from repro.serving import (ContinuousBatchingScheduler, FaultInjector,
+                           PrefixIndex, Request)
+from repro.serving.runtime import make_runtime
+
+PAGE = 8                       # divides the reduced block size (32)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def paged_runtime(dense_setup):
+    cfg, params = dense_setup
+    return make_runtime(cfg.with_(kv_layout="paged", kv_page_size=PAGE),
+                        params)
+
+
+def shared_prompts(cfg, prefix_len, tails, seed=0, groups=1):
+    """`groups` families, each sharing one `prefix_len`-token prefix
+    with per-request unique tails of the given lengths."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(groups):
+        prefix = rng.integers(0, cfg.vocab, prefix_len).tolist()
+        out.append([prefix + rng.integers(0, cfg.vocab, int(t)).tolist()
+                    for t in tails])
+    return out
+
+
+def run_waves(runtime, waves, prefix_cache, max_new=6, **kw):
+    """Submit each wave, drain it fully (so earlier waves' blocks are
+    published before later waves look them up), return (tokens, sched)."""
+    sched = ContinuousBatchingScheduler(runtime,
+                                        prefix_cache=prefix_cache, **kw)
+    rid = 0
+    for wave in waves:
+        for prompt in wave:
+            sched.submit(Request(rid=rid, prompt=prompt, max_new=max_new))
+            rid += 1
+        sched.run()
+    return {r: o.tokens for r, o in sched.finished.items()}, sched
+
+
+def assert_drained_clean(sched):
+    """Leak accounting with sharing on: after drain every refcount is
+    zero, free + reclaimable covers the whole heap, and once the index
+    lets go allocs == frees exactly."""
+    pool = sched.pool
+    pool.check_consistency()
+    assert (pool.refcount == 0).all()
+    assert (pool.page_table == 0).all()
+    assert pool.n_available_pages == pool.n_pages - 1
+    if sched.prefix_index is not None:
+        sched.prefix_index.clear()
+        pool.check_consistency()
+    assert pool.n_free_pages == pool.n_pages - 1
+    assert pool.total_page_allocs == pool.total_page_frees
+
+
+# ------------------------------------------------------- bit-equivalence
+
+
+def test_sharing_bit_identical_dense(dense_setup, paged_runtime):
+    """Publisher wave then consumer wave over a shared 2-block prefix:
+    consumers skip the shared blocks yet emit bit-identical tokens."""
+    cfg, _ = dense_setup
+    [group] = shared_prompts(cfg, 64, [16, 6, 32, 1], seed=1)
+    waves = [group[:1], group[1:]]
+    kw = dict(n_slots=4, cache_len=128)
+    on, s_on = run_waves(paged_runtime, waves, True, **kw)
+    off, s_off = run_waves(paged_runtime, waves, False, **kw)
+    assert on == off
+    assert s_on.n_prefix_hits == 3
+    assert s_on.n_shared_blocks == 6          # 3 consumers x 2 blocks
+    assert s_on.n_prefill_blocks == s_off.n_prefill_blocks - 6
+    assert s_on.prefix_stats()["hit_rate"] == 0.75
+    assert s_off.prefix_index is None and s_off.prefix_stats() is None
+    assert_drained_clean(s_on)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b"])
+def test_sharing_bit_identical_moe(arch):
+    """Dropless MoE dispatch is dispatch-group invariant, so shared
+    prefix KV stays bit-identical for MoE blocks too."""
+    cfg = get_config(arch, reduced=True)
+    params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+    runtime = make_runtime(cfg.with_(kv_layout="paged", kv_page_size=PAGE),
+                           params)
+    [group] = shared_prompts(cfg, 64, [10, 20, 3], seed=2)
+    waves = [group[:1], group[1:]]
+    kw = dict(n_slots=3, cache_len=128)
+    on, s_on = run_waves(runtime, waves, True, **kw)
+    off, _ = run_waves(runtime, waves, False, **kw)
+    assert on == off
+    assert s_on.n_shared_blocks == 4          # 2 consumers x 2 blocks
+    assert_drained_clean(s_on)
+
+
+# --------------------------------------------------------- plan isolation
+
+
+def test_different_plans_never_share(dense_setup):
+    """The trie is rooted per SparsityPlan name: a consumer under a
+    different effort tier misses a cached prefix entirely (sparse plans
+    change the KV bytes, so cross-plan sharing must be impossible)."""
+    cfg, params = dense_setup
+    plans = tuple(
+        dataclasses.replace(resolve_plan(cfg, effort=e), name=e)
+        for e in ("balanced", "turbo"))
+    runtime = make_runtime(cfg.with_(kv_layout="paged", kv_page_size=PAGE),
+                           params, plans=plans)
+    [group] = shared_prompts(cfg, 64, [12, 12, 12], seed=3)
+    sched = ContinuousBatchingScheduler(runtime, n_slots=2, cache_len=128,
+                                        prefix_cache=True)
+    sched.submit(Request(rid=0, prompt=group[0], max_new=4,
+                         effort="balanced"))
+    sched.run()
+    sched.submit(Request(rid=1, prompt=group[1], max_new=4,
+                         effort="turbo"))
+    sched.run()
+    assert sched.n_prefix_hits == 0           # cross-plan lookup missed
+    sched.submit(Request(rid=2, prompt=group[2], max_new=4,
+                         effort="balanced"))
+    sched.run()
+    assert sched.n_prefix_hits == 1           # same plan hits
+    assert sched.n_shared_blocks == 2
+    # both roots now cache the SAME token keys — under DISJOINT
+    # physical pages (turbo KV bytes differ from balanced KV bytes)
+    idx = sched.prefix_index
+    keys = PrefixIndex.page_keys(group[1], PAGE, 8)
+    bal = idx.lookup("balanced", keys, record=False)
+    tur = idx.lookup("turbo", keys, record=False)
+    assert len(bal) == len(tur) == 8
+    assert not set(bal) & set(tur)
+    assert_drained_clean(sched)
+
+
+# ----------------------------------------- eviction / preemption / chaos
+
+
+def test_eviction_reclaims_cold_prefixes(dense_setup, paged_runtime):
+    """A dry heap evicts cached-but-unreferenced prefixes (LRU, whole
+    subtrees) before preempting live work; outputs stay bit-identical
+    and the heap accounts to zero."""
+    cfg, _ = dense_setup
+    groups = shared_prompts(cfg, 64, [16, 8], seed=4, groups=3)
+    waves = [[g[0]] for g in groups] + [[g[1]] for g in groups]
+    # 14 usable pages: one 80-token request peaks at ~11 pages, so each
+    # new publisher must evict the previous group's 8 cached pages
+    kw = dict(n_slots=2, cache_len=96, n_pages=15)
+    on, s_on = run_waves(paged_runtime, waves, True, **kw)
+    off, _ = run_waves(paged_runtime, waves, False, **kw)
+    assert on == off
+    assert s_on.prefix_index.n_evictions > 0
+    assert_drained_clean(s_on)
+
+
+def test_preemption_with_sharing_bit_identical(dense_setup, paged_runtime):
+    """Concurrent consumers on an oversubscribed heap: decode growth
+    preempts the youngest mid-flight; re-admission re-maps the cached
+    prefix and the greedy output is unchanged."""
+    cfg, _ = dense_setup
+    [group] = shared_prompts(cfg, 32, [4, 2, 6], seed=5)
+
+    def run(n_pages, prefix_cache):
+        sched = ContinuousBatchingScheduler(
+            paged_runtime, n_slots=3, cache_len=96, n_pages=n_pages,
+            prefix_cache=prefix_cache)
+        sched.submit(Request(rid=0, prompt=group[0], max_new=40))
+        sched.run()
+        for i, p in enumerate(group[1:], start=1):
+            sched.submit(Request(rid=i, prompt=p, max_new=40))
+        sched.run()
+        return {r: o.tokens for r, o in sched.finished.items()}, sched
+
+    ample, _ = run(None, False)
+    # 13 usable pages: two consumers decoding to ~10 pages each (4 of
+    # them shared) need 16 -> the youngest is preempted mid-decode
+    tight, s1 = run(14, True)
+    assert ample == tight
+    assert s1.n_preemptions >= 1
+    assert s1.n_prefix_hits >= 1
+    assert_drained_clean(s1)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_chaos_with_sharing_bit_identical(dense_setup, paged_runtime,
+                                          seed):
+    """Deterministic fault injection (forced preemptions + synthetic
+    pressure) over a shared-prefix stream with the cache on: every
+    output matches the fault-free sharing-off run, nothing leaks."""
+    cfg, _ = dense_setup
+    groups = shared_prompts(cfg, 64, [16, 6, 24], seed=6, groups=2)
+    prompts = [p for g in groups for p in g]
+
+    def run(prefix_cache, faults):
+        sched = ContinuousBatchingScheduler(
+            paged_runtime, n_slots=3, cache_len=128, n_pages=40,
+            prefix_cache=prefix_cache, faults=faults)
+        for i, p in enumerate(prompts):
+            sched.submit(Request(rid=i, prompt=p, max_new=8))
+        sched.run()
+        return {r: o.tokens for r, o in sched.finished.items()}, sched
+
+    base, _ = run(False, None)
+    chaos, s1 = run(True, FaultInjector(seed=seed, p_preempt=0.3,
+                                        p_pressure=0.3))
+    assert base == chaos
+    assert s1.faults.n_forced_preempts + s1.faults.n_pressure_events > 0
+    assert_drained_clean(s1)
+
+
+# ------------------------------------------------------ COW partial tail
+
+
+def test_cow_partial_tail(dense_setup, paged_runtime):
+    """A chain that ends mid-block (producible only by partial subtree
+    eviction — publishes are whole-block): the consumer COW-detaches
+    the tail pages, re-prefills the restart block over private copies,
+    and the output is bit-identical to a cold run."""
+    cfg, _ = dense_setup
+    [group] = shared_prompts(cfg, 80, [0], seed=7)
+    prompt = group[0]                          # 80 tokens = 3 blocks
+    sched = ContinuousBatchingScheduler(paged_runtime, n_slots=2,
+                                        cache_len=96, prefix_cache=True)
+    sched.submit(Request(rid=0, prompt=prompt, max_new=5))
+    sched.run()
+    idx = sched.prefix_index
+    keys = PrefixIndex.page_keys(prompt, PAGE, 8)
+    chain = idx.lookup(sched._plan_name(0), keys, record=False)
+    assert len(chain) == 8                     # blocks 0,1 published
+    # evict the subtree below chain position 6 -> a 6-page cached chain
+    # (1 whole block + a 2-page partial tail)
+    assert idx.drop_page(chain[6]) == 2
+    sched.submit(Request(rid=1, prompt=list(prompt), max_new=5))
+    sched.run()
+    assert sched.pool.n_cow_pages == 2         # the tail detached
+    assert sched.n_shared_blocks == 1          # only block 0 skipped
+    cold, _ = run_waves(paged_runtime, [[prompt]], False, max_new=5,
+                        n_slots=2, cache_len=96)
+    assert sched.finished[1].tokens == cold[0]
+    assert sched.finished[1].tokens == sched.finished[0].tokens
+    assert_drained_clean(sched)
+
+
+# -------------------------------------------- shedding / compile counts
+
+
+def test_shed_charges_unshared_blocks_only(dense_setup, paged_runtime):
+    """The predictive deadline shed charges the UNSHARED block count:
+    a cached prefix turns a provably-late request into a feasible one,
+    while an uncached stranger with the same deadline still sheds."""
+    cfg, _ = dense_setup
+    [group] = shared_prompts(cfg, 160, [0, 0], seed=8)
+    rng = np.random.default_rng(9)
+    stranger = rng.integers(0, cfg.vocab, 160).tolist()
+    sched = ContinuousBatchingScheduler(paged_runtime, n_slots=2,
+                                        cache_len=192, prefix_cache=True)
+    sched.submit(Request(rid=0, prompt=group[0], max_new=2))
+    sched.run()                                # blocks 0-3 cached
+    # pretend prefill ticks cost 10s: 5 blocks can never meet 15s, but
+    # the consumer's single unshared block can
+    sched._min_prefill_tick_s = 10.0
+    sched.submit(Request(rid=1, prompt=stranger, max_new=2,
+                         deadline_ms=15_000))
+    sched.submit(Request(rid=2, prompt=group[1], max_new=2,
+                         deadline_ms=15_000))
+    sched.run()
+    assert sched.finished[1].status == "shed"
+    assert "cannot meet" in sched.finished[1].reason
+    assert sched.finished[2].status == "ok"
+    assert sched.n_shared_blocks >= 4
+
+
+def test_no_recompilation_with_prefix_cache(dense_setup):
+    """compile_counts stay flat across shared-prefix traffic including
+    a COW admission — copy_pages is one fixed-width executable warmed
+    by warmup(), shared page tables are traced values like any other."""
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg.with_(kv_layout="paged", kv_page_size=PAGE),
+                           params)
+    sched = ContinuousBatchingScheduler(runtime, n_slots=3,
+                                        cache_len=128, prefix_cache=True)
+    counts = sched.warmup()
+    assert counts["copy_pages"] == 1
+    [group] = shared_prompts(cfg, 80, [0, 8, 16], seed=10)
+    sched.submit(Request(rid=0, prompt=group[0], max_new=4))
+    sched.run()
+    keys = PrefixIndex.page_keys(group[0], PAGE, 8)
+    chain = sched.prefix_index.lookup(sched._plan_name(0), keys,
+                                      record=False)
+    sched.prefix_index.drop_page(chain[6])     # force a COW tail
+    for i, p in enumerate(group[1:], start=1):
+        sched.submit(Request(rid=i, prompt=p, max_new=4))
+    sched.run()
+    assert sched.pool.n_cow_pages >= 2
+    assert sched.n_prefix_hits >= 2
+    assert runtime.compile_counts() == counts
+    assert_drained_clean(sched)
+
+
+def test_prefix_cache_requires_paged(dense_setup):
+    cfg, params = dense_setup
+    runtime = make_runtime(cfg, params)        # slot layout
+    with pytest.raises(ValueError, match="paged"):
+        ContinuousBatchingScheduler(runtime, n_slots=2, cache_len=64,
+                                    prefix_cache=True)

@@ -220,3 +220,67 @@ def test_scheduler_churn_never_leaks(kv_layout, seed, ops):
         assert pool.n_free_pages == pool.n_pages - 1
         assert (pool.page_table == 0).all()
         assert (pool.allocated == 0).all()
+
+
+@pytest.mark.parametrize("prefix_cache", [False, True])
+@given(seed=st.integers(min_value=0, max_value=1 << 16),
+       ops=st.lists(st.sampled_from(
+           ["tick", "tick", "tick", "advance", "cancel0", "cancel1",
+            "cancel2", "cancel3", "preempt", "evict"]),
+           min_size=4, max_size=24))
+@settings(max_examples=8, deadline=None)
+def test_refcounted_churn_ends_consistent(prefix_cache, seed, ops):
+    """Refcounted ownership under ANY interleaving of ticks, cancels,
+    clock jumps, forced preemptions, and manual cache evictions, over a
+    shared-prefix request family on an undersized heap: the drained
+    pool passes the full refcount/partition consistency check, every
+    refcount is zero, and once the index is cleared allocs == frees —
+    with sharing ON and OFF (off must additionally never park anything
+    on the reclaimable list)."""
+    from repro.serving import ContinuousBatchingScheduler, Request
+    cfg, runtime = _churn_runtime("paged")
+    clk = [0.0]
+    sched = ContinuousBatchingScheduler(
+        runtime, n_slots=2, cache_len=96, prefill_batch=2, n_pages=16,
+        prefix_cache=prefix_cache, clock=lambda: clk[0],
+        sleep=lambda dt: clk.__setitem__(0, clk[0] + dt))
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab, 32).tolist()   # one shared block
+    for i in range(5):
+        sched.submit(Request(
+            rid=i,
+            prompt=prefix + rng.integers(
+                0, cfg.vocab, int(rng.integers(1, 41))).tolist(),
+            max_new=int(rng.integers(1, 5)),
+            eos_id=(3 if rng.random() < 0.3 else None),
+            deadline_ms=(float(rng.integers(50, 2000))
+                         if rng.random() < 0.4 else None)))
+    for op in ops:
+        if op == "tick" and not sched.drained:
+            sched.tick()
+        elif op == "advance":
+            clk[0] += 0.25
+        elif op.startswith("cancel"):
+            sched.cancel(int(op[-1]))
+        elif op == "preempt" and sched.active:
+            sched._preempt(max(sched.active.values(),
+                               key=lambda s: s.seq))
+        elif op == "evict" and sched.prefix_index is not None:
+            sched.prefix_index.evict_lru()   # False on empty: fine
+    sched.run()
+    pool = sched.pool
+    assert len(sched.finished) == 5
+    assert pool.total_acquires == pool.total_releases
+    assert sorted(pool._free_slots) == [0, 1]
+    pool.check_consistency()
+    assert (pool.refcount == 0).all()
+    assert (pool.page_table == 0).all()
+    assert (pool.allocated == 0).all()
+    assert pool.n_available_pages == pool.n_pages - 1
+    if prefix_cache:
+        sched.prefix_index.clear()
+        pool.check_consistency()
+    else:
+        assert pool.n_reclaimable == 0
+    assert pool.n_free_pages == pool.n_pages - 1
+    assert pool.total_page_allocs == pool.total_page_frees
