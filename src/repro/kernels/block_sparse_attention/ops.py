@@ -70,7 +70,8 @@ def pooled_block_keys_paged(k_pages, page_table, blk: int):
 
 
 def select_kv_blocks(q, block_keys, pos0s, lengths, *, blk: int,
-                     k_sel: int, attn_tiles: int, a_l, window=None):
+                     k_sel: int, attn_tiles: int, a_l, window=None,
+                     threshold=None):
     """Pooled-QK proxy selection for one query block.
 
     q: [B, N, H, dh] (RoPE applied); block_keys: [B, nc, Kv, dh] pooled
@@ -88,7 +89,18 @@ def select_kv_blocks(q, block_keys, pos0s, lengths, *, blk: int,
     budget fraction scaled onto the row's causally-valid block count
     nv: c = clip(ceil(a_l * nv / attn_tiles), min(2, nv), min(nv,
     k_sel)). The sink block 0 and the diagonal (current) block are
-    force-included via score bias."""
+    force-included via score bias.
+
+    threshold: opt-in FlashPrefill-style ADAPTIVE counts — keep the
+    fewest top-scored blocks whose softmax mass over the k_sel
+    candidates reaches `threshold` (computed on the RAW valid-masked
+    proxy scores, before sink/diagonal forcing, which would saturate a
+    softmax). The per-input count is CAPPED by the plan's budget count
+    (the c above) — the budget stays the worst case, easy inputs spend
+    less. threshold=1.0 keeps every candidate (the `1 +` below absorbs
+    fp cumsum undershoot), so a full budget stays bit-identical to
+    dense. None (default) = fixed budget counts, the pre-existing
+    behavior."""
     B, N, H, dh = q.shape
     nc = block_keys.shape[1]
     Kv = block_keys.shape[2]
@@ -107,7 +119,8 @@ def select_kv_blocks(q, block_keys, pos0s, lengths, *, blk: int,
     if window:
         valid = valid & ((bidx + 1) * blk - 1 > pos0s[:, None] - window)
     big = jnp.float32(1e30)
-    scores = jnp.where(valid, scores, -big)
+    raw = jnp.where(valid, scores, -big)                  # pre-forcing
+    scores = raw
     forced = (bidx == 0) | (bidx == cur[:, None])
     scores = jnp.where(forced & valid, big, scores)
 
@@ -116,6 +129,27 @@ def select_kv_blocks(q, block_keys, pos0s, lengths, *, blk: int,
     a = jnp.asarray(a_l, jnp.int32)
     c = (a * nv + attn_tiles - 1) // attn_tiles
     c = jnp.clip(c, jnp.minimum(2, nv), jnp.minimum(nv, k_sel))
+    if threshold is not None:
+        # softmax mass of the candidates' RAW scores, best-first:
+        # c_adaptive = smallest count whose inclusive mass reaches the
+        # threshold. Invalid candidates carry exp(-inf) = 0 mass.
+        top_raw = jnp.sort(
+            jnp.take_along_axis(raw, top_idx, axis=-1), axis=-1)[:, ::-1]
+        vmask = top_raw > -big / 2
+        # floor valid weights above 0 so an extreme score gap cannot
+        # underflow a candidate out of the mass entirely: at
+        # threshold=1.0 the inclusive mass stays < 1.0 until the LAST
+        # valid candidate, so every candidate is kept (dense at full
+        # budget stays bit-identical)
+        w = jnp.where(vmask,
+                      jnp.maximum(jnp.exp(top_raw - top_raw[:, :1]),
+                                  1e-30), 0.0)
+        mass = jnp.cumsum(w, axis=-1) / jnp.maximum(
+            jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+        thr = jnp.asarray(threshold, jnp.float32)
+        c_adaptive = 1 + jnp.sum(mass < thr, axis=-1).astype(jnp.int32)
+        c = jnp.minimum(c, jnp.clip(c_adaptive, jnp.minimum(2, nv),
+                                    jnp.minimum(nv, k_sel)))
     # live prefix in ascending block order; dead slots keyed past nc so
     # a stable argsort pushes them to the tail
     slot = jnp.arange(k_sel)[None, :]

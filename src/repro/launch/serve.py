@@ -68,6 +68,18 @@ per-status counts, goodput, and degradation/fault stats:
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --stream --requests 16 --rate 200 --deadline-ms 60000 \
       --degrade --chaos-seed 0
+
+Self-speculative decode (--speculate K[,draft_tier]): decode ticks
+draft K tokens per active request under the (sparser) draft tier's
+pre-compiled executables, then verify all K+1 positions in ONE chunked
+call under each request's own plan, emitting the longest agreeing
+prefix plus the verifier's bonus token. Greedy output is BIT-identical
+to speculation off — the draft plan affects only latency. A stats line
+reports per-tier acceptance rate and tokens per row-tick:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --stream --requests 16 --effort balanced,turbo \
+      --speculate 4,turbo
 """
 from __future__ import annotations
 
@@ -87,7 +99,7 @@ from repro.models.registry import get_model
 from repro.nn.param import init_params
 from repro.serving import (AdmissionController, ContinuousBatchingScheduler,
                            FaultInjector, Request, StaticEngine,
-                           drive_stream, load_trace)
+                           drive_stream, load_trace, parse_speculate_arg)
 from repro.serving.runtime import make_runtime
 from repro.serving.trace import trace_stats
 from repro.training.checkpoint import load_checkpoint
@@ -236,6 +248,9 @@ def serve_stream(cfg, params, args):
         print(f"calibrated layer importance on {len(samples)} prompts: "
               f"{[round(float(s), 4) for s in importance]}")
 
+    speculative = (parse_speculate_arg(args.speculate)
+                   if args.speculate else None)
+
     plans = None
     if cfg.ff.enabled:
         names = ["balanced"] + [e for e in dict.fromkeys(
@@ -244,6 +259,9 @@ def serve_stream(cfg, params, args):
             # degradation needs ladder room: register every tier (all
             # pre-compiled by warmup, so escalation costs zero compiles)
             names += [e for e in EFFORT_TIERS if e not in names]
+        if speculative is not None and speculative.draft not in names:
+            # the draft tier must be a registered (pre-compiled) plan
+            names.append(speculative.draft)
         # register under the bare tier names: calibrated plans resolve
         # as "<tier>-layerwise", but requests address them by tier
         plans = tuple(
@@ -260,7 +278,7 @@ def serve_stream(cfg, params, args):
         runtime, n_slots=args.slots, cache_len=cache_len, seed=args.seed,
         prefill_batch=args.prefill_batch, page_size=args.page_size,
         n_pages=args.pool_pages, admission=admission, faults=faults,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache, speculative=speculative)
 
     # warmup compiles every entry point through the scheduler's own pool
     counts0 = sched.warmup()
@@ -342,6 +360,22 @@ def serve_stream(cfg, params, args):
     if sp.get("aggregate_attn_flop_frac") is not None:
         print(f"sparsity aggregate attn block frac (work-weighted): "
               f"{sp['aggregate_attn_flop_frac']:.3f}")
+    ss = sched.speculative_stats()
+    if ss is not None:
+        print(f"speculation k={ss['k']} draft={ss['draft']}: "
+              f"{ss['spec_ticks']} speculative decode ticks")
+        for row in ss["plans"]:
+            if row["row_ticks"] == 0:
+                continue
+            acc = (f"{row['acceptance_rate']:.2%} "
+                   f"({row['accepted']}/{row['drafted']} drafts)"
+                   if row["acceptance_rate"] is not None
+                   else "n/a (0 drafts)")
+            print(f"  spec[{row['name']}<-{row['draft_plan']}]: "
+                  f"acceptance {acc} | "
+                  f"{row['tokens_per_row_tick']:.2f} tok/row-tick "
+                  f"({row['emitted']} emitted in {row['row_ticks']} "
+                  f"row ticks)")
     print(f"ticks {sched.n_ticks} | prefill blocks "
           f"{sched.n_prefill_blocks} in {sched.n_prefill_ticks} prefill "
           f"ticks (P<={sched.prefill_batch}) | decode steps "
@@ -433,6 +467,20 @@ def main():
                         "route new admissions to sparser effort tiers "
                         "while queue/free-space watermarks are tripped "
                         "(AdmissionController; all tiers pre-compiled)")
+    p.add_argument("--speculate", default=None, metavar="K[,TIER]",
+                   help="stream mode: self-speculative decode — draft "
+                        "K tokens per tick under the (sparser) TIER "
+                        "plan (default turbo), verify all K+1 in one "
+                        "chunked call under each request's own plan. "
+                        "Greedy output is bit-identical to speculation "
+                        "off; trace records may cap it per-request "
+                        "with a 'speculate' field")
+    p.add_argument("--attn-threshold", type=float, default=None,
+                   help="opt-in FlashPrefill-style adaptive attention "
+                        "block counts: keep the fewest top-scored KV "
+                        "blocks reaching this proxy-softmax mass, "
+                        "capped by the plan budget (1.0 = keep all, "
+                        "bit-identical to the fixed budget)")
     p.add_argument("--chaos-seed", type=int, default=None,
                    help="stream mode: run under deterministic fault "
                         "injection with this seed (forced preemptions, "
@@ -450,6 +498,8 @@ def main():
         cfg = cfg.with_ff(enabled=False)
     if args.attn_sparsity is not None:
         cfg = cfg.with_ff(attn_sparsity=args.attn_sparsity)
+    if args.attn_threshold is not None:
+        cfg = cfg.with_ff(attn_threshold=args.attn_threshold)
     if args.kv_layout:
         cfg = cfg.with_(kv_layout=args.kv_layout)
     if args.trace and not args.stream:
@@ -463,6 +513,12 @@ def main():
     if ((args.deadline_ms is not None or args.degrade
          or args.chaos_seed is not None) and not args.stream):
         p.error("--deadline-ms/--degrade/--chaos-seed require --stream")
+    if args.speculate is not None:
+        if not args.stream:
+            p.error("--speculate requires --stream")
+        if not cfg.ff.enabled:
+            p.error("--speculate needs SparsityPlan tiers "
+                    "(incompatible with --dense)")
     params = build_params(cfg, args.checkpoint)
     if args.stream:
         serve_stream(cfg, params, args)

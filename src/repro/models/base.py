@@ -37,6 +37,13 @@ class FastForwardConfig:
     # k_valid. See the DESIGN note in core/fastforward.py.
     attn_sparsity: float = 0.0
     attn_tiles: int = 16           # virtual attention-budget grid per layer
+    # Opt-in FlashPrefill-style ADAPTIVE block counts (0.0 = off): keep
+    # the fewest top-scored KV blocks whose proxy-softmax mass reaches
+    # this threshold, CAPPED by the plan's per-layer budget — the
+    # budget stays the worst case, easy inputs spend less. 1.0 keeps
+    # every candidate (bit-identical to the fixed-budget behavior).
+    # See kernels/block_sparse_attention/ops.select_kv_blocks.
+    attn_threshold: float = 0.0
 
     def predictor_r(self, d_model: int) -> int:
         if self.predictor_dim:

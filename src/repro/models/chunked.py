@@ -1,0 +1,97 @@
+"""Multi-token chunk-scored decode built from a model's decode_step.
+
+The speculative-decode protocol (serving/speculative.py) needs two
+fixed-shape entries beyond the single-token decode step:
+
+  * ``draft_steps``  — k argmax-feedback applications of decode_step
+    under the draft plan, writing KV at positions p .. p+k-1;
+  * ``verify_chunk`` — one chunk-scored pass feeding [t0, d_1 .. d_k]
+    at positions p .. p+k under the verify plan, REWRITING the draft's
+    KV so draft-plan state is never read by accepted computation.
+
+Both are ``lax.scan`` loops over the model's OWN single-token
+``decode_step`` body — not a reimplementation — so every per-step
+computation (attention masks, per-row traced plan counts, masked KV
+writes) is bit-identical to the sequential greedy loop by
+construction.  models/{dense,moe}.py re-export thin wrappers bound to
+their decode_step; serving/runtime.py jits those with a static chunk
+width.
+
+Per-row validity rides as a traced [B] int vector (``n_valid`` /
+``n_draft``): step j of a row is live iff ``active[b] and
+j < n_valid[b]``.  Dead steps take the existing masked-write path
+(slot: self-copy; paged: null-page sink), so page-shortage fallback,
+cache_len clamps, temperature rows (n_draft == 0), and k == 0
+degeneration all fit one compiled shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunk_scored", "draft_steps"]
+
+
+def chunk_scored(step_fn, params, cfg, tokens, cache, position, *,
+                 shards: int = 1, window=None, active=None, n_valid=None,
+                 page_table=None, plan=None, plan_ids=None):
+    """Score a [B, T] token chunk with T applications of ``step_fn``.
+
+    tokens[:, 0] is each row's committed next_token t0; tokens[:, 1:]
+    are draft proposals. position: [B] int32 — row b writes KV at
+    position[b] + j on step j (rewriting any draft-plan KV there).
+    n_valid: optional traced [B] int — steps j >= n_valid[b] are
+    masked (no KV write; their outputs are padding).
+
+    Returns (logits0 [B, V], greedy [B, T] int32, cache): the step-0
+    logits (exactly the single-token decode_step logits — used for
+    sampling rows) and the per-step argmax g_0 .. g_{T-1}.
+    """
+    B, T = tokens.shape
+    base = (jnp.ones((B,), dtype=bool) if active is None
+            else jnp.asarray(active))
+
+    def step(cache, inp):
+        j, tok = inp
+        live = base if n_valid is None else base & (j < n_valid)
+        logits, cache = step_fn(params, cfg, tok, cache, position + j,
+                                shards, window, active=live,
+                                page_table=page_table, plan=plan,
+                                plan_ids=plan_ids)
+        return cache, (logits, jnp.argmax(logits, -1).astype(jnp.int32))
+
+    cache, (logits_all, greedy) = jax.lax.scan(
+        step, cache, (jnp.arange(T), jnp.swapaxes(tokens, 0, 1)))
+    return logits_all[0], jnp.swapaxes(greedy, 0, 1), cache
+
+
+def draft_steps(step_fn, params, cfg, token, cache, position, n_steps, *,
+                shards: int = 1, window=None, active=None, n_draft=None,
+                page_table=None, plan=None, plan_ids=None):
+    """Propose ``n_steps`` tokens by argmax feedback of ``step_fn``.
+
+    token: [B] int32 — each row's committed next_token t0.  Step j
+    feeds the previous proposal at position[b] + j; rows with
+    ``j >= n_draft[b]`` stop writing KV and freeze their feedback
+    token (their remaining draft entries are padding the acceptance
+    rule never reads).  n_steps is STATIC (one compile per draft
+    length).  Returns (drafts [B, n_steps] int32, cache).
+    """
+    B = token.shape[0]
+    base = (jnp.ones((B,), dtype=bool) if active is None
+            else jnp.asarray(active))
+
+    def step(carry, j):
+        cache, tok = carry
+        live = base if n_draft is None else base & (j < n_draft)
+        logits, cache = step_fn(params, cfg, tok, cache, position + j,
+                                shards, window, active=live,
+                                page_table=page_table, plan=plan,
+                                plan_ids=plan_ids)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        tok = jnp.where(live, nxt, tok)
+        return (cache, tok), tok
+
+    (cache, _), drafts = jax.lax.scan(step, (cache, jnp.asarray(token)),
+                                      jnp.arange(n_steps))
+    return jnp.swapaxes(drafts, 0, 1), cache

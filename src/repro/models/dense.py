@@ -22,6 +22,7 @@ from repro.nn import param as PM
 from repro.nn import layers as L
 from repro.nn import attention as A
 from repro.core import fastforward as FF
+from repro.models import chunked as CH
 from repro.distributed.sharding import constrain
 
 
@@ -185,7 +186,8 @@ def prefill_block(params, cfg: ModelConfig, tok_blk, cache, pos0, *,
         h = A.attend_block_cached(lp["attn"], xn, kc, vc, pos0,
                                   window=cfg.sliding_window,
                                   rope_theta=cfg.rope_theta,
-                                  lengths=lengths, attn_sel=attn_sel)
+                                  lengths=lengths, attn_sel=attn_sel,
+                                  attn_threshold=ff.attn_threshold or None)
         x = x + h
         xn2 = apply_norm(cfg, lp["ln2"], x)
         if plan is not None and cfg.shardmap_ffn and mesh is not None:
@@ -272,7 +274,9 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
             h = A.attend_block_rows(lp["attn"], xn, kc, vc, pos0s,
                                     window=cfg.sliding_window,
                                     rope_theta=cfg.rope_theta,
-                                    lengths=lengths, attn_sel=attn_sel)
+                                    lengths=lengths, attn_sel=attn_sel,
+                                    attn_threshold=(ff.attn_threshold
+                                                    or None))
         else:
             kc, vc = A.write_kv_rows_paged(kc, vc, k_new, v_new,
                                            page_tables, pos0s,
@@ -282,7 +286,9 @@ def prefill_blocks(params, cfg: ModelConfig, tok_blks, cache, pos0s, *,
                                           window=cfg.sliding_window,
                                           rope_theta=cfg.rope_theta,
                                           lengths=lengths,
-                                          attn_sel=attn_sel)
+                                          attn_sel=attn_sel,
+                                          attn_threshold=(ff.attn_threshold
+                                                          or None))
         x = x + h
         xn2 = apply_norm(cfg, lp["ln2"], x)
         if plan is not None:
@@ -506,3 +512,18 @@ def decode_step(params, cfg: ModelConfig, token, cache, position,
     x = apply_norm(cfg, params["ln_f"], x)
     logits = L.unembed(params["lm_head"], x[:, 0, :])
     return logits, {"k": ks, "v": vs}
+
+
+def decode_chunk(params, cfg: ModelConfig, tokens, cache, position, **kw):
+    """Chunk-scored multi-token decode: a lax.scan over THIS module's
+    decode_step (speculative verify entry — see models/chunked.py)."""
+    return CH.chunk_scored(decode_step, params, cfg, tokens, cache,
+                           position, **kw)
+
+
+def decode_draft(params, cfg: ModelConfig, token, cache, position,
+                 n_steps, **kw):
+    """Argmax-feedback draft proposals over THIS module's decode_step
+    (speculative draft entry — see models/chunked.py)."""
+    return CH.draft_steps(decode_step, params, cfg, token, cache,
+                          position, n_steps, **kw)

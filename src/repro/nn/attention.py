@@ -179,7 +179,7 @@ def attend_full(params, x, positions, *, causal=True, window=None,
 
 def attend_block_cached(params, x_block, k_cache, v_cache, pos0, *,
                         window=None, rope_theta=10000.0, use_rope=True,
-                        lengths=None, attn_sel=None):
+                        lengths=None, attn_sel=None, attn_threshold=None):
     """Blockwise prefill: query block attends to cache[:pos0+block].
 
     x_block: [B,N,D]; k_cache/v_cache: [B,S,Kv,dh] with the current block
@@ -196,7 +196,8 @@ def attend_block_cached(params, x_block, k_cache, v_cache, pos0, *,
                                  pos0s, window=window,
                                  rope_theta=rope_theta,
                                  use_rope=use_rope, lengths=lengths,
-                                 attn_sel=attn_sel)
+                                 attn_sel=attn_sel,
+                                 attn_threshold=attn_threshold)
     positions = pos0 + jnp.arange(N)[None, :]
     theta = rope_theta if use_rope else None
     q = project_q(params, x_block, positions, theta)
@@ -230,7 +231,7 @@ def attn_sel_width(attn_sel, n_blocks: int) -> int:
 
 def attend_block_rows(params, x_block, k_cache, v_cache, pos0s, *,
                       window=None, rope_theta=10000.0, use_rope=True,
-                      lengths=None, attn_sel=None):
+                      lengths=None, attn_sel=None, attn_threshold=None):
     """Per-row-offset blockwise prefill: row b's query block sits at
     absolute positions [pos0s[b], pos0s[b]+N) of ITS OWN sequence.
 
@@ -264,7 +265,7 @@ def attend_block_rows(params, x_block, k_cache, v_cache, pos0s, *,
         ids, cnts = BSA.select_kv_blocks(
             q, BSA.pooled_block_keys(k_cache, N), pos0s, lens, blk=N,
             k_sel=attn_sel_width(attn_sel, nc), attn_tiles=attn_tiles,
-            a_l=a_l, window=window)
+            a_l=a_l, window=window, threshold=attn_threshold)
         o = BSA.block_sparse_prefill_op(q, k_cache, v_cache, ids, cnts,
                                         pos0s, lens, blk=N,
                                         window=window)
@@ -490,7 +491,8 @@ def write_kv_tok_paged(k_pages, v_pages, k_new, v_new, page_table,
 
 def attend_block_rows_paged(params, x_block, k_pages, v_pages, page_table,
                             pos0s, *, window=None, rope_theta=10000.0,
-                            use_rope=True, lengths=None, attn_sel=None):
+                            use_rope=True, lengths=None, attn_sel=None,
+                            attn_threshold=None):
     """Paged twin of `attend_block_rows`: per-row-offset blockwise
     prefill attention indexing the KV pool through page tables. Without
     a block-sparse budget the gathered contiguous views feed the
@@ -512,7 +514,8 @@ def attend_block_rows_paged(params, x_block, k_pages, v_pages, page_table,
         ids, cnts = BSA.select_kv_blocks(
             q, BSA.pooled_block_keys_paged(k_pages, page_table, N),
             pos0s, lens, blk=N, k_sel=attn_sel_width(attn_sel, nc),
-            attn_tiles=attn_tiles, a_l=a_l, window=window)
+            attn_tiles=attn_tiles, a_l=a_l, window=window,
+            threshold=attn_threshold)
         o = BSA.block_sparse_prefill_paged_op(
             q, k_pages, v_pages, page_table, ids, cnts, pos0s, lens,
             blk=N, window=window)

@@ -23,8 +23,14 @@ Layering (see ROADMAP.md "Serving architecture"):
       prefix_index.PrefixIndex  host-side (plan, token-chain) trie over
                                 cached pages (prefix_cache=True): prefix
                                 hits skip whole prefill blocks
+      speculative.SpeculativeConfig
+                                self-speculative decoding: sparse-plan
+                                draft + own-plan chunk verify on the
+                                SAME weights (pure acceptance rule;
+                                greedy output bit-identical on/off)
       runtime.ModelRuntime      jitted prefill_block / decode_step per
                                 model family (dense, MoE) + paged twins
+                                + draft_steps / verify_chunk protocol
       trace.load_trace          real-traffic jsonl trace replay
 """
 from repro.serving.admission import AdmissionConfig, AdmissionController
@@ -38,6 +44,8 @@ from repro.serving.runtime import (DenseRuntime, ModelRuntime, MoeRuntime,
 from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
                                      RequestOutput, SchedulerStallError,
                                      drive_stream)
+from repro.serving.speculative import (SpeculativeConfig, accept_drafts,
+                                       parse_speculate_arg)
 from repro.serving.trace import load_trace
 
 __all__ = [
@@ -46,7 +54,8 @@ __all__ = [
     "FaultInjector", "GenerationResult", "KVSlotPool", "ModelRuntime",
     "MoeRuntime", "PagedKVPool", "PrefixIndex", "Request",
     "RequestOutput",
-    "SchedulerStallError", "StaticEngine", "drive_stream",
+    "SchedulerStallError", "SpeculativeConfig", "StaticEngine",
+    "accept_drafts", "drive_stream",
     "load_trace",
-    "make_runtime",
+    "make_runtime", "parse_speculate_arg",
 ]

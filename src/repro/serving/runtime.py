@@ -23,6 +23,16 @@ touches model internals — it sees four operations:
                                   page pool and requests address it
                                   through traced [*, max_pages] page
                                   tables (serving/page_pool.py)
+  draft_steps / verify_chunk      speculative-decode protocol entries
+  (+ _paged twins)                (serving/speculative.py): k argmax-
+                                  feedback draft steps under the draft
+                                  plan, then ONE chunk-scored pass over
+                                  the fixed [n_slots, k+1] batch under
+                                  each row's verify plan — both are
+                                  lax.scan loops over the model's own
+                                  decode_step body (models/chunked.py),
+                                  warmed at warmup so compile counts
+                                  stay flat (k is the only static)
 
 Every operation is jitted once with fixed shapes — the prefill entries
 trace over (slot, pos0, is_dense, length, active) as *values* and P is
@@ -179,6 +189,18 @@ class _JittedRuntime:
             static_argnames=("plan",))
         self._decode_paged = jax.jit(self._decode_paged_impl,
                                      donate_argnums=(1,))
+        # speculative-decode protocol entries: the draft length is the
+        # only static (one compile per k, pre-warmed); everything else
+        # — tokens, positions, per-row validity, plan ids — is traced,
+        # so the churning request mix reuses one executable per layout
+        self._draft = jax.jit(self._draft_impl, donate_argnums=(1,),
+                              static_argnames=("n_steps",))
+        self._verify = jax.jit(self._verify_impl, donate_argnums=(1,))
+        self._draft_paged = jax.jit(self._draft_paged_impl,
+                                    donate_argnums=(1,),
+                                    static_argnames=("n_steps",))
+        self._verify_paged = jax.jit(self._verify_paged_impl,
+                                     donate_argnums=(1,))
         # COW page copy (prefix sharing): cache donated like every
         # other cache-threading entry; src/dst are traced fixed-width
         # int32 vectors (scheduler pads with null self-copies), so all
@@ -243,6 +265,25 @@ class _JittedRuntime:
             params, self.cfg, tokens, cache, positions,
             shards=self.shards, window=self.cfg.sliding_window,
             active=active, page_table=table, plan=plan, plan_ids=ids)
+
+    def _model_decode_draft(self, params, tokens, cache, positions,
+                            active, n_draft, plan_ids, n_steps,
+                            table=None):
+        plan, ids = self._decode_plan_args(plan_ids)
+        return self.model.decode_draft(
+            params, self.cfg, tokens, cache, positions, n_steps,
+            shards=self.shards, window=self.cfg.sliding_window,
+            active=active, n_draft=n_draft, page_table=table,
+            plan=plan, plan_ids=ids)
+
+    def _model_decode_chunk(self, params, tokens, cache, positions,
+                            active, n_valid, plan_ids, table=None):
+        plan, ids = self._decode_plan_args(plan_ids)
+        return self.model.decode_chunk(
+            params, self.cfg, tokens, cache, positions,
+            shards=self.shards, window=self.cfg.sliding_window,
+            active=active, n_valid=n_valid, page_table=table,
+            plan=plan, plan_ids=ids)
 
     # -- jitted impls --------------------------------------------------
 
@@ -324,6 +365,29 @@ class _JittedRuntime:
             params, tokens, cache, table, positions, active, plan_ids)
         return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
+    def _draft_impl(self, params, cache, tokens, positions, active,
+                    n_draft, plan_ids, n_steps):
+        return self._model_decode_draft(params, tokens, cache, positions,
+                                        active, n_draft, plan_ids,
+                                        n_steps)
+
+    def _verify_impl(self, params, cache, tokens, positions, active,
+                     n_valid, plan_ids):
+        return self._model_decode_chunk(params, tokens, cache, positions,
+                                        active, n_valid, plan_ids)
+
+    def _draft_paged_impl(self, params, cache, tokens, table, positions,
+                          active, n_draft, plan_ids, n_steps):
+        return self._model_decode_draft(params, tokens, cache, positions,
+                                        active, n_draft, plan_ids,
+                                        n_steps, table=table)
+
+    def _verify_paged_impl(self, params, cache, tokens, table, positions,
+                           active, n_valid, plan_ids):
+        return self._model_decode_chunk(params, tokens, cache, positions,
+                                        active, n_valid, plan_ids,
+                                        table=table)
+
     def _copy_pages_impl(self, cache, src, dst):
         return A.copy_kv_pages(cache, src, dst)
 
@@ -392,6 +456,58 @@ class _JittedRuntime:
             jnp.asarray(positions, jnp.int32), jnp.asarray(active, bool),
             jnp.asarray(plan_ids, jnp.int32))
 
+    def draft_steps(self, cache, tokens, positions, active, n_draft, k,
+                    plan_ids=None):
+        """k argmax-feedback draft steps for the whole slot pool under
+        the draft plan(s) in plan_ids. tokens: [n_slots] committed next
+        tokens; n_draft: [n_slots] per-row valid draft counts (<= k —
+        rows stop writing KV past their count); k is STATIC. Returns
+        (drafts [n_slots, k] int32, cache)."""
+        if plan_ids is None:
+            plan_ids = np.zeros(len(np.asarray(tokens)), np.int32)
+        return self._draft(
+            self.params, cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(positions, jnp.int32), jnp.asarray(active, bool),
+            jnp.asarray(n_draft, jnp.int32),
+            jnp.asarray(plan_ids, jnp.int32), n_steps=int(k))
+
+    def verify_chunk(self, cache, tokens, positions, active, n_valid,
+                     plan_ids=None):
+        """ONE chunk-scored pass over the fixed [n_slots, k+1] batch
+        under each row's own (verify) plan, REWRITING the draft's KV at
+        positions p .. p+k-1. n_valid: [n_slots] per-row valid chunk
+        widths (n_draft + 1). Returns (logits0 [n_slots, V],
+        greedy [n_slots, k+1] int32, cache)."""
+        if plan_ids is None:
+            plan_ids = np.zeros(len(np.asarray(positions)), np.int32)
+        return self._verify(
+            self.params, cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(positions, jnp.int32), jnp.asarray(active, bool),
+            jnp.asarray(n_valid, jnp.int32),
+            jnp.asarray(plan_ids, jnp.int32))
+
+    def draft_steps_paged(self, cache, tokens, page_table, positions,
+                          active, n_draft, k, plan_ids=None):
+        if plan_ids is None:
+            plan_ids = np.zeros(len(np.asarray(tokens)), np.int32)
+        return self._draft_paged(
+            self.params, cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(page_table, jnp.int32),
+            jnp.asarray(positions, jnp.int32), jnp.asarray(active, bool),
+            jnp.asarray(n_draft, jnp.int32),
+            jnp.asarray(plan_ids, jnp.int32), n_steps=int(k))
+
+    def verify_chunk_paged(self, cache, tokens, page_table, positions,
+                           active, n_valid, plan_ids=None):
+        if plan_ids is None:
+            plan_ids = np.zeros(len(np.asarray(positions)), np.int32)
+        return self._verify_paged(
+            self.params, cache, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(page_table, jnp.int32),
+            jnp.asarray(positions, jnp.int32), jnp.asarray(active, bool),
+            jnp.asarray(n_valid, jnp.int32),
+            jnp.asarray(plan_ids, jnp.int32))
+
     def copy_pages(self, cache, src_pages, dst_pages):
         """Device COW copy src -> dst across every cache leaf (page
         axis 1). Fixed-width traced indices: the scheduler pads short
@@ -418,6 +534,10 @@ class _JittedRuntime:
             "prefill_blocks_paged": jit_cache_size(
                 self._prefill_blocks_paged),
             "decode_step_paged": jit_cache_size(self._decode_paged),
+            "draft_steps": jit_cache_size(self._draft),
+            "verify_chunk": jit_cache_size(self._verify),
+            "draft_steps_paged": jit_cache_size(self._draft_paged),
+            "verify_chunk_paged": jit_cache_size(self._verify_paged),
             "copy_pages": jit_cache_size(self._copy_pages),
             "logits_at": jit_cache_size(self._logits_at),
         }

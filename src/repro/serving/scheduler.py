@@ -96,6 +96,7 @@ from repro.serving.cache_pool import KVSlotPool
 from repro.serving.page_pool import PagedKVPool
 from repro.serving.prefix_index import PrefixIndex
 from repro.serving.runtime import ModelRuntime
+from repro.serving.speculative import SpeculativeConfig, accept_drafts
 
 
 @dataclasses.dataclass
@@ -119,6 +120,12 @@ class Request:
     # trace replay: the client cancels this many seconds after arrival
     # (drive_stream issues the cancel; see serving/trace.py)
     cancel_after_s: Optional[float] = None
+    # per-request cap on the speculative draft length (tokens drafted
+    # per decode tick); None -> the scheduler's SpeculativeConfig.k,
+    # 0 -> speculation off for this request. Only latency-relevant:
+    # greedy output is bit-identical for every value (the verify plan
+    # is always the request's own plan).
+    speculate: Optional[int] = None
     # scheduler-internal: plan index pinned at FIRST admission (the
     # degradation decision sticks, so preemption re-admits under the
     # SAME tier and stays output-transparent). Not a user field.
@@ -194,7 +201,8 @@ class ContinuousBatchingScheduler:
                  n_pages: Optional[int] = None,
                  admission: Optional[AdmissionController] = None,
                  faults=None, stall_ticks: int = 1000,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 speculative: Optional[SpeculativeConfig] = None):
         self.runtime = runtime
         layout = getattr(runtime.cfg, "kv_layout", "slot")
         self.kv_layout = layout
@@ -257,6 +265,31 @@ class ContinuousBatchingScheduler:
         n_plans = max(len(self.plans), 1)
         self.plan_prefill_blocks = np.zeros(n_plans, np.int64)
         self.plan_decode_tokens = np.zeros(n_plans, np.int64)
+        # self-speculative decoding (serving/speculative.py): drafts
+        # come from the SAME weights under the named (sparser) plan, so
+        # both executables are already registered. Per-VERIFY-plan
+        # draft index, clamped so a degraded request's draft is never
+        # DENSER than its verify plan (flop_frac orders the tiers).
+        self.speculative = speculative
+        self.n_spec_ticks = 0
+        self.spec_row_ticks = np.zeros(n_plans, np.int64)
+        self.spec_drafted = np.zeros(n_plans, np.int64)
+        self.spec_accepted = np.zeros(n_plans, np.int64)
+        self.spec_emitted = np.zeros(n_plans, np.int64)
+        if speculative is not None and speculative.k > 0:
+            if speculative.draft not in self.plan_index:
+                raise ValueError(
+                    f"speculative draft plan {speculative.draft!r} is not "
+                    f"a registered SparsityPlan "
+                    f"(have {sorted(self.plan_index)}); pass plans= to "
+                    f"make_runtime / serve.py --effort")
+            di = self.plan_index[speculative.draft]
+            dff = self.plans[di].flop_frac()
+            self._draft_plan_for = np.array(
+                [di if self.plans[i].flop_frac() >= dff else i
+                 for i in range(len(self.plans))], np.int32)
+        else:
+            self._draft_plan_for = np.zeros(n_plans, np.int32)
         # overload-resilience layer: admission controller (deadline
         # shedding + hysteretic tier degradation, serving/admission.py)
         # and deterministic fault injector (serving/faults.py). The
@@ -317,6 +350,9 @@ class ContinuousBatchingScheduler:
             raise ValueError(f"request {req.rid}: max_new must be >= 1 "
                              f"(the first token is sampled from prefill "
                              f"logits and always emitted)")
+        if req.speculate is not None and req.speculate < 0:
+            raise ValueError(f"request {req.rid}: speculate must be >= 0, "
+                             f"got {req.speculate}")
         if req.effort is not None and req.effort not in self.plan_index:
             raise ValueError(
                 f"request {req.rid}: effort {req.effort!r} is not a "
@@ -521,6 +557,7 @@ class ContinuousBatchingScheduler:
                 "emitted": self._total_emitted,
                 "prefill_blocks": self.n_prefill_blocks,
                 "decode_steps": self.n_decode_steps,
+                "spec_ticks": self.n_spec_ticks,
                 "preemptions": self.n_preemptions,
                 "shed": self.n_shed, "timed_out": self.n_timed_out,
                 "cancelled": self.n_cancelled,
@@ -584,6 +621,27 @@ class ContinuousBatchingScheduler:
                         np.arange(w, dtype=np.int32), np.zeros(w, np.int32),
                         np.zeros(w, bool), np.ones(w, np.int32),
                         np.zeros(w, bool), plan=plan)
+        if self.speculative is not None and self.speculative.k > 0:
+            # pre-compile the speculative protocol entries with an all-
+            # inactive call each (masked writes are self-copies — slot
+            # KV untouched, paged all-null tables sink into the null
+            # page). The throwaway request already compiled the chunk
+            # entry but its max_new=2 never drafts (the bonus token
+            # claims the last emission), so the draft entry needs this.
+            kd = self.speculative.k
+            z = np.zeros(self.n_slots, np.int32)
+            f = np.zeros(self.n_slots, bool)
+            ch = np.zeros((self.n_slots, kd + 1), np.int32)
+            if self.paged:
+                _, self.pool.cache = self.runtime.draft_steps_paged(
+                    self.pool.cache, z, self.pool.page_table, z, f, z, kd)
+                _, _, self.pool.cache = self.runtime.verify_chunk_paged(
+                    self.pool.cache, ch, self.pool.page_table, z, f, z + 1)
+            else:
+                _, self.pool.cache = self.runtime.draft_steps(
+                    self.pool.cache, z, z, f, z, kd)
+                _, _, self.pool.cache = self.runtime.verify_chunk(
+                    self.pool.cache, ch, z, f, z + 1)
         self.finished.clear()
         self._admit_seq = 0
         self.n_ticks = self.n_prefill_blocks = self.n_decode_steps = 0
@@ -599,6 +657,11 @@ class ContinuousBatchingScheduler:
         self.faults = faults
         self.plan_prefill_blocks[:] = 0
         self.plan_decode_tokens[:] = 0
+        self.n_spec_ticks = 0
+        self.spec_row_ticks[:] = 0
+        self.spec_drafted[:] = 0
+        self.spec_accepted[:] = 0
+        self.spec_emitted[:] = 0
         self.pool.total_acquires = self.pool.total_releases = 0
         self.pool.max_in_use = 0
         self.pool.stranded_tokens_at_peak = 0
@@ -1082,6 +1145,8 @@ class ContinuousBatchingScheduler:
                    for i, (st, _) in enumerate(batch))
 
     def _decode_all(self) -> int:
+        if self.speculative is not None and self.speculative.k > 0:
+            return self._decode_all_speculative()
         decoding = [s for s in self.active.values() if s.phase == "decode"]
         if self.paged:
             # each decoding row must own the page covering its write
@@ -1136,6 +1201,139 @@ class ContinuousBatchingScheduler:
             self._maybe_finish(st)
         return emitted
 
+    def _spec_draft_limit(self, st: _ActiveState) -> int:
+        """How many tokens this row may draft THIS tick (0 .. k):
+        capped by the request's own `speculate` field, the tokens it
+        can still emit (the bonus token claims one), and the cache
+        positions left (the chunk writes p .. p+lim). Temperature > 0
+        rows never draft — their tick must replay the exact
+        non-speculative sampling step (the chunk's step-0 logits ARE
+        that step's logits, so lim = 0 degenerates to it)."""
+        if st.req.temperature > 0:
+            return 0
+        lim = self.speculative.k
+        if st.req.speculate is not None:
+            lim = min(lim, st.req.speculate)
+        lim = min(lim, st.req.max_new - len(st.out) - 1)
+        lim = min(lim, self.cache_len - 1 - st.pos)
+        return max(lim, 0)
+
+    def _decode_all_speculative(self) -> int:
+        """One speculative decode tick (serving/speculative.py):
+        draft `n_draft[row]` tokens per row under its draft plan, score
+        all n_draft+1 positions in ONE chunk entry under its own
+        (verify) plan — REWRITING the draft's KV — then emit the
+        longest agreeing prefix plus the verifier's bonus token.
+
+        Rollback of rejected writes: the slot layout just never
+        advances `pool.lengths`/`st.pos` past the accepted position
+        (stale bytes beyond it are rewritten before any later step can
+        attend them — the mask is `kj <= position`); the paged layout
+        additionally truncates tail pages past the accepted position
+        (`unmap_tail`) so alloc/free accounting stays exact. Tail
+        pages are always exclusively-owned decode growth: published
+        prefix pages cover only pre-last-block prompt positions
+        (< prompt_len <= pos), so truncation can never touch them."""
+        k = self.speculative.k
+        psz = self.pool.page_size if self.paged else 0
+        decoding = []
+        n_draft = np.zeros(self.n_slots, np.int32)
+        for st in sorted((s for s in self.active.values()
+                          if s.phase == "decode"), key=lambda s: s.seq):
+            if self.active.get(st.slot) is not st:
+                continue               # preempted by an earlier row's grow
+            lim = self._spec_draft_limit(st)
+            if self.paged:
+                # base coverage (the committed token's page) may evict/
+                # preempt exactly like the non-speculative tick; the
+                # SPECULATIVE extra pages are only taken from the free
+                # heap — never preempting live work just to draft
+                if not self._ensure_pages(st, st.pos // psz + 1):
+                    continue           # stalled this tick, retried
+                while lim > 0 and not self.pool.ensure(
+                        st.slot, (st.pos + lim) // psz + 1):
+                    lim -= 1
+            n_draft[st.slot] = lim
+            decoding.append(st)
+        if not decoding:
+            return 0
+        tokens = np.zeros(self.n_slots, np.int32)
+        positions = np.zeros(self.n_slots, np.int32)
+        active = np.zeros(self.n_slots, bool)
+        verify_ids = np.zeros(self.n_slots, np.int32)
+        draft_ids = np.zeros(self.n_slots, np.int32)
+        for st in decoding:
+            tokens[st.slot] = st.next_token
+            positions[st.slot] = st.pos
+            active[st.slot] = True
+            verify_ids[st.slot] = st.plan_idx
+            draft_ids[st.slot] = self._draft_plan_for[st.plan_idx]
+        chunk = np.zeros((self.n_slots, k + 1), np.int32)
+        chunk[:, 0] = tokens
+        if int(n_draft.max()) > 0:
+            if self.paged:
+                drafts, self.pool.cache = self.runtime.draft_steps_paged(
+                    self.pool.cache, tokens, self.pool.page_table,
+                    positions, active, n_draft, k, plan_ids=draft_ids)
+            else:
+                drafts, self.pool.cache = self.runtime.draft_steps(
+                    self.pool.cache, tokens, positions, active, n_draft,
+                    k, plan_ids=draft_ids)
+            chunk[:, 1:] = np.asarray(drafts)
+        if self.paged:
+            logits0, greedy, self.pool.cache = self.runtime.verify_chunk_paged(
+                self.pool.cache, chunk, self.pool.page_table, positions,
+                active, n_draft + 1, plan_ids=verify_ids)
+        else:
+            logits0, greedy, self.pool.cache = self.runtime.verify_chunk(
+                self.pool.cache, chunk, positions, active, n_draft + 1,
+                plan_ids=verify_ids)
+        self.n_decode_steps += 1
+        self.n_spec_ticks += 1
+        greedy = np.asarray(greedy)
+        logits0_np = (np.asarray(logits0)
+                      if any(s.req.temperature > 0 for s in decoding)
+                      else None)
+        emitted = 0
+        for st in decoding:
+            nd = int(n_draft[st.slot])
+            if st.req.temperature > 0:
+                # exact non-speculative sampling tick: nd == 0, and the
+                # chunk's step-0 logits are the decode_step logits
+                toks = [self._sample(logits0_np[st.slot], st)]
+            else:
+                n_acc, accepted = accept_drafts(
+                    chunk[st.slot, 1:], greedy[st.slot], nd)
+                toks = [int(t) for t in accepted]
+                self.spec_row_ticks[st.plan_idx] += 1
+                self.spec_drafted[st.plan_idx] += nd
+                self.spec_accepted[st.plan_idx] += n_acc
+            row_emitted = 0
+            for tok in toks:
+                st.out.append(tok)
+                st.next_token = tok
+                st.pos += 1
+                self.pool.lengths[st.slot] = st.pos
+                self.plan_decode_tokens[st.plan_idx] += 1
+                row_emitted += 1
+                self._maybe_finish(st)
+                if self.active.get(st.slot) is not st:
+                    break   # EOS/max_new released the slot (and, paged,
+                    #         every page) — nothing left to roll back
+            if st.req.temperature <= 0:
+                self.spec_emitted[st.plan_idx] += row_emitted
+            emitted += row_emitted
+            if self.paged and self.active.get(st.slot) is st:
+                # truncate tail pages past the accepted position: pages
+                # the rejected drafts grew go back to the free heap with
+                # exact alloc/free accounting. st.pos >= 1 always
+                # (decode starts at pos = prompt_len >= 1).
+                keep = (st.pos - 1) // psz + 1
+                trim = int(self.pool.allocated[st.slot]) - keep
+                if trim > 0:
+                    self.pool.unmap_tail(st.slot, trim)
+        return emitted
+
     # ----------------------------------------------------- plan stats
 
     def sparsity_stats(self) -> dict:
@@ -1174,6 +1372,37 @@ class ContinuousBatchingScheduler:
                                    if p.has_attn else None),
                 "prefill_blocks": int(self.plan_prefill_blocks[i]),
                 "decode_tokens": int(self.plan_decode_tokens[i]),
+            })
+        return out
+
+    def speculative_stats(self) -> Optional[dict]:
+        """Speculation accounting (serve.py stats line + the
+        speculative_decode bench section); None when speculation is
+        off. Per VERIFY plan: which draft plan served it (after the
+        never-denser clamp), drafted/accepted counts, acceptance rate,
+        and emitted tokens per speculated row-tick (1.0 would be the
+        non-speculative tick; the speculative win is this number minus
+        one, bought for one draft pass)."""
+        if self.speculative is None or self.speculative.k == 0:
+            return None
+        out = {"k": self.speculative.k, "draft": self.speculative.draft,
+               "spec_ticks": int(self.n_spec_ticks), "plans": []}
+        for i, p in enumerate(self.plans):
+            drafted = int(self.spec_drafted[i])
+            accepted = int(self.spec_accepted[i])
+            rows = int(self.spec_row_ticks[i])
+            out["plans"].append({
+                "name": p.name,
+                "draft_plan": self._plan_name(int(self._draft_plan_for[i])),
+                "row_ticks": rows,
+                "drafted": drafted,
+                "accepted": accepted,
+                "acceptance_rate": (round(accepted / drafted, 4)
+                                    if drafted else None),
+                "emitted": int(self.spec_emitted[i]),
+                "tokens_per_row_tick": (
+                    round(int(self.spec_emitted[i]) / rows, 4) if rows
+                    else None),
             })
         return out
 

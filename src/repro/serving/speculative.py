@@ -1,0 +1,124 @@
+"""Self-speculative decoding: sparse-draft / dense-verify.
+
+The effort-tier ladder (core.fastforward.EFFORT_TIERS) gives the
+serving stack a free draft model: the SAME weights under a sparser
+SparsityPlan.  Both the draft and the verify executables are already
+compiled and registered on the runtime (serving/runtime.py keeps one
+decode executable per entry point with the full plan tuple closed over
+and a traced per-row ``plan_ids`` vector), so speculation costs zero
+extra parameters and zero extra compiles beyond the two chunk-shaped
+protocol entries (``draft_steps`` / ``verify_chunk``) warmed alongside
+the rest.
+
+Protocol (one speculative decode tick, per active row)
+------------------------------------------------------
+Let ``p = st.pos`` (next KV write position) and ``t0 = st.next_token``.
+
+1. **Draft**: ``k`` argmax-feedback ``decode_step`` applications under
+   the row's *draft* plan, writing KV at positions ``p .. p+k-1`` and
+   proposing ``d_1 .. d_k``.
+2. **Verify**: ONE chunk-scored ``decode_step`` feeding
+   ``[t0, d_1 .. d_k]`` at positions ``p .. p+k`` under the row's own
+   (verify) plan.  The chunk REWRITES positions ``p .. p+k-1``, so
+   draft-plan KV is never read by any accepted computation.
+3. **Accept**: with ``g_i = argmax(verify_logits_i)``, take the longest
+   prefix ``n`` with ``d_{i+1} == g_i`` for all ``i < n`` and emit
+   ``g_0 .. g_n`` — ``n+1`` tokens, the last being the standard bonus
+   token from the verifier's logits at the first disagreement.
+4. **Roll back** rejected KV: slot layout rewinds the length cursor;
+   paged layout truncates tail pages past the accepted position with
+   exact alloc/free accounting (serving/scheduler.py).
+
+After acceptance, positions ``p .. p+n`` hold exactly the tokens the
+sequential greedy loop would have written (``t0, g_0 .. g_{n-1}``), so
+greedy output is bit-identical with speculation on or off — the draft
+plan affects only latency.  ``accept_drafts`` below is that rule as a
+pure function over integer arrays; it is what the Hypothesis property
+suite and the scheduler both call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "SpeculativeConfig",
+    "accept_drafts",
+    "parse_speculate_arg",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    """Speculative-decode settings for ContinuousBatchingScheduler.
+
+    k: draft length — tokens proposed per decode tick (k == 0 is the
+       exact non-speculative tick; the scheduler short-circuits it).
+    draft: name of the registered SparsityPlan used for drafting
+       (an effort-tier name when plans come from serve.py).  Rows whose
+       *verify* plan is already at least as sparse keep their own plan
+       for drafting — a degraded request's draft is never denser than
+       its verify plan.
+    """
+
+    k: int = 4
+    draft: str = "turbo"
+
+    def __post_init__(self):
+        if self.k < 0:
+            raise ValueError(f"speculative k must be >= 0, got {self.k}")
+        if not self.draft:
+            raise ValueError("draft plan name must be non-empty")
+
+
+def accept_drafts(drafts: Sequence[int], greedy: Sequence[int],
+                  n_draft: Optional[int] = None,
+                  ) -> Tuple[int, np.ndarray]:
+    """Longest-agreeing-prefix acceptance with bonus token.
+
+    drafts: the k draft proposals ``d_1 .. d_k`` (draft-plan argmax).
+    greedy: the k+1 verifier argmaxes ``g_0 .. g_k`` — ``g_i`` scored at
+       position ``p+i`` after feeding ``[t0, d_1 .. d_i]``.
+    n_draft: number of VALID drafts for this row (<= k); trailing
+       entries of ``drafts``/``greedy`` beyond it are padding from the
+       fixed-shape batch and must not influence the result.  Defaults
+       to ``len(drafts)``.
+
+    Returns ``(n_accepted, emitted)`` where ``emitted`` is
+    ``g_0 .. g_{n_accepted}`` — always at least one token (the verifier
+    scored position ``p`` exactly as the non-speculative tick would),
+    at most ``n_draft + 1``.  Pure function of its arguments: the
+    result for a row is independent of every other row in the batch.
+    """
+    drafts = np.asarray(drafts, dtype=np.int64)
+    greedy = np.asarray(greedy, dtype=np.int64)
+    if n_draft is None:
+        n_draft = int(drafts.shape[0])
+    n_draft = int(n_draft)
+    if n_draft < 0 or n_draft > drafts.shape[0]:
+        raise ValueError(
+            f"n_draft {n_draft} out of range for {drafts.shape[0]} drafts")
+    if greedy.shape[0] < n_draft + 1:
+        raise ValueError(
+            f"need {n_draft + 1} verifier tokens, got {greedy.shape[0]}")
+    n = 0
+    while n < n_draft and drafts[n] == greedy[n]:
+        n += 1
+    return n, greedy[: n + 1].astype(np.int64).copy()
+
+
+def parse_speculate_arg(text: str) -> SpeculativeConfig:
+    """Parse the serve.py ``--speculate K[,draft_tier]`` argument."""
+    parts = [p.strip() for p in str(text).split(",")]
+    if not parts or not parts[0]:
+        raise ValueError("--speculate expects K[,draft_tier]")
+    try:
+        k = int(parts[0])
+    except ValueError as e:
+        raise ValueError(f"--speculate K must be an int, got {parts[0]!r}") from e
+    draft = parts[1] if len(parts) > 1 and parts[1] else "turbo"
+    if len(parts) > 2:
+        raise ValueError(f"--speculate takes K[,draft_tier], got {text!r}")
+    return SpeculativeConfig(k=k, draft=draft)

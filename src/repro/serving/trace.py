@@ -39,11 +39,19 @@ line):
   prefix_len   int     tokens of shared prefix when `prefix_group` is
                        set (default: half the prompt, page-aligned by
                        the cache itself, not the trace)
+  speculate    int     optional per-request cap on the speculative
+                       draft length (serve.py --speculate): 0 turns
+                       speculation off for this record, a positive
+                       value caps tokens drafted per decode tick.
+                       Latency-only — greedy output is bit-identical
+                       for every value. Ignored when the scheduler
+                       runs without a SpeculativeConfig.
 
 Unknown keys are ignored (real traces carry extra metadata). Sample
 traces live at benchmarks/traces/sample_trace.jsonl, — for the
-overload fields — benchmarks/traces/sample_overload.jsonl, and — for
-prefix_group — benchmarks/traces/sample_shared_prefix.jsonl.
+overload fields — benchmarks/traces/sample_overload.jsonl, for
+prefix_group — benchmarks/traces/sample_shared_prefix.jsonl, and —
+generation-heavy, for --speculate — sample_speculate.jsonl.
 """
 from __future__ import annotations
 
@@ -126,6 +134,8 @@ def load_trace(path: str, vocab: int, seed: int = 0,
                                   else ttft_deadline_ms),
                 cancel_after_s=(float(rec["cancel_after_s"])
                                 if "cancel_after_s" in rec else None),
+                speculate=(int(rec["speculate"])
+                           if "speculate" in rec else None),
                 arrival_time=float(rec.get("arrival_s", 0.0))))
     if not requests:
         raise ValueError(f"trace {path} contains no requests")
@@ -157,4 +167,6 @@ def trace_stats(requests: List[Request]) -> dict:
                              for r in requests),
         "with_cancel": sum(r.cancel_after_s is not None
                            for r in requests),
+        "with_speculate": sum(r.speculate is not None
+                              for r in requests),
     }

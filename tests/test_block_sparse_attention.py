@@ -26,12 +26,14 @@ def _setup(seed=0, B=3, N=8, H=4, Kv=2, dh=16, S=40,
             jnp.asarray(lengths, jnp.int32))
 
 
-def _select(q, kc, pos0s, lengths, blk, attn_tiles, a_l, window=None):
+def _select(q, kc, pos0s, lengths, blk, attn_tiles, a_l, window=None,
+            threshold=None):
     nc = -(-kc.shape[1] // blk)
     return BSA.select_kv_blocks(
         q, BSA.pooled_block_keys(kc, blk), pos0s, lengths, blk=blk,
         k_sel=attn_sel_width((int(a_l), attn_tiles, None), nc),
-        attn_tiles=attn_tiles, a_l=jnp.int32(a_l), window=window)
+        attn_tiles=attn_tiles, a_l=jnp.int32(a_l), window=window,
+        threshold=threshold)
 
 
 # ------------------------------------------------ selection properties
@@ -63,6 +65,71 @@ def test_selection_full_budget_keeps_every_valid_block():
     for b in range(ids.shape[0]):
         np.testing.assert_array_equal(
             np.sort(np.asarray(ids)[b, :cnts[b]]), np.arange(cur[b] + 1))
+
+
+def test_threshold_one_keeps_all_and_stays_dense_bit_identical():
+    """The opt-in adaptive-count contract at its boundary: threshold=1.0
+    keeps every candidate (the inclusive proxy-softmax mass only
+    reaches 1.0 at the LAST valid block, extreme score gaps included),
+    so counts equal the fixed-budget counts and — at a full budget —
+    the masked path stays BITWISE equal to dense attention."""
+    q, kc, vc, pos0s, lengths = _setup(seed=3)
+    ids_f, cnts_f = _select(q, kc, pos0s, lengths, 8, 8, 8)
+    ids_t, cnts_t = _select(q, kc, pos0s, lengths, 8, 8, 8, threshold=1.0)
+    np.testing.assert_array_equal(np.asarray(cnts_t), np.asarray(cnts_f))
+    np.testing.assert_array_equal(np.asarray(ids_t), np.asarray(ids_f))
+    got = R.block_sparse_attention_masked(q, kc, vc, ids_t, cnts_t, pos0s,
+                                          lengths, blk=8)
+    want = R.dense_oracle(q, kc, vc, pos0s, lengths)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_threshold_adapts_counts_capped_by_budget():
+    """A mid threshold spends LESS than the budget on easy inputs but
+    never more: adaptive counts are capped by the plan's per-row budget
+    count, floored at the min(2, nv) forcing floor, and the kept set is
+    still a valid selection (sink + diagonal forced, ascending,
+    causal). A near-zero threshold drives every row to the floor."""
+    q, kc, vc, pos0s, lengths = _setup(seed=4)
+    blk = 8
+    cur = (np.asarray(pos0s) + q.shape[1] - 1) // blk
+    nv = cur + 1
+    _, cnts_budget = _select(q, kc, pos0s, lengths, blk, 8, 6)
+    ids, cnts = _select(q, kc, pos0s, lengths, blk, 8, 6, threshold=0.5)
+    ids, cnts = np.asarray(ids), np.asarray(cnts)
+    assert np.all(cnts <= np.asarray(cnts_budget))
+    assert np.all(cnts >= np.minimum(2, nv))
+    for b in range(ids.shape[0]):
+        live = ids[b, :cnts[b]]
+        assert 0 in live and cur[b] in live
+        assert np.all(np.diff(live) > 0) and np.all(live <= cur[b])
+    _, cnts_tiny = _select(q, kc, pos0s, lengths, blk, 8, 6,
+                           threshold=1e-6)
+    np.testing.assert_array_equal(np.asarray(cnts_tiny),
+                                  np.minimum(2, nv))
+
+
+def test_threshold_one_is_inert_through_the_model():
+    """End-to-end through the model config: with a LIVE dual-budget
+    plan (attn_sparsity > 0, so pooled-QK selection really runs every
+    interior block), attn_threshold=1.0 keeps every candidate — counts
+    collapse to the fixed-budget counts and generation is bitwise equal
+    to attn_threshold=0.0 (off). The opt-in knob is inert at its
+    identity point even where selection is active."""
+    from repro.configs import get_config
+    from repro.models.registry import get_model
+    from repro.nn.param import init_params
+    from repro.serving import Engine
+    cfg = get_config("tinyllama-1.1b", reduced=True).with_ff(
+        attn_sparsity=0.3)
+    params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab, 96).tolist(),
+               rng.integers(0, cfg.vocab, 64).tolist()]
+    off = Engine(cfg, params).generate(prompts, max_new=6)
+    on = Engine(cfg.with_ff(attn_threshold=1.0), params).generate(
+        prompts, max_new=6)
+    np.testing.assert_array_equal(off.tokens, on.tokens)
 
 
 # ------------------------------------- oracles and kernel cross-checks

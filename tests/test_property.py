@@ -284,3 +284,120 @@ def test_refcounted_churn_ends_consistent(prefix_cache, seed, ops):
         assert pool.n_reclaimable == 0
     assert pool.n_free_pages == pool.n_pages - 1
     assert pool.total_page_allocs == pool.total_page_frees
+
+
+# --------------------------------------- speculative decode (acceptance)
+
+
+@given(st.integers(min_value=0, max_value=6),
+       st.data())
+@settings(**SET)
+def test_accept_drafts_properties(k, data):
+    """Longest-agreeing-prefix acceptance: n is exactly the first
+    disagreement index, the emission is the verifier's greedy prefix
+    g_0..g_n (every emitted token verifier-endorsed), always 1..k+1
+    tokens, and k=0 degenerates to the plain non-speculative tick."""
+    from repro.serving import accept_drafts
+    tok = st.integers(min_value=0, max_value=5)
+    drafts = np.array(data.draw(st.lists(tok, min_size=k, max_size=k)),
+                      dtype=np.int64)
+    greedy = np.array(data.draw(st.lists(tok, min_size=k + 1,
+                                         max_size=k + 1)), dtype=np.int64)
+    n, out = accept_drafts(drafts, greedy)
+    want = 0
+    while want < k and drafts[want] == greedy[want]:
+        want += 1
+    assert n == want
+    assert out.tolist() == greedy[:n + 1].tolist()
+    assert 1 <= len(out) <= k + 1
+    if k == 0:
+        assert n == 0 and out.tolist() == [int(greedy[0])]
+
+
+@given(st.integers(min_value=0, max_value=6),
+       st.data())
+@settings(**SET)
+def test_accept_drafts_pad_independence(k, data):
+    """Entries beyond n_draft are pad from the fixed-shape [n_slots,
+    k+1] batch: ANY pad contents yield the result of the physically
+    shorter draft — a row's acceptance length never depends on its
+    batch neighbors' composition."""
+    from repro.serving import accept_drafts
+    tok = st.integers(min_value=0, max_value=5)
+    nd = data.draw(st.integers(min_value=0, max_value=k))
+    drafts = np.array(data.draw(st.lists(tok, min_size=k, max_size=k)),
+                      dtype=np.int64)
+    greedy = np.array(data.draw(st.lists(tok, min_size=k + 1,
+                                         max_size=k + 1)), dtype=np.int64)
+    n, out = accept_drafts(drafts, greedy, n_draft=nd)
+    # reference: the pad tail physically absent
+    n_ref, out_ref = accept_drafts(drafts[:nd], greedy[:nd + 1])
+    assert n == n_ref and out.tolist() == out_ref.tolist()
+    # scrambling the pad tail changes nothing
+    drafts2 = drafts.copy()
+    drafts2[nd:] = data.draw(st.lists(tok, min_size=k - nd,
+                                      max_size=k - nd))
+    n2, out2 = accept_drafts(drafts2, greedy, n_draft=nd)
+    assert n2 == n and out2.tolist() == out.tolist()
+
+
+@given(seed=st.integers(min_value=0, max_value=1 << 16),
+       ops=st.lists(st.sampled_from(
+           ["tick", "tick", "tick", "advance", "cancel0", "cancel1",
+            "cancel2", "cancel3", "preempt"]),
+           min_size=4, max_size=24))
+@settings(max_examples=8, deadline=None)
+def test_speculative_churn_never_leaks(seed, ops):
+    """The slot-churn property with self-speculative decode ON (k=2,
+    turbo drafts): any interleaving of ticks, cancels, deadline jumps,
+    and forced preemptions still ends fully accounted — speculative KV
+    rollback never leaks a slot."""
+    import dataclasses
+    from repro.core.fastforward import resolve_plan
+    from repro.serving import (ContinuousBatchingScheduler, Request,
+                               SpeculativeConfig)
+    from repro.serving.runtime import make_runtime
+    if "spec" not in _CHURN_RUNTIMES:
+        from repro.configs import get_config
+        from repro.models.registry import get_model
+        from repro.nn.param import init_params
+        cfg = get_config("tinyllama-1.1b", reduced=True)
+        params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+        plans = tuple(
+            dataclasses.replace(resolve_plan(cfg, effort=e), name=e)
+            for e in ("balanced", "turbo"))
+        _CHURN_RUNTIMES["spec"] = (cfg, make_runtime(cfg, params,
+                                                     plans=plans))
+    cfg, runtime = _CHURN_RUNTIMES["spec"]
+    clk = [0.0]
+    sched = ContinuousBatchingScheduler(
+        runtime, n_slots=2, cache_len=96, prefill_batch=2,
+        speculative=SpeculativeConfig(k=2, draft="turbo"),
+        clock=lambda: clk[0],
+        sleep=lambda dt: clk.__setitem__(0, clk[0] + dt))
+    rng = np.random.default_rng(seed)
+    for i in range(5):
+        sched.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab,
+                                int(rng.integers(8, 80))).tolist(),
+            max_new=int(rng.integers(1, 5)),
+            effort="turbo" if rng.random() < 0.5 else None,
+            eos_id=(3 if rng.random() < 0.3 else None),
+            deadline_ms=(float(rng.integers(50, 2000))
+                         if rng.random() < 0.4 else None)))
+    for op in ops:
+        if op == "tick" and not sched.drained:
+            sched.tick()
+        elif op == "advance":
+            clk[0] += 0.25
+        elif op.startswith("cancel"):
+            sched.cancel(int(op[-1]))
+        elif op == "preempt" and sched.active:
+            sched._preempt(max(sched.active.values(),
+                               key=lambda s: s.seq))
+    sched.run()
+    pool = sched.pool
+    assert len(sched.finished) == 5
+    assert pool.total_acquires == pool.total_releases
+    assert sorted(pool._free) == [0, 1]

@@ -1,0 +1,407 @@
+"""Self-speculative decode: sparse-draft / dense-verify on the
+registered SparsityPlan executables.
+
+The contract under test: greedy output is BIT-identical with
+speculation on vs off — dense + MoE, slot + paged KV layouts, mixed
+effort tiers, per-request draft caps, EOS stops, temperature rows,
+deadline expiry, forced preemption and seeded chaos — the draft plan
+buys latency only. Plus the pure acceptance rule (longest agreeing
+prefix + bonus token), KV rollback leak regressions (acquires ==
+releases, free lists whole, published prefix pages never truncated),
+flat compile counts after warmup, and the k=0 degeneration to the
+non-speculative tick."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_config
+from repro.core.fastforward import resolve_plan
+from repro.models.registry import get_model
+from repro.nn.param import init_params
+from repro.serving import (ContinuousBatchingScheduler, FaultInjector,
+                           Request, SpeculativeConfig, accept_drafts,
+                           parse_speculate_arg)
+from repro.serving.runtime import make_runtime
+
+PAGE = 8                       # divides the reduced block size (32)
+SPEC = SpeculativeConfig(k=3, draft="turbo")
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+    return cfg, params
+
+
+def make_plans(cfg, efforts=("balanced", "turbo")):
+    return tuple(
+        dataclasses.replace(resolve_plan(cfg, effort=e), name=e)
+        for e in efforts)
+
+
+@pytest.fixture(scope="module")
+def slot_runtime(dense_setup):
+    cfg, params = dense_setup
+    return make_runtime(cfg, params, plans=make_plans(cfg))
+
+
+@pytest.fixture(scope="module")
+def paged_runtime(dense_setup):
+    cfg, params = dense_setup
+    cfg = cfg.with_(kv_layout="paged", kv_page_size=PAGE)
+    return make_runtime(cfg, params, plans=make_plans(cfg))
+
+
+def make_requests(cfg, seed=1):
+    """Mixed stream: ragged prompts, per-request effort tiers, a
+    per-request draft cap, one speculation-off row, one EOS row, one
+    sampled (temperature) row — the composition the bit-identity
+    contract must be independent of."""
+    rng = np.random.default_rng(seed)
+    lengths = [40, 70, 33, 90, 64, 50, 25]
+    efforts = [None, "turbo", "balanced", "turbo", None, "balanced", None]
+    speculate = [None, None, 2, 0, None, 1, None]
+    reqs = []
+    for i, n in enumerate(lengths):
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, n).tolist(),
+            max_new=10, effort=efforts[i], speculate=speculate[i],
+            eos_id=3 if i == 1 else None,
+            temperature=0.7 if i == 4 else 0.0))
+    return reqs
+
+
+def drive(runtime, requests, speculative, **kw):
+    kw.setdefault("cache_len", 160)
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("prefill_batch", 2)
+    sched = ContinuousBatchingScheduler(runtime, speculative=speculative,
+                                        **kw)
+    counts0 = sched.warmup()
+    for r in requests:
+        sched.submit(r)
+    outs = sched.run()
+    if None not in counts0.values():
+        assert runtime.compile_counts() == counts0, \
+            "recompiled after warmup"
+    return outs, sched
+
+
+def assert_pools_whole(sched):
+    pool = sched.pool
+    assert pool.total_acquires == pool.total_releases
+    assert pool.n_free == sched.n_slots
+    if sched.paged:
+        assert pool.total_page_allocs == pool.total_page_frees
+        assert pool.n_free_pages == pool.n_pages - 1
+        assert (pool.page_table == 0).all()
+        assert (pool.allocated == 0).all()
+
+
+# ------------------------------------------------ acceptance rule (pure)
+
+
+def test_accept_drafts_agreement_prefix():
+    # all agree: k drafts + the bonus token
+    n, out = accept_drafts(np.array([5, 7, 2]), np.array([5, 7, 2, 9]))
+    assert n == 3 and out.tolist() == [5, 7, 2, 9]
+    # first disagreement at i=1: emit greedy[0], greedy[1] (the bonus)
+    n, out = accept_drafts(np.array([5, 8, 2]), np.array([5, 7, 2, 9]))
+    assert n == 1 and out.tolist() == [5, 7]
+    # immediate disagreement: exactly the verifier's token
+    n, out = accept_drafts(np.array([4, 8, 2]), np.array([5, 7, 2, 9]))
+    assert n == 0 and out.tolist() == [5]
+
+
+def test_accept_drafts_k0_degenerates_to_plain_tick():
+    """Zero drafts -> the non-speculative tick: one token, the
+    verifier's own argmax at the current position."""
+    n, out = accept_drafts(np.array([], np.int64), np.array([5]))
+    assert n == 0 and out.tolist() == [5]
+    n, out = accept_drafts(np.array([9, 9]), np.array([5, 7, 2]), n_draft=0)
+    assert n == 0 and out.tolist() == [5]
+
+
+def test_accept_drafts_seeded_sweep():
+    """Random sweep: n is the longest agreeing prefix, the emission is
+    exactly greedy[:n+1] (so every emitted token is verifier-endorsed),
+    and n_draft truncation behaves as if the tail was never drafted."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        k = int(rng.integers(0, 6))
+        drafts = rng.integers(0, 4, size=k)
+        greedy = rng.integers(0, 4, size=k + 1)
+        nd = int(rng.integers(0, k + 1))
+        n, out = accept_drafts(drafts, greedy, n_draft=nd)
+        want = 0
+        while want < nd and drafts[want] == greedy[want]:
+            want += 1
+        assert n == want
+        assert out.tolist() == greedy[:n + 1].tolist()
+        # truncation == physically shorter draft
+        n2, out2 = accept_drafts(drafts[:nd], greedy[:nd + 1])
+        assert n2 == n and out2.tolist() == out.tolist()
+
+
+def test_accept_drafts_validation():
+    with pytest.raises(ValueError):
+        accept_drafts(np.array([1, 2]), np.array([1, 2]))   # needs k+1
+    with pytest.raises(ValueError):
+        accept_drafts(np.array([1]), np.array([1, 2]), n_draft=2)
+    with pytest.raises(ValueError):
+        accept_drafts(np.array([1]), np.array([1, 2]), n_draft=-1)
+
+
+def test_parse_speculate_arg():
+    assert parse_speculate_arg("4") == SpeculativeConfig(k=4,
+                                                         draft="turbo")
+    assert parse_speculate_arg("2,balanced") == SpeculativeConfig(
+        k=2, draft="balanced")
+    for bad in ("", "x", "-1", "3,turbo,extra"):
+        with pytest.raises(ValueError):
+            parse_speculate_arg(bad)
+    with pytest.raises(ValueError):
+        SpeculativeConfig(k=-1)
+
+
+# ------------------------------------------------- bit-identity contract
+
+
+def test_spec_bit_identity_slot_mixed_tiers(dense_setup, slot_runtime):
+    """Slot layout, mixed effort tiers, per-request caps, EOS, and a
+    sampled row: speculation on == off, bitwise, and the stats line
+    proves real drafting happened."""
+    cfg, _ = dense_setup
+    off, _ = drive(slot_runtime, make_requests(cfg), None)
+    on, sched = drive(slot_runtime, make_requests(cfg), SPEC)
+    assert sorted(on) == sorted(off)
+    for rid in off:
+        assert on[rid].tokens == off[rid].tokens, rid
+        assert on[rid].status == off[rid].status, rid
+    ss = sched.speculative_stats()
+    assert ss["spec_ticks"] > 0
+    assert sum(r["accepted"] for r in ss["plans"]) > 0
+    # a degraded/clamped draft is never denser than its verify plan
+    for i, p in enumerate(sched.plans):
+        di = int(sched._draft_plan_for[i])
+        assert sched.plans[di].flop_frac() <= p.flop_frac() + 1e-9
+    assert_pools_whole(sched)
+
+
+def test_spec_bit_identity_paged(dense_setup, paged_runtime):
+    """Paged layout with an oversubscribed heap: speculative page
+    growth, rollback of rejected tail pages, and preemption interact —
+    outputs stay bitwise equal and the page accounting exact."""
+    cfg, _ = dense_setup
+    kw = dict(page_size=PAGE, n_pages=60)
+    off, s_off = drive(paged_runtime, make_requests(cfg), None, **kw)
+    on, sched = drive(paged_runtime, make_requests(cfg), SPEC, **kw)
+    for rid in off:
+        assert on[rid].tokens == off[rid].tokens, rid
+    assert sched.speculative_stats()["spec_ticks"] > 0
+    assert_pools_whole(sched)
+    assert_pools_whole(s_off)
+
+
+def test_spec_bit_identity_moe():
+    """MoE architecture through the same chunk-scored entries."""
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True)
+    params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+    runtime = make_runtime(cfg, params, plans=make_plans(cfg))
+    reqs = make_requests(cfg, seed=5)[:4]
+    off, _ = drive(runtime, reqs, None)
+    on, sched = drive(runtime, make_requests(cfg, seed=5)[:4], SPEC)
+    for rid in off:
+        assert on[rid].tokens == off[rid].tokens, rid
+    assert sched.speculative_stats()["spec_ticks"] > 0
+
+
+def test_spec_k0_is_the_plain_tick(dense_setup, slot_runtime):
+    """k=0 degenerates to the non-speculative scheduler: same path,
+    same outputs, no speculation stats."""
+    cfg, _ = dense_setup
+    off, s_off = drive(slot_runtime, make_requests(cfg), None)
+    on, sched = drive(slot_runtime, make_requests(cfg),
+                      SpeculativeConfig(k=0))
+    for rid in off:
+        assert on[rid].tokens == off[rid].tokens, rid
+    assert sched.speculative_stats() is None
+    assert sched.n_spec_ticks == 0
+    assert sched.n_decode_steps == s_off.n_decode_steps
+
+
+def test_spec_batch_composition_independence(dense_setup, slot_runtime):
+    """A request's speculative emission is independent of its pad-row /
+    neighbor composition: served alone it generates exactly what it
+    generates inside a full mixed batch."""
+    cfg, _ = dense_setup
+    reqs = make_requests(cfg)
+    batched, _ = drive(slot_runtime, reqs, SPEC, n_slots=4)
+    for proto in make_requests(cfg)[:3]:
+        solo, _ = drive(slot_runtime, [proto], SPEC, n_slots=1)
+        assert solo[proto.rid].tokens == batched[proto.rid].tokens
+
+
+def test_spec_fewer_decode_ticks(dense_setup, slot_runtime):
+    """The structural win: same tokens from strictly fewer decode ticks
+    when the draft tier is sparser than (or equal to) the verify tier."""
+    cfg, _ = dense_setup
+    reqs = [r for r in make_requests(cfg) if r.speculate != 0
+            and r.temperature == 0]
+    off, s_off = drive(slot_runtime, reqs, None)
+    on, s_on = drive(slot_runtime,
+                     [r for r in make_requests(cfg) if r.speculate != 0
+                      and r.temperature == 0], SPEC)
+    assert s_on.n_decode_steps < s_off.n_decode_steps
+    gen = sum(len(o.tokens) for o in on.values())
+    assert (gen / s_on.n_decode_steps
+            > sum(len(o.tokens) for o in off.values())
+            / s_off.n_decode_steps)
+
+
+# ----------------------------------------------- rollback leak regressions
+
+
+@pytest.mark.parametrize("layout", ["slot", "paged"])
+def test_spec_eos_mid_speculation_no_leak(dense_setup, slot_runtime,
+                                          paged_runtime, layout):
+    """A request hitting EOS in the middle of an accepted chunk stops
+    at the EOS token, frees everything, and leaks nothing."""
+    cfg, _ = dense_setup
+    runtime = slot_runtime if layout == "slot" else paged_runtime
+    kw = {} if layout == "slot" else dict(page_size=PAGE, n_pages=60)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 40).tolist()
+
+    ref, _ = drive(runtime, [Request(rid=0, prompt=prompt, max_new=16)],
+                   None, **kw)
+    eos = ref[0].tokens[4]          # falls mid-chunk with k=3
+    stop = ref[0].tokens.index(eos) + 1
+
+    outs, sched = drive(runtime,
+                        [Request(rid=0, prompt=prompt, max_new=16,
+                                 eos_id=int(eos))], SPEC, **kw)
+    assert outs[0].tokens == ref[0].tokens[:stop]
+    assert outs[0].tokens[-1] == eos
+    assert sched.n_eos_stops == 1
+    assert_pools_whole(sched)
+
+
+@pytest.mark.parametrize("layout", ["slot", "paged"])
+def test_spec_timeout_mid_flight_no_leak(dense_setup, slot_runtime,
+                                         paged_runtime, layout):
+    """Deadline expiry while a request is mid-speculation frees its
+    slot/pages exactly once (fake clock: decode starts, then time jumps
+    past the deadline)."""
+    cfg, _ = dense_setup
+    runtime = slot_runtime if layout == "slot" else paged_runtime
+    kw = {} if layout == "slot" else dict(page_size=PAGE, n_pages=60)
+    clk = [0.0]
+    sched = ContinuousBatchingScheduler(
+        runtime, n_slots=2, cache_len=160, prefill_batch=2,
+        speculative=SPEC, clock=lambda: clk[0],
+        sleep=lambda dt: clk.__setitem__(0, clk[0] + dt), **kw)
+    sched.warmup()
+    rng = np.random.default_rng(4)
+    sched.submit(Request(rid=0,
+                         prompt=rng.integers(0, cfg.vocab, 40).tolist(),
+                         max_new=32, deadline_ms=500.0))
+    while not any(s.phase == "decode" for s in sched.active.values()):
+        sched.tick()
+    sched.tick()                    # at least one speculative tick ran
+    assert sched.n_spec_ticks >= 1
+    clk[0] += 10.0                  # blow the deadline mid-generation
+    outs = sched.run()
+    assert outs[0].status == "timed_out"
+    assert sched.n_timed_out == 1
+    assert_pools_whole(sched)
+
+
+@pytest.mark.parametrize("layout", ["slot", "paged"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_spec_chaos_preemption_no_leak(dense_setup, slot_runtime,
+                                       paged_runtime, layout, seed):
+    """Seeded chaos (forced preemptions, pool pressure, aborts) over a
+    speculative stream: survivors bit-identical to the fault-free
+    NON-speculative run, pools whole, compile counts flat."""
+    cfg, _ = dense_setup
+    runtime = slot_runtime if layout == "slot" else paged_runtime
+    kw = {} if layout == "slot" else dict(page_size=PAGE, n_pages=60)
+    ref, _ = drive(runtime, make_requests(cfg), None, **kw)
+    inj = FaultInjector(seed=seed, p_preempt=0.4, p_pressure=0.4,
+                        p_slow=0.2, p_abort=0.1, max_aborts=1)
+    outs, sched = drive(runtime, make_requests(cfg), SPEC,
+                        faults=inj, **kw)
+    assert sorted(outs) == sorted(ref)
+    for rid, out in outs.items():
+        assert out.status in ("ok", "cancelled")
+        if out.status == "ok":
+            assert out.tokens == ref[rid].tokens, rid
+    if layout == "paged":
+        assert sched.n_preemptions + inj.stats()["forced_preempts"] > 0
+    assert_pools_whole(sched)
+
+
+def test_spec_published_prefix_pages_never_truncated(dense_setup,
+                                                     paged_runtime,
+                                                     monkeypatch):
+    """Speculative rollback only ever drops exclusively-owned uncached
+    decode-tail pages — a published (prefix-cached) or shared page is
+    never unmapped by a rollback, and followers mapping the cached
+    prefix stay bit-identical. The heap is roomy, so every unmap_tail
+    during this run IS a speculative rollback (the COW dry-heap
+    fallback cannot fire)."""
+    cfg, _ = dense_setup
+    pool_kw = dict(page_size=PAGE, n_pages=120, prefix_cache=True)
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab, 64).tolist()     # 8 pages
+    prompts = [prefix + rng.integers(0, cfg.vocab, 16).tolist()
+               for _ in range(3)]
+
+    def run(speculative, guard=None):
+        sched = ContinuousBatchingScheduler(
+            paged_runtime, n_slots=3, cache_len=160, prefill_batch=2,
+            speculative=speculative, **pool_kw)
+        sched.warmup()
+        if guard is not None:
+            guard(sched.pool)
+        # leader first (publishes the prefix), then followers
+        sched.submit(Request(rid=0, prompt=prompts[0], max_new=12))
+        sched.run()
+        for i in (1, 2):
+            sched.submit(Request(rid=i, prompt=prompts[i], max_new=12))
+        sched.run()
+        return sched
+
+    rollbacks = []
+
+    def guard(pool):
+        orig = pool.unmap_tail
+
+        def checked(slot, n):
+            base = int(pool.allocated[slot])
+            for j in range(base - n, base):
+                pg = int(pool.page_table[slot, j])
+                assert not pool.cached[pg], \
+                    f"rollback truncated published page {pg}"
+                assert pool.refcount[pg] == 1, \
+                    f"rollback truncated shared page {pg}"
+            rollbacks.append(n)
+            return orig(slot, n)
+
+        monkeypatch.setattr(pool, "unmap_tail", checked)
+
+    ref = run(None)
+    sched = run(SPEC, guard)
+    assert rollbacks, "no speculative rollback exercised"
+    for i in range(3):
+        assert (sched.finished[i].tokens == ref.finished[i].tokens), i
+    ps = sched.prefix_stats()
+    assert ps["requests_hit"] >= 2      # followers really mapped it
+    sched.prefix_index.clear()
+    ref.prefix_index.clear()
+    assert_pools_whole(sched)
+    assert_pools_whole(ref)
