@@ -26,7 +26,10 @@ bytes: peak concurrent requests, peak pages, stranded tokens at the
 occupancy peak, preemptions), ``prefix_sharing`` (refcounted
 prefix cache OFF vs ON on the same paged heap: hit rate, prefill
 blocks skipped, sustained concurrency and TTFT p50 both ways,
-bit-identity of greedy outputs) and ``overload`` (goodput = fraction of
+bit-identity of greedy outputs), ``kv_tiering`` (int8-quantized page
+heap vs f32 at equal device bytes: sustained concurrency; host
+swap-out vs preempt-and-recompute on the same undersized heap:
+re-prefilled blocks, TTFT p99, bit-identity) and ``overload`` (goodput = fraction of
 requests finishing ok within deadline at 1x/2x/4x the sustainable
 arrival rate, degrade-on vs degrade-off) so the perf trajectory is
 tracked PR-over-PR.
@@ -409,6 +412,174 @@ def _run_prefix_sharing(cfg, params):
     return section
 
 
+# ------------------------------------- kv tiering (int8 quant + swap)
+
+KT_PAGE = 16                  # tokens per page (divides block_size 32)
+KT_F32_PAGES = 12             # usable f32 pages: the device byte budget
+                              # both quant arms must fit in
+KT_SLOTS = 16                 # slot table generous in every arm so the
+                              # page heap is the ONLY capacity limit
+KT_SWAP_PAGES = 64            # host tier pages for the swap arm
+KT_HEAP_PAGES = 16            # usable device pages for the swap-vs-
+                              # preempt A/B: long decodes overflow it
+
+
+def _kv_page_bytes(cfg, page_size):
+    """Device bytes of one (layer, K-or-V) page in each storage mode.
+
+    f32 stores page_size x n_kv_heads x head_dim floats; int8 stores the
+    same elements as one byte each plus a per-(page, kv-head) f32 scale
+    — the 4 * n_kv_heads scale bytes are charged honestly, so the
+    equal-byte page ratio lands just under 4x."""
+    elems = page_size * cfg.n_kv_heads * cfg.head_dim
+    return 4 * elems, elems + 4 * cfg.n_kv_heads
+
+
+def _run_kv_tiering(cfg, params):
+    """The `kv_tiering` section: two A/Bs on the paged heap.
+
+    (a) int8 quantization at EQUAL device bytes — the byte budget is
+    KT_F32_PAGES f32 pages; the quant arm spends the same bytes as
+    ~3.97x as many int8 pages (scales charged), so under a deep burst
+    it must sustain >= 2x the concurrent requests. Outputs are allclose
+    (not bit-identical) with quant on — tested at logits level in
+    tests/test_kv_quant.py — so this A/B is a capacity claim only.
+
+    (b) swap-out vs preempt-and-recompute on the SAME undersized heap —
+    the long-decode trace (benchmarks/traces/sample_longdecode.jsonl)
+    overflows KT_HEAP_PAGES via decode growth; with swap_pages=0 the
+    only valve is youngest-first preemption which re-runs finished
+    prefill, with a host tier the victim's pages move device->host and
+    back. Greedy outputs must be bit-identical, the swap arm must
+    re-prefill strictly fewer blocks, and TTFT p99 should drop (the
+    blocks count is the deterministic acceptance gate; p99 wall-clock
+    is recorded but noisy on shared CPU)."""
+    from repro.serving.trace import load_trace
+    cfg = cfg.with_(kv_layout="paged")
+    f32_pb, i8_pb = _kv_page_bytes(cfg, KT_PAGE)
+    quant_pages = KT_F32_PAGES * f32_pb // i8_pb
+
+    # --- (a) quant concurrency at equal device bytes: one deep burst,
+    # concurrency limited only by the heap (KT_SLOTS slots both arms)
+    prompts, max_news, arrivals = _kv_memory_workload(cfg, seed=3)
+    N = cfg.ff.block_size
+    cache_len = -(-max(len(p) for p in prompts) // N) * N + max(max_news)
+    cache_len = -(-cache_len // KT_PAGE) * KT_PAGE
+    requests = [Request(rid=i, prompt=prompts[i], max_new=max_news[i],
+                        arrival_time=arrivals[i])
+                for i in range(len(prompts))]
+
+    def drive(cfg_run, n_pages, reqs, clen, swap_pages=0):
+        runtime = make_runtime(cfg_run, params)
+        sched = ContinuousBatchingScheduler(
+            runtime, n_slots=KT_SLOTS, cache_len=clen,
+            prefill_batch=PREFILL_BATCH, page_size=KT_PAGE,
+            n_pages=n_pages, swap_pages=swap_pages)
+        counts0 = sched.warmup()
+        wall = drive_stream(sched, reqs)
+        flat = None
+        if None not in counts0.values():
+            flat = runtime.compile_counts() == counts0
+        outs = sched.finished
+        assert len(outs) == len(reqs)
+        gen = sum(len(o.tokens) for o in outs.values())
+        ttfts = np.array([outs[r.rid].ttft_seconds for r in reqs])
+        return sched, wall, gen, ttfts, flat
+
+    f_sched, f_wall, f_gen, _, f_flat = drive(
+        cfg, KT_F32_PAGES + 1, requests, cache_len)
+    q_sched, q_wall, q_gen, _, q_flat = drive(
+        cfg.with_(kv_quant=True), quant_pages + 1, requests, cache_len)
+
+    # --- (b) swap vs preempt: identical heap, identical long-decode
+    # trace, the ONLY knob is the host tier
+    import os
+    trace = os.path.join(os.path.dirname(__file__), "traces",
+                         "sample_longdecode.jsonl")
+    t_reqs = load_trace(trace, vocab=cfg.vocab)
+    t_cache = (-(-max(len(r.prompt) for r in t_reqs) // N) * N
+               + max(r.max_new for r in t_reqs))
+    t_cache = -(-t_cache // KT_PAGE) * KT_PAGE
+    p_sched, p_wall, p_gen, p_ttft, p_flat = drive(
+        cfg, KT_HEAP_PAGES + 1, t_reqs, t_cache)
+    s_sched, s_wall, s_gen, s_ttft, s_flat = drive(
+        cfg, KT_HEAP_PAGES + 1, t_reqs, t_cache,
+        swap_pages=KT_SWAP_PAGES)
+
+    identical = all(
+        p_sched.finished[r.rid].tokens == s_sched.finished[r.rid].tokens
+        for r in t_reqs)
+    ts = s_sched.tier_stats()
+    flats = [f_flat, q_flat, p_flat, s_flat]
+    section = {
+        "config": {
+            "page_size": KT_PAGE, "slots": KT_SLOTS,
+            "f32_page_bytes": f32_pb, "int8_page_bytes": i8_pb,
+            "device_bytes_budget": KT_F32_PAGES * f32_pb,
+            "f32_usable_pages": KT_F32_PAGES,
+            "int8_usable_pages": quant_pages,
+            "burst_requests": len(requests),
+            "swap_heap_pages": KT_HEAP_PAGES,
+            "swap_host_pages": KT_SWAP_PAGES,
+            "trace": "benchmarks/traces/sample_longdecode.jsonl",
+            "trace_requests": len(t_reqs),
+        },
+        "quant_off": {
+            "max_concurrent_requests": f_sched.pool.max_in_use,
+            "peak_pages_in_use": f_sched.pool.max_pages_in_use,
+            "preemptions": f_sched.n_preemptions,
+            "tokens_per_s": round(f_gen / f_wall, 1),
+        },
+        "quant_on": {
+            "max_concurrent_requests": q_sched.pool.max_in_use,
+            "peak_pages_in_use": q_sched.pool.max_pages_in_use,
+            "preemptions": q_sched.n_preemptions,
+            "tokens_per_s": round(q_gen / q_wall, 1),
+        },
+        "preempt": {
+            "preemptions": p_sched.n_preemptions,
+            "prefill_blocks": p_sched.n_prefill_blocks,
+            "ttft_p99_ms": round(float(np.percentile(p_ttft, 99)) * 1e3,
+                                 2),
+            "tokens_per_s": round(p_gen / p_wall, 1),
+        },
+        "swap": {
+            "preemptions": s_sched.n_preemptions,
+            "prefill_blocks": s_sched.n_prefill_blocks,
+            "swap_outs": ts["swap_outs"], "swap_ins": ts["swap_ins"],
+            "pages_swapped_out": ts["pages_swapped_out"],
+            "pages_swapped_in": ts["pages_swapped_in"],
+            "peak_host_pages_used": ts["peak_used"],
+            "ttft_p99_ms": round(float(np.percentile(s_ttft, 99)) * 1e3,
+                                 2),
+            "tokens_per_s": round(s_gen / s_wall, 1),
+        },
+        # acceptance: equal device bytes must buy >= 2x sustained
+        # concurrency with int8 pages, and the host tier must beat
+        # preemption on re-prefilled blocks with bit-identical output
+        "quant_2x_concurrent": bool(
+            q_sched.pool.max_in_use >= 2 * f_sched.pool.max_in_use),
+        "swap_fewer_prefill_blocks": bool(
+            s_sched.n_prefill_blocks < p_sched.n_prefill_blocks),
+        "swap_fewer_preemptions": bool(
+            s_sched.n_preemptions < p_sched.n_preemptions),
+        "swap_lower_ttft_p99": bool(
+            np.percentile(s_ttft, 99) < np.percentile(p_ttft, 99)),
+        "swap_outputs_bit_identical": bool(identical),
+        "compile_counts_flat": (None if any(f is None for f in flats)
+                                else bool(all(flats))),
+        "note": (
+            "quant A/B is a capacity comparison at equal device bytes "
+            "(int8 outputs allclose, not bit-identical — see "
+            "tests/test_kv_quant.py for the tolerance); swap A/B is "
+            "deterministic on prefill blocks and preemptions, "
+            "ttft_p99_ms is single-run wall-clock and noisy on a "
+            "shared CPU"),
+    }
+    write_bench_json("kv_tiering", section)
+    return section
+
+
 # --------------------------------------------- overload (degrade A/B)
 
 OV_REQUESTS = 40
@@ -589,6 +760,7 @@ def run(csv=True, requests=REQUESTS):
 
     kv = _run_kv_memory(cfg, params)
     px = _run_prefix_sharing(cfg, params)
+    kt = _run_kv_tiering(cfg, params)
     ov = _run_overload(cfg, params)
 
     rows = [
@@ -655,6 +827,29 @@ def run(csv=True, requests=REQUESTS):
         ("prefix_outputs_bit_identical",
          f"{px['outputs_bit_identical']}",
          "acceptance: greedy outputs identical sharing on vs off"),
+        ("kv_quant_max_concurrent",
+         f"{kt['quant_on']['max_concurrent_requests']}",
+         f"vs {kt['quant_off']['max_concurrent_requests']} f32 at the "
+         f"same {kt['config']['device_bytes_budget']} device bytes "
+         f"({kt['config']['int8_usable_pages']} int8 vs "
+         f"{kt['config']['f32_usable_pages']} f32 pages; "
+         f"target: >= 2x)"),
+        ("kv_swap_prefill_blocks",
+         f"{kt['swap']['prefill_blocks']}",
+         f"vs {kt['preempt']['prefill_blocks']} preempt-only on the "
+         f"same {kt['config']['swap_heap_pages']}-page heap "
+         f"({kt['swap']['swap_outs']} swap outs / "
+         f"{kt['swap']['swap_ins']} ins, "
+         f"{kt['preempt']['preemptions']} -> "
+         f"{kt['swap']['preemptions']} preemptions; target: fewer — "
+         f"swapped requests resume instead of re-prefilling)"),
+        ("kv_swap_ttft_p99_ms",
+         f"{kt['swap']['ttft_p99_ms']:.1f}",
+         f"vs {kt['preempt']['ttft_p99_ms']:.1f} preempt-only "
+         f"(wall-clock, noisy on shared CPU)"),
+        ("kv_swap_outputs_bit_identical",
+         f"{kt['swap_outputs_bit_identical']}",
+         "acceptance: greedy outputs identical swap on vs off"),
         ("overload_goodput_2x_degrade_on",
          f"{ov['runs']['2x']['degrade_on']['goodput']:.3f}",
          f"deadline-met fraction at 2x offered rate, "

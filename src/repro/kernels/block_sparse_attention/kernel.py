@@ -151,3 +151,125 @@ def block_sparse_prefill(q, kb, vb, pool_ids, blk_pos, counts, pos0s,
                   jnp.asarray(counts, jnp.int32),
                   jnp.asarray(pos0s, jnp.int32),
                   jnp.asarray(lengths, jnp.int32), q, kb, vb)
+
+
+def _bsa_kernel_quant(ids_ref, bpos_ref, cnt_ref, p0_ref, len_ref, q_ref,
+                      k_ref, ks_ref, v_ref, vs_ref, o_ref, m_scr, l_scr,
+                      acc_scr, *, kv_heads, scale, window):
+    """Int8 twin of _bsa_kernel: the K/V slabs arrive as int8 pages plus
+    per-(page, kv-head) f32 scales (kernels/kv_quant scheme), dequantized
+    in VMEM right before the MXU contractions — the quantized-heap
+    PREFILL path never materializes an f32 page in HBM."""
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [N, H, dh]
+        N, H, dh = q.shape
+        rep = H // kv_heads
+        blk = k_ref.shape[1]
+        qg = q.reshape(N, kv_heads, rep, dh)
+        kb = (k_ref[0].astype(jnp.float32)
+              * ks_ref[0][None, :, None])                 # [blk, Kv, dh]
+        s = jnp.einsum("ngrd,tgd->grnt", qg, kb)          # [Kv,rep,N,blk]
+        kpos = bpos_ref[b, k] + jax.lax.broadcasted_iota(
+            jnp.int32, (kv_heads, rep, N, blk), 3)
+        qpos = p0_ref[b] + jax.lax.broadcasted_iota(
+            jnp.int32, (kv_heads, rep, N, blk), 2)
+        mask = (kpos <= qpos) & (kpos < len_ref[b])
+        if window:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # [H, N]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1).reshape(H, N)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask,
+                      jnp.exp(s - m_new.reshape(kv_heads, rep, N)[..., None]),
+                      0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1).reshape(H, N)
+        v = (v_ref[0].astype(jnp.float32)
+             * vs_ref[0][None, :, None])                  # [blk, Kv, dh]
+        pv = jnp.einsum("grnt,tgd->grnd", p, v).reshape(H, N, dh)
+        acc_scr[...] = acc_scr[...] * corr[..., None] + pv
+        m_scr[...] = m_new
+
+    pl.when(k < cnt_ref[b])(compute)
+
+    @pl.when(k == pl.num_programs(1) - 1)
+    def _finish():
+        o = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = o.transpose(1, 0, 2).astype(o_ref.dtype)  # [N, H, dh]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def block_sparse_prefill_quant(q, kb, ks, vb, vs, pool_ids, blk_pos,
+                               counts, pos0s, lengths, *,
+                               window: int | None = None,
+                               interpret: bool = False):
+    """Quantized-heap twin of block_sparse_prefill: kb/vb are int8
+    [P, blk, Kv, dh] pooled slabs with f32 scales ks/vs [P, Kv]
+    (kernels/kv_quant scheme, slab granularity = page size). The scale
+    slabs ride the SAME clamped index map as their pages, so dead
+    selection slots elide the scale DMA together with the page DMA."""
+    B, N, H, dh = q.shape
+    P, blk, Kv, _ = kb.shape
+    K = pool_ids.shape[1]
+    assert H % Kv == 0
+    assert ks.shape == vs.shape == (P, Kv)
+
+    def clamp(ids, cnt, kk):
+        return ids[jnp.minimum(kk, jnp.maximum(cnt - 1, 0))]
+
+    grid = (B, K)
+    kernel = pl.pallas_call(
+        functools.partial(_bsa_kernel_quant, kv_heads=Kv,
+                          scale=1.0 / (dh ** 0.5), window=window),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, N, H, dh),
+                             lambda b, k, ids, bp, cnt, p0, ln:
+                             (b, 0, 0, 0)),
+                pl.BlockSpec((1, blk, Kv, dh),
+                             lambda b, k, ids, bp, cnt, p0, ln:
+                             (clamp(ids[b], cnt[b], k), 0, 0, 0)),
+                pl.BlockSpec((1, Kv),
+                             lambda b, k, ids, bp, cnt, p0, ln:
+                             (clamp(ids[b], cnt[b], k), 0)),
+                pl.BlockSpec((1, blk, Kv, dh),
+                             lambda b, k, ids, bp, cnt, p0, ln:
+                             (clamp(ids[b], cnt[b], k), 0, 0, 0)),
+                pl.BlockSpec((1, Kv),
+                             lambda b, k, ids, bp, cnt, p0, ln:
+                             (clamp(ids[b], cnt[b], k), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, N, H, dh),
+                                   lambda b, k, ids, bp, cnt, p0, ln:
+                                   (b, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, N), jnp.float32),
+                pltpu.VMEM((H, N), jnp.float32),
+                pltpu.VMEM((H, N, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, N, H, dh), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )
+    return kernel(jnp.asarray(pool_ids, jnp.int32),
+                  jnp.asarray(blk_pos, jnp.int32),
+                  jnp.asarray(counts, jnp.int32),
+                  jnp.asarray(pos0s, jnp.int32),
+                  jnp.asarray(lengths, jnp.int32), q, kb, ks, vb, vs)

@@ -52,7 +52,25 @@ def pooled_block_keys(k_cache, blk: int):
 def pooled_block_keys_paged(k_pages, page_table, blk: int):
     """Paged twin: per-page means gathered through the table, then
     averaged page-groups per attention block (psz | blk, so a block's
-    mean is the equal-weight mean of its pages' means)."""
+    mean is the equal-weight mean of its pages' means). Accepts the
+    int8-quantized heap ({"q": int8 pages, "s": f32 [n_pages, Kv]},
+    kernels/kv_quant): the mean distributes over the per-page scale, so
+    pooling the int8 values and scaling once is exact."""
+    if isinstance(k_pages, dict):
+        q, s = k_pages["q"], k_pages["s"]
+        psz = q.shape[1]
+        assert blk % psz == 0
+        ppb = blk // psz
+        page_means = q.astype(jnp.float32).mean(axis=1) * s[:, :, None]
+        per_row = page_means[page_table]              # [B, mp, Kv, dh]
+        B, mp = page_table.shape
+        nc = -(-mp // ppb)
+        pad = nc * ppb - mp
+        if pad:
+            per_row = jnp.pad(per_row,
+                              ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return per_row.reshape((B, nc, ppb)
+                               + per_row.shape[2:]).mean(axis=2)
     psz = k_pages.shape[1]
     assert blk % psz == 0
     ppb = blk // psz
@@ -197,20 +215,39 @@ def block_sparse_prefill_paged_op(q, k_pages, v_pages, page_table, ids,
     resolved from each row's page table (slab granularity = page
     size) — the paged PREFILL kernel. The XLA branch gathers the
     table-mapped contiguous view (positions == absolute positions) and
-    reuses the slot masked path."""
+    reuses the slot masked path. Accepts the int8-quantized heap
+    ({"q", "s"} dicts, kernels/kv_quant): the XLA branch dequantizes
+    the gathered view on the fly, the kernel branch dispatches the
+    fused-dequant quant kernel with the scale slabs riding the same
+    table-resolved pool ids."""
     if use_kernel is None:
         use_kernel = on_tpu()
+    quant = isinstance(k_pages, dict)
     if not use_kernel:
-        kc = jnp.take(k_pages, page_table.reshape(-1), axis=0)
-        vc = jnp.take(v_pages, page_table.reshape(-1), axis=0)
         B, mp = page_table.shape
-        psz = k_pages.shape[1]
-        kc = kc.reshape((B, mp * psz) + k_pages.shape[2:])
-        vc = vc.reshape((B, mp * psz) + v_pages.shape[2:])
+        flat = page_table.reshape(-1)
+        if quant:
+            psz = k_pages["q"].shape[1]
+            kc = (jnp.take(k_pages["q"], flat, axis=0)
+                  .astype(jnp.float32)
+                  * jnp.take(k_pages["s"], flat,
+                             axis=0)[:, None, :, None])
+            vc = (jnp.take(v_pages["q"], flat, axis=0)
+                  .astype(jnp.float32)
+                  * jnp.take(v_pages["s"], flat,
+                             axis=0)[:, None, :, None])
+            tail = kc.shape[2:]
+        else:
+            psz = k_pages.shape[1]
+            kc = jnp.take(k_pages, flat, axis=0)
+            vc = jnp.take(v_pages, flat, axis=0)
+            tail = k_pages.shape[2:]
+        kc = kc.reshape((B, mp * psz) + tail)
+        vc = vc.reshape((B, mp * psz) + tail)
         return R.block_sparse_attention_masked(
             q, kc, vc, ids, counts, pos0s, lengths, blk=blk,
             window=window)
-    psz = k_pages.shape[1]
+    psz = (k_pages["q"] if quant else k_pages).shape[1]
     assert blk % psz == 0
     ppb = blk // psz
     B, n_sel = ids.shape
@@ -221,6 +258,11 @@ def block_sparse_prefill_paged_op(q, k_pages, v_pages, page_table, ids,
     pool_ids = jnp.take_along_axis(page_table, tpos, axis=1)
     blk_pos = (ids[:, :, None] * blk
                + jnp.arange(ppb)[None, None, :] * psz).reshape(B, -1)
+    if quant:
+        return K.block_sparse_prefill_quant(
+            q, k_pages["q"], k_pages["s"], v_pages["q"], v_pages["s"],
+            pool_ids, blk_pos, counts * ppb, pos0s, lengths,
+            window=window, interpret=not on_tpu())
     return K.block_sparse_prefill(q, k_pages, v_pages, pool_ids,
                                   blk_pos, counts * ppb, pos0s, lengths,
                                   window=window,

@@ -1,0 +1,7 @@
+from repro.kernels.kv_quant.ops import (dequantize_pages_op,
+                                        quantize_pages_op)
+from repro.kernels.kv_quant.ref import (dequantize_pages_ref,
+                                        quantize_pages_ref)
+
+__all__ = ["dequantize_pages_op", "dequantize_pages_ref",
+           "quantize_pages_op", "quantize_pages_ref"]

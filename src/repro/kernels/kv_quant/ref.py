@@ -1,0 +1,55 @@
+"""Reference oracles for the int8-quantized KV page heap.
+
+Quantization scheme (the ONE scheme every consumer shares — the Pallas
+kernels, the XLA twins, the attention dequant-gather paths, and the
+host swap tier all round-trip these exact bytes):
+
+  * symmetric int8 per (page, kv-head): for page p and KV head g,
+    scale s[p, g] = absmax(x[p, :, g, :]) / 127, stored f32;
+    q[p, t, g, d] = clip(round(x[p, t, g, d] / s[p, g]), -127, 127).
+  * all-zero pages keep scale 0 (dequant gives exact zeros), so the
+    reserved null page 0 stays provably all-zeros under quantization
+    exactly as it does in the f32 heap.
+  * dequant is q.astype(f32) * s — elementwise, no clipping, so a
+    quantize -> dequantize round trip is STABLE: requantizing a
+    dequantized page reproduces q bit-exactly and s to within one f32
+    ulp (absmax of q*s is 127*s, whose rescale by the rounded
+    reciprocal 1/127 rounds back to s up to the last mantissa bit).
+
+Error contract (documented tolerance, asserted by tests/test_kv_quant):
+each dequantized element differs from the source by at most
+0.5 * absmax / 127 — about 0.4% of the page's per-head dynamic range.
+Paged decode-token writes dequantize-modify-requantize a page, but the
+round-trip stability above means previously-written tokens move by at
+most an ulp per rewrite unless the page's absmax grows (a fresh token
+sets a new scale); the drift per rescale stays bounded by the same
+half-ULP, and a page is rewritten at most page_size times over its
+life.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# the one scale constant every quantizer shares (see quantize_pages_ref)
+INV_127 = np.float32(1.0 / 127.0)
+
+
+def quantize_pages_ref(x):
+    """[P, psz, Kv, dh] float -> (q int8 [P, psz, Kv, dh],
+    s float32 [P, Kv]) symmetric per-(page, kv-head) quantization."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=(1, 3))            # [P, Kv]
+    # explicit f32 reciprocal multiply (not `/ 127.0`): XLA rewrites
+    # constant divisions to reciprocal multiplies inside fused jits but
+    # not in eager ops, and bit-exact oracle/kernel agreement needs the
+    # SAME rounding on both paths
+    s = (absmax * INV_127).astype(jnp.float32)
+    safe = jnp.where(s > 0, s, 1.0)
+    q = jnp.clip(jnp.round(xf / safe[:, None, :, None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def dequantize_pages_ref(q, s):
+    """(q int8 [P, psz, Kv, dh], s f32 [P, Kv]) -> float32 pages."""
+    return q.astype(jnp.float32) * s[:, None, :, None]

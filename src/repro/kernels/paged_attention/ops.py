@@ -29,11 +29,20 @@ def on_tpu() -> bool:
 def paged_attention_op(q, k_pages, v_pages, page_table, positions, *,
                        window=None, use_kernel: bool | None = None):
     """Paged decode attention. q: [B, H, dh] (RoPE applied);
-    k_pages/v_pages: [n_pages, psz, Kv, dh]; page_table: [B, max_pages]
-    int32; positions: [B] int32. Returns [B, H, dh] float32."""
+    k_pages/v_pages: [n_pages, psz, Kv, dh], or the int8-quantized heap
+    ({"q": int8 pages, "s": f32 [n_pages, Kv]}, kernels/kv_quant) —
+    the kernel branch dispatches the fused-dequant quant twin, the XLA
+    branch dequantizes inside the table-directed gather
+    (nn.attention.gather_pages); page_table: [B, max_pages] int32;
+    positions: [B] int32. Returns [B, H, dh] float32."""
     if use_kernel is None:
         use_kernel = on_tpu()
     if use_kernel:
+        if isinstance(k_pages, dict):
+            return K.paged_decode_attention_quant(
+                q, k_pages["q"], k_pages["s"], v_pages["q"],
+                v_pages["s"], page_table, positions, window=window,
+                interpret=not on_tpu())
         return K.paged_decode_attention(q, k_pages, v_pages, page_table,
                                         positions, window=window,
                                         interpret=not on_tpu())

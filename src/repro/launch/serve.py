@@ -69,6 +69,20 @@ per-status counts, goodput, and degradation/fault stats:
       --reduced --stream --requests 16 --rate 200 --deadline-ms 60000 \
       --degrade --chaos-seed 0
 
+Tiered KV memory (--kv-quant / --swap-pages N, paged layout only):
+--kv-quant stores paged K/V as int8 with per-(page, kv-head) f32
+scales (kernels/kv_quant) — ~4x the pages at equal device bytes,
+dequantized on the fly in the paged attention kernels. --swap-pages N
+attaches a host-memory swap tier of N pages (serving/kv_tier.py):
+page pressure swaps the youngest request's exclusive pages out to
+host instead of preempt-and-recompute, and parked requests resume
+bit-identically; preemption remains the fallback when the tier is
+full. A tier stats line reports swap traffic and occupancy:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --stream --requests 16 --kv-layout paged \
+      --pool-pages 24 --kv-quant --swap-pages 64
+
 Self-speculative decode (--speculate K[,draft_tier]): decode ticks
 draft K tokens per active request under the (sparser) draft tier's
 pre-compiled executables, then verify all K+1 positions in ONE chunked
@@ -278,7 +292,8 @@ def serve_stream(cfg, params, args):
         runtime, n_slots=args.slots, cache_len=cache_len, seed=args.seed,
         prefill_batch=args.prefill_batch, page_size=args.page_size,
         n_pages=args.pool_pages, admission=admission, faults=faults,
-        prefix_cache=args.prefix_cache, speculative=speculative)
+        prefix_cache=args.prefix_cache, speculative=speculative,
+        swap_pages=args.swap_pages)
 
     # warmup compiles every entry point through the scheduler's own pool
     counts0 = sched.warmup()
@@ -335,6 +350,17 @@ def serve_stream(cfg, params, args):
               f"{pool.total_page_allocs} / frees {pool.total_page_frees} "
               f"| stranded@peak {pool.stranded_tokens_at_peak} tok | "
               f"preemptions {sched.n_preemptions}")
+        if args.kv_quant:
+            print(f"kv quant: int8 pages + per-(page, kv-head) f32 "
+                  f"scales (kernels/kv_quant)")
+    ts = sched.tier_stats()
+    if ts is not None:
+        print(f"kv tier: {ts['capacity_pages']} host pages | swap outs "
+              f"{ts['swap_outs']} ({ts['pages_swapped_out']} pages) / "
+              f"ins {ts['swap_ins']} ({ts['pages_swapped_in']} pages) | "
+              f"peak host used {ts['peak_used']} | host puts "
+              f"{ts['total_host_puts']} / frees {ts['total_host_frees']} "
+              f"| parked now {ts['parked']}")
     if sched.prefix_index is not None:
         ps = sched.prefix_stats()
         print(f"prefix sharing: hit rate {ps['hit_rate']:.0%} "
@@ -428,6 +454,18 @@ def main():
                         "reserved null page (default: full backing — "
                         "smaller values oversubscribe and exercise "
                         "preemption)")
+    p.add_argument("--kv-quant", action="store_true",
+                   help="paged layout: store K/V pages as int8 with "
+                        "per-(page, kv-head) f32 scales, dequantized "
+                        "on the fly in the paged attention kernels "
+                        "(kernels/kv_quant) — ~4x pages at equal "
+                        "device bytes")
+    p.add_argument("--swap-pages", type=int, default=0, metavar="N",
+                   help="paged stream mode: host swap tier capacity in "
+                        "pages (serving/kv_tier.py) — page pressure "
+                        "swaps the youngest request's exclusive pages "
+                        "to host instead of preempt-and-recompute; "
+                        "0 disables tiering")
     p.add_argument("--prefix-cache", action="store_true",
                    help="paged layout: refcounted prefix sharing — "
                         "admission maps the longest cached page-aligned "
@@ -506,6 +544,17 @@ def main():
         p.error("--trace requires --stream")
     if args.calibrate and not args.stream:
         p.error("--calibrate requires --stream")
+    if args.kv_quant:
+        if cfg.kv_layout != "paged":
+            p.error("--kv-quant requires --kv-layout paged")
+        cfg = cfg.with_(kv_quant=True)
+    if args.swap_pages:
+        if args.swap_pages < 0:
+            p.error("--swap-pages must be >= 0")
+        if cfg.kv_layout != "paged":
+            p.error("--swap-pages requires --kv-layout paged")
+        if not args.stream:
+            p.error("--swap-pages requires --stream")
     if args.prefix_cache and cfg.kv_layout != "paged":
         p.error("--prefix-cache requires --kv-layout paged")
     if args.prefix_cache and not args.stream:

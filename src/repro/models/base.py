@@ -111,6 +111,10 @@ class ModelConfig:
     kv_layout: str = "slot"
     kv_page_size: int = 0          # tokens per KV page (0 -> ff.block_size);
                                    # must divide ff.block_size
+    kv_quant: bool = False         # paged-only: store K/V pages as int8
+                                   # with per-(page, kv-head) f32 scales
+                                   # (kernels/kv_quant); attention
+                                   # dequantizes on the fly
     # --- numerics / misc ---
     param_dtype: str = "float32"
     optimizer: str = "adamw"       # adamw | adafactor

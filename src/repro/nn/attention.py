@@ -384,15 +384,39 @@ def attend_decode_ragged(params, x_tok, k_cache, v_cache, positions, *,
 # never rewrites, so sharing adds readers, never writers.
 
 
+def kv_page_size(pages):
+    """Tokens per page for either heap representation: raw
+    [n_pages, psz, Kv, dh] pages or the int8-quantized heap
+    ({"q": int8 pages, "s": f32 [n_pages, Kv]}, kernels/kv_quant)."""
+    return (pages["q"] if isinstance(pages, dict) else pages).shape[1]
+
+
+def kv_dtype(pages):
+    """Dtype attention outputs cast back to: the page dtype for the raw
+    heap, the f32 compute dtype for the int8-quantized heap (int8 is a
+    storage format, never a compute dtype)."""
+    return (pages["s"] if isinstance(pages, dict) else pages).dtype
+
+
 def gather_pages(pages, page_table):
-    """pages: [n_pages, psz, ...]; page_table: [B, max_pages] int32 ->
-    contiguous [B, max_pages * psz, ...] (page j of row b lands at
-    positions [j*psz, (j+1)*psz)). The ONE table-directed gather both
-    the prefill path and the decode oracle build on — the paged-vs-slot
-    bit-identity contract hangs off this single implementation."""
+    """pages: [n_pages, psz, ...] (or the quantized {"q", "s"} heap);
+    page_table: [B, max_pages] int32 -> contiguous
+    [B, max_pages * psz, ...] (page j of row b lands at positions
+    [j*psz, (j+1)*psz)). The ONE table-directed gather both the prefill
+    path and the decode oracle build on — the paged-vs-slot bit-identity
+    contract hangs off this single implementation. The quantized heap
+    dequantizes ON THE GATHERED VIEW (each row's pages only), never the
+    whole pool."""
     B, mp = page_table.shape
+    flat_ids = page_table.reshape(-1)
+    if isinstance(pages, dict):
+        q = jnp.take(pages["q"], flat_ids, axis=0)
+        s = jnp.take(pages["s"], flat_ids, axis=0)
+        flat = q.astype(jnp.float32) * s[:, None, :, None]
+        psz = q.shape[1]
+        return flat.reshape((B, mp * psz) + q.shape[2:])
     psz = pages.shape[1]
-    flat = jnp.take(pages, page_table.reshape(-1), axis=0)
+    flat = jnp.take(pages, flat_ids, axis=0)
     return flat.reshape((B, mp * psz) + pages.shape[2:])
 
 
@@ -422,6 +446,30 @@ def copy_kv_pages(cache, src_pages, dst_pages):
         lambda a: a.at[:, dst_pages].set(a[:, src_pages]), cache)
 
 
+def _write_pages_quant(pages, new, pids, active):
+    """Scatter whole freshly-quantized pages into the int8 heap. new:
+    [B, npb, psz, Kv, dh] f32 page payloads; pids: [B, npb] target
+    pages. Each written page gets a FRESH scale from its own payload
+    (the block covers the page end to end, so no stale bytes leak into
+    absmax); inactive rows write their target pages' existing (q, s)
+    back — an exact self-copy, so the null-page invariant holds."""
+    from repro.kernels.kv_quant import ops as KQ
+    B, npb = pids.shape
+    q_w, s_w = KQ.quantize_pages_op(
+        new.astype(jnp.float32).reshape((B * npb,) + new.shape[2:]))
+    q_w = q_w.reshape((B, npb) + q_w.shape[1:])
+    s_w = s_w.reshape((B, npb) + s_w.shape[1:])
+    if active is not None:
+        q_w = jnp.where(active[:, None, None, None, None], q_w,
+                        pages["q"][pids])
+        s_w = jnp.where(active[:, None, None], s_w, pages["s"][pids])
+    flat = pids.reshape(-1)
+    return {"q": pages["q"].at[flat].set(
+                q_w.reshape((B * npb,) + q_w.shape[2:])),
+            "s": pages["s"].at[flat].set(
+                s_w.reshape((B * npb,) + s_w.shape[2:]))}
+
+
 def write_kv_rows_paged(k_pages, v_pages, k_new, v_new, page_table, pos0s,
                         active=None):
     """Per-row paged block write: row b's [N] new K/V land on the
@@ -436,12 +484,18 @@ def write_kv_rows_paged(k_pages, v_pages, k_new, v_new, page_table, pos0s,
     active: optional [B] bool — inactive pad rows carry all-null tables
     and write their target pages' own content back (a deterministic
     self-copy: every pad row writes the identical null-page payload).
-    Requires psz | N."""
+    Requires psz | N. On the quantized heap each covered page is
+    quantized whole with a fresh per-(page, kv-head) scale."""
     B, N = k_new.shape[:2]
-    psz = k_pages.shape[1]
+    psz = kv_page_size(k_pages)
     npb = N // psz                        # pages written per block
     tpos = pos0s[:, None] // psz + jnp.arange(npb)[None, :]     # [B, npb]
     pids = jnp.take_along_axis(page_table, tpos, axis=1)        # [B, npb]
+    if isinstance(k_pages, dict):
+        k_r = k_new.reshape((B, npb, psz) + k_new.shape[2:])
+        v_r = v_new.reshape((B, npb, psz) + v_new.shape[2:])
+        return (_write_pages_quant(k_pages, k_r, pids, active),
+                _write_pages_quant(v_pages, v_r, pids, active))
     k_w = k_new.astype(k_pages.dtype).reshape((B, npb, psz)
                                               + k_new.shape[2:])
     v_w = v_new.astype(v_pages.dtype).reshape((B, npb, psz)
@@ -465,6 +519,28 @@ def write_kv_block_paged(k_pages, v_pages, k_new, v_new, page_table, pos0):
                                page_table[None], jnp.reshape(pos0, (1,)))
 
 
+def _write_tok_quant(pages, tok, pid, off, active):
+    """Single-token insert into the int8 heap via
+    dequantize -> insert -> zero-past-offset -> requantize. tok:
+    [B, Kv, dh]; pid/off: [B]. Zeroing slots > off guarantees the fresh
+    scale reflects only the valid prefix [0, off]; inactive rows keep
+    their page's existing (q, s) bit-exactly (self-copy)."""
+    from repro.kernels.kv_quant import ops as KQ
+    q_old = pages["q"][pid]                          # [B, psz, Kv, dh]
+    s_old = pages["s"][pid]                          # [B, Kv]
+    page = q_old.astype(jnp.float32) * s_old[:, None, :, None]
+    B, psz = page.shape[:2]
+    page = page.at[jnp.arange(B), off].set(tok.astype(jnp.float32))
+    slot = jnp.arange(psz)[None, :, None, None]
+    page = jnp.where(slot <= off[:, None, None, None], page, 0.0)
+    q_new, s_new = KQ.quantize_pages_op(page)
+    if active is not None:
+        q_new = jnp.where(active[:, None, None, None], q_new, q_old)
+        s_new = jnp.where(active[:, None], s_new, s_old)
+    return {"q": pages["q"].at[pid].set(q_new),
+            "s": pages["s"].at[pid].set(s_new)}
+
+
 def write_kv_tok_paged(k_pages, v_pages, k_new, v_new, page_table,
                        positions, active=None):
     """Per-sequence paged single-token write (ragged decode): row b's
@@ -473,8 +549,22 @@ def write_kv_tok_paged(k_pages, v_pages, k_new, v_new, page_table,
     rows write their target cell's own content back (prefilling /
     freed slots ride along in the fixed decode batch; their tables map
     distinct pages or the shared null page, so self-copies never race a
-    live write)."""
-    psz = k_pages.shape[1]
+    live write).
+
+    On the quantized heap: dequantize the target page, insert the token
+    at its offset, ZERO every slot past the offset (stale bytes beyond
+    the valid prefix must not poison the fresh absmax), requantize with
+    a fresh scale, and scatter both (q, s) leaves. The scale therefore
+    depends only on valid tokens; earlier tokens may requantize under
+    the new scale with error within the documented
+    0.5 * absmax / 127 contract (kernels/kv_quant/ref.py)."""
+    psz = kv_page_size(k_pages)
+    if isinstance(k_pages, dict):
+        pid = jnp.take_along_axis(page_table, (positions // psz)[:, None],
+                                  axis=1)[:, 0]                 # [B]
+        off = positions % psz
+        return (_write_tok_quant(k_pages, k_new[:, 0], pid, off, active),
+                _write_tok_quant(v_pages, v_new[:, 0], pid, off, active))
     pid = jnp.take_along_axis(page_table, (positions // psz)[:, None],
                               axis=1)[:, 0]                     # [B]
     off = positions % psz
@@ -503,7 +593,7 @@ def attend_block_rows_paged(params, x_block, k_pages, v_pages, page_table,
     if attn_sel is not None:
         from repro.kernels.block_sparse_attention import ops as BSA
         B, N = x_block.shape[:2]
-        S = page_table.shape[1] * k_pages.shape[1]
+        S = page_table.shape[1] * kv_page_size(k_pages)
         positions = pos0s[:, None] + jnp.arange(N)[None, :]
         theta = rope_theta if use_rope else None
         q = project_q(params, x_block, positions, theta)
@@ -519,7 +609,7 @@ def attend_block_rows_paged(params, x_block, k_pages, v_pages, page_table,
         o = BSA.block_sparse_prefill_paged_op(
             q, k_pages, v_pages, page_table, ids, cnts, pos0s, lens,
             blk=N, window=window)
-        return output_proj(params, o.astype(v_pages.dtype))
+        return output_proj(params, o.astype(kv_dtype(v_pages)))
     kc, vc = gather_kv_pages(k_pages, v_pages, page_table)
     return attend_block_rows(params, x_block, kc, vc, pos0s,
                              window=window, rope_theta=rope_theta,
@@ -540,7 +630,7 @@ def attend_decode_ragged_paged(params, x_tok, k_pages, v_pages, page_table,
     o = PA.paged_attention_op(q[:, 0], k_pages, v_pages, page_table,
                               positions, window=window,
                               use_kernel=use_kernel)
-    return output_proj(params, o[:, None].astype(v_pages.dtype))
+    return output_proj(params, o[:, None].astype(kv_dtype(v_pages)))
 
 
 def write_kv_ring(k_cache, v_cache, k_new, v_new, position, window: int):

@@ -19,7 +19,15 @@ Layering (see ROADMAP.md "Serving architecture"):
                                 (cfg.kv_layout="slot", the baseline)
       page_pool.PagedKVPool     block-granular page heap + per-request
                                 page tables (cfg.kv_layout="paged"),
-                                refcounted ownership (prefix sharing)
+                                refcounted ownership (prefix sharing);
+                                int8-quantized storage mode
+                                (cfg.kv_quant, kernels/kv_quant) and
+                                tier-aware swap accounting
+      kv_tier.HostKVTier        host-memory swap tier (swap_pages > 0):
+                                page pressure swaps the youngest
+                                request's exclusive pages out instead
+                                of preempt-and-recompute; parked
+                                requests resume bit-identically
       prefix_index.PrefixIndex  host-side (plan, token-chain) trie over
                                 cached pages (prefix_cache=True): prefix
                                 hits skip whole prefill blocks
@@ -37,6 +45,7 @@ from repro.serving.admission import AdmissionConfig, AdmissionController
 from repro.serving.cache_pool import KVSlotPool
 from repro.serving.engine import Engine, GenerationResult, StaticEngine
 from repro.serving.faults import FaultInjector
+from repro.serving.kv_tier import HostKVTier
 from repro.serving.page_pool import PagedKVPool
 from repro.serving.prefix_index import PrefixIndex
 from repro.serving.runtime import (DenseRuntime, ModelRuntime, MoeRuntime,
@@ -51,7 +60,8 @@ from repro.serving.trace import load_trace
 __all__ = [
     "AdmissionConfig", "AdmissionController",
     "ContinuousBatchingScheduler", "DenseRuntime", "Engine",
-    "FaultInjector", "GenerationResult", "KVSlotPool", "ModelRuntime",
+    "FaultInjector", "GenerationResult", "HostKVTier", "KVSlotPool",
+    "ModelRuntime",
     "MoeRuntime", "PagedKVPool", "PrefixIndex", "Request",
     "RequestOutput",
     "SchedulerStallError", "SpeculativeConfig", "StaticEngine",

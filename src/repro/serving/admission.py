@@ -53,9 +53,15 @@ class AdmissionConfig:
                           pages of the paged heap — truly free plus
                           reclaimable cached-idle prefix pages, which
                           surrender to eviction on demand; free slots
-                          of the slot pool). Pressure trips at
-                          `free_low`, recovery requires `free_high` —
-                          the band is the hysteresis.
+                          of the slot pool). With memory tiering on
+                          (scheduler swap_pages > 0) the fraction is
+                          CROSS-TIER: (device available + host free) /
+                          (device usable + host capacity) — swap
+                          capacity absorbs pressure before preemption,
+                          so it is headroom the watermarks should see.
+                          Pressure trips at `free_low`, recovery
+                          requires `free_high` — the band is the
+                          hysteresis.
     dwell_ticks:          minimum ticks between level changes (both
                           directions), so one bursty tick cannot walk
                           the whole ladder.

@@ -68,15 +68,17 @@ class Engine:
         self.runtime = make_runtime(cfg, params, plans=plans)
 
     def scheduler(self, n_slots: int, cache_len: int, seed: int = 0,
-                  admission=None, faults=None
+                  admission=None, faults=None, swap_pages: int = 0
                   ) -> ContinuousBatchingScheduler:
         """admission/faults: optional AdmissionController /
         FaultInjector (overload resilience; see serving/admission.py
-        and serving/faults.py)."""
+        and serving/faults.py). swap_pages: host swap tier capacity in
+        pages (paged layout; 0 = tiering off — see serving/kv_tier.py)."""
         return ContinuousBatchingScheduler(
             self.runtime, n_slots=n_slots, cache_len=cache_len, seed=seed,
             prefill_batch=self.prefill_batch, page_size=self.page_size,
-            n_pages=self.n_pages, admission=admission, faults=faults)
+            n_pages=self.n_pages, admission=admission, faults=faults,
+            swap_pages=swap_pages)
 
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
                  temperature: float = 0.0, seed: int = 0,

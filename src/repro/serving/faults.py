@@ -22,9 +22,14 @@ Fault classes (each with an independent per-tick probability):
                       (paged) or FREE slots (slot layout) from the
                       pool for `pressure_hold_ticks` ticks — admission
                       and page growth see a dry heap and must cope
-                      (skip, preempt, retry) without leaking. Stolen
-                      resources are always returned by a later tick or
-                      by `finalize()`, so leak accounting stays exact.
+                      (skip, preempt, retry) without leaking. When the
+                      scheduler runs a host swap tier, the same event
+                      steals a fraction of ITS free capacity too (kind
+                      "host_pages") — so chaos exercises the
+                      swap-path's preemption fallback, not just the
+                      device heap. Stolen resources are always
+                      returned by a later tick or by `finalize()`, so
+                      leak accounting stays exact across both tiers.
   slow ticks          advance an injected clock offset (the scheduler's
                       clock is wrapped via `wrap_clock`), simulating a
                       stalled host — this is what fires deadline
@@ -70,7 +75,9 @@ class FaultInjector:
         self.max_aborts = max_aborts
         self._offset = 0.0
         # (return_at_tick, kind, items): kind is "pages" or "slots"
-        self._stolen: List[Tuple[int, str, list]] = []
+        # (items = the stolen ids) or "host_pages" (items = a COUNT —
+        # host-tier capacity is fungible, there are no page ids)
+        self._stolen: List[Tuple[int, str, object]] = []
         self._tick = 0
         self.enabled = True
         # stats (chaos tests assert faults actually fired)
@@ -134,6 +141,7 @@ class FaultInjector:
 
     def _apply_pressure(self, sched) -> None:
         pool = sched.pool
+        fired = False
         if sched.paged:
             # steals only off the FREE list, which under refcounted
             # ownership holds exactly the refcount-zero uncached pages
@@ -143,19 +151,37 @@ class FaultInjector:
             n = int(pool.n_free_pages * self.pressure_frac)
             items = pool.steal_free_pages(n)
             kind = "pages"
+            # the same event squeezes the host swap tier (no extra RNG
+            # draws — the count derives from tier state), so chaos
+            # drives the swap path into its preemption fallback too.
+            # Host capacity is fungible: we steal a COUNT, not ids.
+            tier = getattr(sched, "host_tier", None)
+            if tier is not None:
+                hn = tier.steal_free_pages(
+                    int(tier.n_free * self.pressure_frac))
+                if hn:
+                    self._stolen.append(
+                        (self._tick + self.pressure_hold_ticks,
+                         "host_pages", hn))
+                    fired = True
         else:
             n = int(pool.n_free * self.pressure_frac)
             items = pool.steal_free_slots(n)
             kind = "slots"
-        if not items:
-            return
-        self._stolen.append((self._tick + self.pressure_hold_ticks,
-                             kind, items))
-        self.n_pressure_events += 1
+        if items:
+            self._stolen.append((self._tick + self.pressure_hold_ticks,
+                                 kind, items))
+            fired = True
+        if fired:
+            self.n_pressure_events += 1
 
     def _abort_random(self, sched, pick: int) -> None:
+        # parked (swapped-out) requests are cancellable clients too —
+        # their cancel must free BOTH tiers' pages
         rids = sorted([r.rid for r in sched.queue]
-                      + [s.req.rid for s in sched.active.values()])
+                      + [s.req.rid for s in sched.active.values()]
+                      + [s.req.rid
+                         for s in getattr(sched, "parked", {}).values()])
         if not rids:
             return
         rid = rids[pick % len(rids)]
@@ -172,9 +198,11 @@ class FaultInjector:
         for _, kind, items in due:
             self._restore(pool, kind, items)
 
-    def _restore(self, pool, kind: str, items: list) -> None:
+    def _restore(self, pool, kind: str, items) -> None:
         if kind == "pages":
             pool.restore_free_pages(items)
+        elif kind == "host_pages":
+            pool.host_tier.restore_free_pages(items)
         else:
             pool.restore_free_slots(items)
 
@@ -189,5 +217,7 @@ class FaultInjector:
             "aborts": self.n_aborts,
             "aborted_rids": list(self.aborted_rids),
             "clock_offset_s": round(self._offset, 6),
-            "outstanding_stolen": sum(len(i) for _, _, i in self._stolen),
+            "outstanding_stolen": sum(
+                i if isinstance(i, int) else len(i)
+                for _, _, i in self._stolen),
         }

@@ -1,0 +1,145 @@
+"""HostKVTier: the host-memory swap tier behind the paged KV heap.
+
+Memory tiering semantics (see ROADMAP.md for the full invariant list):
+a page is in exactly ONE of three states —
+
+  resident  device-heap page owned by a live (or prefix-cached)
+            request; the only state attention can read.
+  swapped   payload lives in THIS tier as host numpy arrays; the
+            device page was freed (counted in total_page_frees) and
+            the owning request is parked. Swap-in allocates FRESH
+            device pages (counted in total_page_allocs) and scatters
+            the payload back — physical page ids may change, which is
+            invisible through the table-directed gather.
+  cached    refcount-zero prefix pages held device-side by the LRU
+            reclaim list (serving/prefix_index.py). Cached pages are
+            NEVER swapped — under pressure they are evicted (dropped
+            and re-prefilled on next miss), because a cache whose hit
+            path pays a host round trip is slower than recompute here.
+
+Only the scheduler moves bytes between tiers, and only through the two
+fixed-width jitted runtime entries (`read_pages` / `write_pages`,
+warmed at warmup so swap traffic never recompiles). This module is
+pure host bookkeeping: numpy payload storage plus the same
+alloc/free-parity accounting discipline as PagedKVPool, extended so
+`total_page_allocs == total_page_frees` holds ACROSS tiers after a
+drain.
+
+The fault injector's synthetic page pressure steals from this tier's
+free capacity too (kind "host_pages"), forcing the swap path to hit
+its capacity wall and fall back to true preemption under chaos.
+"""
+from __future__ import annotations
+
+
+class HostKVTier:
+    """Fixed-capacity host-memory page store, keyed by opaque handles.
+
+    capacity_pages bounds how many pages may be swapped out at once
+    (the host tier is cheap but not free — serving configs size it like
+    any other memory budget). Payloads are per-page numpy pytrees
+    exactly as produced by ``runtime.read_pages`` (split along the page
+    axis), so a swap-in writes back bit-identical bytes.
+    """
+
+    def __init__(self, capacity_pages: int):
+        if capacity_pages <= 0:
+            raise ValueError(
+                f"host tier capacity must be positive, got {capacity_pages}")
+        self.capacity_pages = int(capacity_pages)
+        self._store: dict[int, object] = {}   # handle -> per-page payload
+        self._pages: dict[int, int] = {}      # handle -> page count
+        self._next_handle = 1
+        self.n_used = 0
+        # chaos hook: synthetic host-memory pressure (faults.py) steals
+        # free capacity and must restore every stolen page by finalize
+        self._stolen = 0
+        # counters (monotonic; stats() exposes them)
+        self.total_host_puts = 0      # pages swapped INTO this tier
+        self.total_host_frees = 0     # pages released from this tier
+        self.peak_used = 0
+
+    @property
+    def n_free(self) -> int:
+        return self.capacity_pages - self.n_used - self._stolen
+
+    def can_hold(self, n_pages: int) -> bool:
+        return 0 < n_pages <= self.n_free
+
+    def put(self, payloads) -> int:
+        """Store one swapped-out page group; returns its handle.
+
+        payloads: list of per-page numpy pytrees (one per swapped
+        page, in page-table order). Raises if the tier cannot hold
+        them — the caller must check ``can_hold`` first and fall back
+        to preemption."""
+        n = len(payloads)
+        if not self.can_hold(n):
+            raise RuntimeError(
+                f"host tier overflow: {n} pages into {self.n_free} free")
+        hid = self._next_handle
+        self._next_handle += 1
+        self._store[hid] = payloads
+        self._pages[hid] = n
+        self.n_used += n
+        self.total_host_puts += n
+        self.peak_used = max(self.peak_used, self.n_used)
+        return hid
+
+    def get(self, hid: int):
+        """Payloads for a handle (swap-in reads them before free())."""
+        return self._store[hid]
+
+    def pages_of(self, hid: int) -> int:
+        return self._pages[hid]
+
+    def free(self, hid: int) -> int:
+        """Release a handle's pages (after swap-in, or when the parked
+        owner is cancelled/expired). Returns the page count freed."""
+        n = self._pages.pop(hid)
+        del self._store[hid]
+        self.n_used -= n
+        self.total_host_frees += n
+        return n
+
+    # -- fault-injection hooks (serving/faults.py) ---------------------
+
+    def steal_free_pages(self, n: int) -> int:
+        """Synthetic host-memory pressure: remove up to n pages of free
+        capacity. Returns how many were actually stolen."""
+        n = max(0, min(int(n), self.n_free))
+        self._stolen += n
+        return n
+
+    def restore_free_pages(self, n: int) -> None:
+        if n > self._stolen:
+            raise RuntimeError(
+                f"restoring {n} host pages but only {self._stolen} stolen")
+        self._stolen -= n
+
+    # -- introspection -------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "capacity_pages": self.capacity_pages,
+            "n_used": self.n_used,
+            "n_free": self.n_free,
+            "n_handles": len(self._store),
+            "stolen": self._stolen,
+            "total_host_puts": self.total_host_puts,
+            "total_host_frees": self.total_host_frees,
+            "peak_used": self.peak_used,
+        }
+
+    def check_consistency(self) -> None:
+        used = sum(self._pages.values())
+        if used != self.n_used:
+            raise AssertionError(
+                f"host tier used {self.n_used} != handle sum {used}")
+        if self.n_used + self._stolen > self.capacity_pages:
+            raise AssertionError("host tier over capacity")
+        if self.total_host_puts - self.total_host_frees != self.n_used:
+            raise AssertionError(
+                "host tier put/free parity broken: "
+                f"{self.total_host_puts} puts, {self.total_host_frees} "
+                f"frees, {self.n_used} used")

@@ -46,12 +46,26 @@ scheduler paths that free a request mid-tick (EOS early-stop,
 preemption) cannot double-count stats or double-free pages.
 
 Accounting: `total_page_allocs` counts pops off the free list into a
-table (lazy `ensure` growth + `cow` copies); `total_page_frees` counts
-physical returns TO the free list (last-reference release of an
-uncached page, or `uncache` of an idle cached page). Shared mappings
-(`share`) touch neither — so allocs == frees once every request has
-drained AND the prefix index has been cleared, which is exactly the
-leak check the churn tests assert.
+table (lazy `ensure` growth + `cow` copies + swap-in reallocation);
+`total_page_frees` counts physical returns TO the free list
+(last-reference release of an uncached page, `uncache` of an idle
+cached page, or swap-out of an exclusive page whose payload moved to
+the host tier). Shared mappings (`share`) touch neither — so
+allocs == frees once every request has drained AND the prefix index
+has been cleared, which is exactly the leak check the churn tests
+assert — and it holds ACROSS tiers: a swapped-out page is one free
+(device) now and one alloc (fresh device page) at swap-in, while the
+host tier keeps its own put/free parity (serving/kv_tier.py).
+
+Memory tiering (serving/kv_tier.py): a held slot may be partially
+SWAPPED — its exclusively-owned uncached pages' payloads live in the
+host tier and the corresponding table entries are zeroed (the parked
+request keeps its slot and its shared/cached mappings; only the
+scheduler moves bytes, through the fixed-width jitted runtime
+entries). Swap NEVER touches shared (refcount > 1) or cached pages:
+those stay resident and mapped, because other readers' tables (or the
+prefix index) still point at the physical page id — swapping would
+either tear their reads or silently relocate a published page.
 """
 from __future__ import annotations
 
@@ -103,6 +117,13 @@ class PagedKVPool:
         # prefix-sharing stats
         self.total_page_shares = 0    # shared mappings handed out
         self.n_cow_pages = 0          # copy-on-write detaches
+        # host swap tier (serving/kv_tier.py); None = tiering disabled.
+        # _swap_state: slot -> {"hid": host handle, "js": zeroed table
+        # indices} for slots whose exclusive pages are swapped out
+        self.host_tier = None
+        self._swap_state: dict = {}
+        self.total_pages_swapped_out = 0
+        self.total_pages_swapped_in = 0
 
     @classmethod
     def create(cls, runtime, n_pages: int, page_size: int, n_slots: int,
@@ -168,8 +189,17 @@ class PagedKVPool:
             return
         self._held[slot] = False
         n = int(self.allocated[slot])
+        swapped = self._swap_state.pop(slot, None)
+        skip = set(swapped["js"]) if swapped else ()
         for j in range(n - 1, -1, -1):
+            if j in skip:
+                continue      # swapped entry: zeroed, payload on host
             self._decref(int(self.page_table[slot, j]))
+        if swapped is not None:
+            # the parked owner is gone (cancel / deadline expiry):
+            # release its host-tier pages too, keeping cross-tier
+            # put/free parity exact
+            self.host_tier.free(swapped["hid"])
         self.page_table[slot, :] = 0
         self.allocated[slot] = 0
         self.lengths[slot] = 0
@@ -326,6 +356,93 @@ class PagedKVPool:
         return (n_tokens <= self.cache_len
                 and self.pages_for(n_tokens) <= self.n_pages - 1)
 
+    # ------------------------------------------------- host swap tier
+
+    def attach_host_tier(self, tier) -> None:
+        """Enable memory tiering: swap-out moves exclusive page
+        payloads into `tier` (serving/kv_tier.HostKVTier) instead of
+        preempt-and-recompute."""
+        self.host_tier = tier
+
+    @property
+    def n_swapped_pages(self) -> int:
+        return sum(len(s["js"]) for s in self._swap_state.values())
+
+    def is_swapped(self, slot: int) -> bool:
+        return slot in self._swap_state
+
+    def swappable_pages(self, slot: int) -> List[Tuple[int, int]]:
+        """(table index, page) pairs of `slot` eligible for swap-out:
+        exclusively owned (refcount 1) and NOT cached. Shared and
+        published pages are swap-exempt — they stay resident and
+        mapped (other tables / the prefix index hold their physical
+        ids). Empty for already-swapped slots."""
+        if not self._held[slot]:
+            raise ValueError(f"slot {slot} is not held")
+        if slot in self._swap_state:
+            return []
+        out = []
+        for j in range(int(self.allocated[slot])):
+            page = int(self.page_table[slot, j])
+            if self.refcount[page] == 1 and not self.cached[page]:
+                out.append((j, page))
+        return out
+
+    def swap_out_commit(self, slot: int, js: List[int], hid: int) -> None:
+        """Finish a swap-out AFTER the device->host copy landed: free
+        the device pages (they join the free list — counted in
+        total_page_frees, the cross-tier parity contract), zero the
+        table entries, and remember the host handle. The caller
+        (scheduler) must have copied exactly these pages' payloads into
+        the tier under `hid`, in `js` order."""
+        if not self._held[slot]:
+            raise ValueError(f"slot {slot} is not held")
+        if slot in self._swap_state:
+            raise ValueError(f"slot {slot} is already swapped")
+        for j in js:
+            page = int(self.page_table[slot, j])
+            assert self.refcount[page] == 1 and not self.cached[page], \
+                f"swapping non-exclusive page {page}"
+            self.refcount[page] = 0
+            self._free_pages.append(page)
+            self.total_page_frees += 1
+            self.page_table[slot, j] = 0
+        self._swap_state[slot] = {"hid": hid, "js": list(js)}
+        self.total_pages_swapped_out += len(js)
+
+    def swap_in_alloc(self, slot: int) -> Optional[Tuple[int, List[int],
+                                                         List[int]]]:
+        """Re-back a parked slot's swapped entries with FRESH device
+        pages: returns (host handle, table indices, new page ids) for
+        the scheduler's host->device copy, or None — allocating
+        nothing — when the free heap cannot cover them. The physical
+        ids differ from the swapped-out ones; the table-directed gather
+        makes that invisible. Call `swap_in_commit` once the payload
+        write landed."""
+        state = self._swap_state.get(slot)
+        if state is None:
+            raise ValueError(f"slot {slot} is not swapped")
+        js = state["js"]
+        if len(self._free_pages) < len(js):
+            return None
+        pages = []
+        for j in js:
+            page = self._free_pages.popleft()
+            self.page_table[slot, j] = page
+            self.refcount[page] = 1
+            pages.append(page)
+        self.total_page_allocs += len(js)
+        self.max_pages_in_use = max(self.max_pages_in_use,
+                                    self.n_pages_in_use)
+        return state["hid"], list(js), pages
+
+    def swap_in_commit(self, slot: int) -> None:
+        """Finish a swap-in AFTER the host->device copy landed: release
+        the host-tier pages and forget the swap state."""
+        state = self._swap_state.pop(slot)
+        self.host_tier.free(state["hid"])
+        self.total_pages_swapped_in += len(state["js"])
+
     # ----------------------------------------- fault-injection pressure
 
     def steal_free_pages(self, n: int) -> list:
@@ -372,17 +489,33 @@ class PagedKVPool:
 
     def check_consistency(self) -> None:
         """Test hook: recompute refcounts from the held tables and
-        verify the free / reclaimable / referenced partition. Raises
-        AssertionError on any drift."""
+        verify the free / reclaimable / referenced partition (swapped
+        table entries are zeroed holes — they map no device page, so
+        they are skipped, and their payloads must still be on the host
+        tier). Raises AssertionError on any drift."""
         want = np.zeros(self.n_pages, np.int32)
         for slot in range(self.n_slots):
             if not self._held[slot]:
                 assert int(self.allocated[slot]) == 0, \
                     f"released slot {slot} still maps pages"
                 assert (self.page_table[slot] == 0).all()
+                assert slot not in self._swap_state, \
+                    f"released slot {slot} still has swap state"
                 continue
+            swapped = self._swap_state.get(slot)
+            skip = set(swapped["js"]) if swapped else ()
+            if swapped is not None:
+                assert self.host_tier is not None
+                assert (self.host_tier.pages_of(swapped["hid"])
+                        == len(swapped["js"]))
             for j in range(int(self.allocated[slot])):
+                if j in skip:
+                    assert int(self.page_table[slot, j]) == 0, \
+                        f"swapped entry ({slot}, {j}) still maps a page"
+                    continue
                 want[int(self.page_table[slot, j])] += 1
+        if self.host_tier is not None:
+            self.host_tier.check_consistency()
         assert (want == self.refcount).all(), \
             "refcounts drifted from table occupancy"
         free = set(self._free_pages)

@@ -207,6 +207,16 @@ class _JittedRuntime:
         # COW batches share one executable
         self._copy_pages = jax.jit(self._copy_pages_impl,
                                    donate_argnums=(0,))
+        # host-tier swap entries (serving/kv_tier.py): read gathers page
+        # payloads for device->host swap-out (no donation — the pool
+        # keeps the cache; freed pages are simply reusable afterwards),
+        # write scatters host payloads back on swap-in (cache donated).
+        # Page-id vectors are traced fixed width (scheduler pads with
+        # page 0 — null-page reads / zero-payload null writes), so every
+        # swap batch reuses one executable per direction.
+        self._read_pages = jax.jit(self._read_pages_impl)
+        self._write_pages = jax.jit(self._write_pages_impl,
+                                    donate_argnums=(0,))
         self._logits_at = jax.jit(self._logits_at_impl)
 
     # -- plan plumbing -------------------------------------------------
@@ -391,6 +401,13 @@ class _JittedRuntime:
     def _copy_pages_impl(self, cache, src, dst):
         return A.copy_kv_pages(cache, src, dst)
 
+    def _read_pages_impl(self, cache, pages):
+        return jax.tree.map(lambda a: jnp.take(a, pages, axis=1), cache)
+
+    def _write_pages_impl(self, cache, pages, payload):
+        return jax.tree.map(lambda a, p: a.at[:, pages].set(p),
+                            cache, payload)
+
     def _logits_at_impl(self, params, hidden, lengths):
         idx = jnp.clip(lengths - 1, 0, hidden.shape[1] - 1)
         h = jnp.take_along_axis(
@@ -434,8 +451,21 @@ class _JittedRuntime:
     def init_cache_paged(self, n_pages: int, page_size: int):
         # same spec factory as the slot cache with (batch, cache_len) ->
         # (n_pages, page_size): a page pool IS a slot pool whose "slots"
-        # are page_size long and table-composed per request
-        return self.model.init_cache(self.cfg, n_pages, page_size)
+        # are page_size long and table-composed per request. With
+        # cfg.kv_quant each K/V leaf becomes the int8 heap
+        # {"q": int8 [L, n_pages, psz, Kv, dh], "s": f32 [L, n_pages, Kv]}
+        # — zero-init, so page 0 (the null page) starts all-zeros with
+        # scale 0 in both representations. lax.scan and jax.tree.map
+        # thread dict leaves transparently, so the model modules are
+        # untouched.
+        cache = self.model.init_cache(self.cfg, n_pages, page_size)
+        if not self.cfg.kv_quant:
+            return cache
+        def quantize_leaf(a):
+            L_, np_, psz, kv, _dh = a.shape
+            return {"q": jnp.zeros(a.shape, jnp.int8),
+                    "s": jnp.zeros((L_, np_, kv), jnp.float32)}
+        return {k: quantize_leaf(v) for k, v in cache.items()}
 
     def prefill_blocks_paged(self, cache, tokens, page_tables, pos0s,
                              is_dense, lengths, active, plan=None):
@@ -516,6 +546,22 @@ class _JittedRuntime:
         return self._copy_pages(cache, jnp.asarray(src_pages, jnp.int32),
                                 jnp.asarray(dst_pages, jnp.int32))
 
+    def read_pages(self, cache, pages):
+        """Gather page payloads [*, W, ...] across every cache leaf
+        (page axis 1) for device->host swap-out. pages: [W] int32,
+        FIXED width (pad with 0 -> harmless null-page reads). The cache
+        is NOT donated: swap-out only copies bytes out; the pool then
+        recycles the still-resident source pages."""
+        return self._read_pages(cache, jnp.asarray(pages, jnp.int32))
+
+    def write_pages(self, cache, pages, payload):
+        """Scatter host payloads back into the heap on swap-in (the
+        inverse of `read_pages`; cache donated). Padding pairs page 0
+        with an all-zero payload — rewriting the null page's own
+        content — so one executable serves every swap-in width."""
+        return self._write_pages(cache, jnp.asarray(pages, jnp.int32),
+                                 payload)
+
     def logits_at(self, hidden, lengths):
         return self._logits_at(self.params, hidden,
                                jnp.asarray(lengths, jnp.int32))
@@ -539,6 +585,8 @@ class _JittedRuntime:
             "draft_steps_paged": jit_cache_size(self._draft_paged),
             "verify_chunk_paged": jit_cache_size(self._verify_paged),
             "copy_pages": jit_cache_size(self._copy_pages),
+            "read_pages": jit_cache_size(self._read_pages),
+            "write_pages": jit_cache_size(self._write_pages),
             "logits_at": jit_cache_size(self._logits_at),
         }
 

@@ -89,10 +89,12 @@ import time
 from collections import deque
 from typing import Dict, List, Optional
 
+import jax
 import numpy as np
 
 from repro.serving.admission import AdmissionController
 from repro.serving.cache_pool import KVSlotPool
+from repro.serving.kv_tier import HostKVTier
 from repro.serving.page_pool import PagedKVPool
 from repro.serving.prefix_index import PrefixIndex
 from repro.serving.runtime import ModelRuntime
@@ -202,7 +204,8 @@ class ContinuousBatchingScheduler:
                  admission: Optional[AdmissionController] = None,
                  faults=None, stall_ticks: int = 1000,
                  prefix_cache: bool = False,
-                 speculative: Optional[SpeculativeConfig] = None):
+                 speculative: Optional[SpeculativeConfig] = None,
+                 swap_pages: int = 0):
         self.runtime = runtime
         layout = getattr(runtime.cfg, "kv_layout", "slot")
         self.kv_layout = layout
@@ -234,6 +237,21 @@ class ContinuousBatchingScheduler:
         if prefix_cache and not self.paged:
             raise ValueError("prefix_cache requires kv_layout='paged' "
                              "(the slot layout has no shareable pages)")
+        # memory tiering (serving/kv_tier.py): a host swap tier of
+        # swap_pages pages behind the device heap. Under page pressure
+        # the scheduler swaps out the youngest request's exclusive
+        # pages (device->host, request PARKED keeping its slot) before
+        # resorting to preempt-and-recompute; parked requests resume
+        # oldest-first as pages free up, with bit-identical KV bytes.
+        if swap_pages and not self.paged:
+            raise ValueError("swap_pages requires kv_layout='paged' "
+                             "(the slot layout has no swappable pages)")
+        self.host_tier = (HostKVTier(swap_pages) if swap_pages else None)
+        if self.host_tier is not None:
+            self.pool.attach_host_tier(self.host_tier)
+        self.parked: Dict[int, _ActiveState] = {}   # slot -> state
+        self.n_swap_outs = 0          # park events (requests swapped out)
+        self.n_swap_ins = 0           # resume events
         self.prefix_cache = bool(prefix_cache)
         self.prefix_index = (PrefixIndex(self.pool) if self.prefix_cache
                              else None)
@@ -421,7 +439,7 @@ class ContinuousBatchingScheduler:
 
     @property
     def drained(self) -> bool:
-        return not self.queue and not self.active
+        return not self.queue and not self.active and not self.parked
 
     def tick(self) -> int:
         """One scheduling step; returns the number of tokens emitted.
@@ -429,7 +447,9 @@ class ContinuousBatchingScheduler:
         Order of the overload valves: fault injection (chaos runs),
         admission-pressure observation, deadline expiry (frees
         resources BEFORE admission so an expired request's pages seat
-        the next one), admit (with degradation), prefill, decode, and
+        the next one), swap-in resume (parked requests claim freed
+        pages BEFORE new admissions — they are older than anything
+        queued), admit (with degradation), prefill, decode, and
         finally the stall watchdog — `stall_ticks` consecutive ticks
         with pending work and no observable progress raise
         `SchedulerStallError` with a full state dump."""
@@ -439,6 +459,7 @@ class ContinuousBatchingScheduler:
         if self.admission is not None:
             self.admission.observe(len(self.queue), self._free_frac())
         self._expire_deadlines()
+        self._resume_swapped()
         self._admit()
         t0 = self.clock()
         before = self.n_prefill_ticks
@@ -467,11 +488,17 @@ class ContinuousBatchingScheduler:
         available pages of the paged heap (truly free PLUS reclaimable
         cached-idle pages — they surrender to eviction on demand, so
         counting them as pressure would make a popular cached prefix
-        read as an overloaded heap), free slots of the slot pool."""
+        read as an overloaded heap), free slots of the slot pool. With
+        a host tier attached its free capacity counts too: swap-out
+        absorbs pressure that would otherwise preempt, so admission
+        watermarks gate on BOTH tiers' headroom."""
         if self.paged:
             usable = self.pool.n_pages - 1
-            return (self.pool.n_available_pages / usable
-                    if usable else 0.0)
+            avail = self.pool.n_available_pages
+            if self.host_tier is not None:
+                usable += self.host_tier.capacity_pages
+                avail += self.host_tier.n_free
+            return avail / usable if usable else 0.0
         return self.pool.n_free / self.n_slots
 
     def _watchdog(self) -> None:
@@ -482,9 +509,10 @@ class ContinuousBatchingScheduler:
         # every way the scheduler can make progress moves one of these:
         # admissions/finishes change the queue/finished lengths, prefill
         # moves n_prefill_blocks, decode moves _total_emitted, and
-        # preemption churn moves n_preemptions
+        # preemption/swap churn moves n_preemptions/n_swap_outs/ins
         sig = (len(self.queue), len(self.active), len(self.finished),
                self.n_prefill_blocks, self.n_preemptions,
+               self.n_swap_outs, self.n_swap_ins,
                self._total_emitted)
         if sig == self._last_sig:
             self._stall_count += 1
@@ -534,6 +562,9 @@ class ContinuousBatchingScheduler:
                 n_reclaimable_pages=self.pool.n_reclaimable,
                 usable_pages=self.pool.n_pages - 1,
                 pages_in_use=self.pool.n_pages_in_use)
+        if self.host_tier is not None:
+            pool_state["host_tier"] = self.host_tier.stats()
+            pool_state["n_swapped_pages"] = self.pool.n_swapped_pages
         if self.prefix_index is not None:
             pool_state["prefix_index"] = self.prefix_stats()
         return {
@@ -551,6 +582,12 @@ class ContinuousBatchingScheduler:
                  "plan": self._plan_name(st.plan_idx)}
                 for st in sorted(self.active.values(),
                                  key=lambda s: s.seq)],
+            "parked": [
+                {"rid": st.req.rid, "slot": st.slot, "seq": st.seq,
+                 "phase": st.phase, "pos": st.pos,
+                 "out_tokens": len(st.out)}
+                for st in sorted(self.parked.values(),
+                                 key=lambda s: s.seq)],
             "pool": pool_state,
             "counters": {
                 "finished": len(self.finished),
@@ -559,6 +596,8 @@ class ContinuousBatchingScheduler:
                 "decode_steps": self.n_decode_steps,
                 "spec_ticks": self.n_spec_ticks,
                 "preemptions": self.n_preemptions,
+                "swap_outs": self.n_swap_outs,
+                "swap_ins": self.n_swap_ins,
                 "shed": self.n_shed, "timed_out": self.n_timed_out,
                 "cancelled": self.n_cancelled,
                 "degraded": self.n_degraded,
@@ -668,6 +707,27 @@ class ContinuousBatchingScheduler:
         if self.paged:
             self.pool.total_page_allocs = self.pool.total_page_frees = 0
             self.pool.max_pages_in_use = 0
+        if self.paged and self.host_tier is not None:
+            # pre-compile both swap byte-movers with a null round trip:
+            # read the null page's zeros, write them straight back —
+            # the pool is untouched and every later swap batch (any
+            # page count, chunked to width _npb) reuses these two
+            # executables
+            ids = np.zeros(self._npb, np.int32)
+            # payload crosses to HOST numpy exactly like a real swap:
+            # the jit cache keys device arrays and numpy arrays
+            # differently, so warming with a device payload would leave
+            # the first real swap-in to compile a second executable
+            payload = jax.tree.map(
+                np.asarray, self.runtime.read_pages(self.pool.cache, ids))
+            self.pool.cache = self.runtime.write_pages(
+                self.pool.cache, ids, payload)
+            self.n_swap_outs = self.n_swap_ins = 0
+            self.pool.total_pages_swapped_out = 0
+            self.pool.total_pages_swapped_in = 0
+            tier = self.host_tier
+            tier.total_host_puts = tier.total_host_frees = 0
+            tier.peak_used = 0
         if self.prefix_index is not None:
             # pre-compile the COW copy entry (all-null self-copy: page
             # 0 copied onto itself), then drop the throwaway request's
@@ -728,6 +788,10 @@ class ContinuousBatchingScheduler:
                     max(s.n_blocks * self._npb
                         - int(self.pool.allocated[s.slot]), 0)
                     for s in self.active.values() if s.phase == "prefill")
+                # parked requests resume BEFORE admission and need
+                # exactly their swapped page counts back — charge the
+                # gate so new admissions don't strand them parked
+                owed += self.pool.n_swapped_pages
                 # whole blocks the shared chain covers are never
                 # prefilled; a partial tail block still re-runs (its
                 # tail pages COW-detach), so it is charged in full
@@ -869,7 +933,9 @@ class ContinuousBatchingScheduler:
             effort=self._plan_name(st.plan_idx))
         if self.active.get(st.slot) is st:
             del self.active[st.slot]
-        self.pool.release(st.slot)
+        elif self.parked.get(st.slot) is st:
+            del self.parked[st.slot]
+        self.pool.release(st.slot)   # frees host-tier pages too if parked
         self._count_status(status)
 
     def cancel(self, rid: int, reason: str = "client cancelled") -> bool:
@@ -883,7 +949,7 @@ class ContinuousBatchingScheduler:
                 self.queue.remove(r)
                 self._finish_queued(r, "cancelled", reason)
                 return True
-        for st in list(self.active.values()):
+        for st in list(self.active.values()) + list(self.parked.values()):
             if st.req.rid == rid:
                 self._finish_abnormal(st, "cancelled", reason)
                 return True
@@ -921,6 +987,14 @@ class ContinuousBatchingScheduler:
             reason = expired(st.req, st.phase)
             if reason is not None:
                 self._finish_abnormal(st, "timed_out", reason)
+        # parked (swapped-out) requests age on the same deadlines: an
+        # expired one frees BOTH tiers' pages right here
+        for st in list(self.parked.values()):
+            if self.parked.get(st.slot) is not st:
+                continue
+            reason = expired(st.req, st.phase)
+            if reason is not None:
+                self._finish_abnormal(st, "timed_out", reason)
 
     # ---------------------------------------------- paged page pressure
 
@@ -933,22 +1007,120 @@ class ContinuousBatchingScheduler:
         (assigned_plan_idx), and temperature sampling replays its own
         (seed, rid) RNG stream on re-admission — only TTFT/latency
         suffer. Layout-independent (the FaultInjector forces it on the
-        slot layout too)."""
-        del self.active[st.slot]
+        slot layout too). Parked (swapped-out) victims release their
+        host-tier pages too (pool.release covers both tiers)."""
+        if self.active.get(st.slot) is st:
+            del self.active[st.slot]
+        elif self.parked.get(st.slot) is st:
+            del self.parked[st.slot]
         self.pool.release(st.slot)
         self.queue.appendleft(st.req)
         self.n_preemptions += 1
 
+    def _swap_out(self, st: _ActiveState) -> bool:
+        """Park `st`: move its exclusive (refcount-1, uncached) pages'
+        payloads to the host tier through the fixed-width jitted
+        `read_pages` entry, free the device pages, and remove it from
+        the active set — it keeps its slot (and its shared/cached
+        mappings, which are swap-exempt) and resumes with bit-identical
+        KV bytes once the heap recovers. Returns False — changing
+        nothing — when tiering is off, the tier is full, or `st` has no
+        exclusive pages to move (the caller then falls back to true
+        preemption)."""
+        tier = self.host_tier
+        if tier is None:
+            return False
+        swappable = self.pool.swappable_pages(st.slot)
+        if not swappable or not tier.can_hold(len(swappable)):
+            return False
+        js = [j for j, _ in swappable]
+        pages = [p for _, p in swappable]
+        hid = tier.put(self._read_page_payloads(pages))
+        self.pool.swap_out_commit(st.slot, js, hid)
+        del self.active[st.slot]
+        self.parked[st.slot] = st
+        self.n_swap_outs += 1
+        return True
+
+    def _read_page_payloads(self, pages: List[int]) -> list:
+        """Device->host copy of `pages` payloads, one per-page numpy
+        pytree each, through the single pre-warmed fixed-width
+        `read_pages` executable (chunks of _npb page ids, padded with
+        the null page — harmless extra reads)."""
+        W = self._npb
+        payloads = []
+        for i in range(0, len(pages), W):
+            chunk = pages[i:i + W]
+            ids = np.zeros(W, np.int32)
+            ids[:len(chunk)] = chunk
+            got = jax.tree.map(np.asarray,
+                               self.runtime.read_pages(self.pool.cache,
+                                                       ids))
+            for j in range(len(chunk)):
+                payloads.append(jax.tree.map(lambda a: a[:, j].copy(),
+                                             got))
+        return payloads
+
+    def _write_page_payloads(self, pages: List[int],
+                             payloads: list) -> None:
+        """Host->device scatter of swap-in payloads onto freshly
+        allocated `pages`, through the single pre-warmed fixed-width
+        `write_pages` executable (padding pairs page 0 with an all-zero
+        payload — rewriting the null page's own bytes)."""
+        W = self._npb
+        zero = jax.tree.map(np.zeros_like, payloads[0])
+        for i in range(0, len(pages), W):
+            chunk = pages[i:i + W]
+            ids = np.zeros(W, np.int32)
+            ids[:len(chunk)] = chunk
+            group = list(payloads[i:i + W])
+            group += [zero] * (W - len(chunk))
+            stacked = jax.tree.map(lambda *xs: np.stack(xs, axis=1),
+                                   *group)
+            self.pool.cache = self.runtime.write_pages(self.pool.cache,
+                                                       ids, stacked)
+
+    def _resume_swapped(self) -> None:
+        """Swap parked requests back in, OLDEST first, before any new
+        admission (a parked request predates everything still queued).
+        Each resume allocates fresh device pages (evicting cached-idle
+        prefixes if that unblocks it), scatters the host payloads back,
+        and releases the host pages. Stops at the first parked request
+        that cannot be re-backed this tick — younger parked requests
+        never jump an older one."""
+        if not self.parked:
+            return
+        for st in sorted(self.parked.values(), key=lambda s: s.seq):
+            while True:
+                res = self.pool.swap_in_alloc(st.slot)
+                if res is not None:
+                    break
+                if (self.prefix_index is not None
+                        and self.prefix_index.evict_lru()):
+                    continue
+                return          # heap still dry: retry next tick
+            hid, _js, pages = res
+            self._write_page_payloads(pages, self.host_tier.get(hid))
+            self.pool.swap_in_commit(st.slot)
+            del self.parked[st.slot]
+            self.active[st.slot] = st
+            self.n_swap_ins += 1
+
     def _ensure_pages(self, st: _ActiveState, n_total: int) -> bool:
         """Grow st's page table to n_total pages. While the free heap
-        is dry: first evict cached-but-unreferenced prefixes (LRU, a
-        whole index subtree per victim — reclaiming cold cache is
-        strictly cheaper than discarding live work), then preempt the
-        youngest STRICTLY-YOUNGER active request. Never evicts older
-        requests (the oldest always progresses, so any stream whose
-        requests individually fit the heap drains). Returns False when
-        st cannot be grown this tick (it is skipped, not evicted —
-        retried next tick)."""
+        is dry, the pressure valves fire cheapest-first: (1) evict
+        cached-but-unreferenced prefixes (LRU, a whole index subtree
+        per victim — reclaiming cold cache costs nothing live); (2)
+        SWAP OUT the youngest strictly-younger active request's
+        exclusive pages to the host tier (its work is preserved — it
+        parks and resumes with bit-identical KV); (3) only when the
+        host tier is full or useless, PREEMPT that victim outright
+        (discard-and-recompute); (4) as a last resort preempt the
+        youngest strictly-younger PARKED request (frees its host pages
+        and shared mappings). Never evicts older requests (the oldest
+        always progresses, so any stream whose requests individually
+        fit the heap drains). Returns False when st cannot be grown
+        this tick (it is skipped, not evicted — retried next tick)."""
         while True:
             if self.pool.ensure(st.slot, n_total):
                 return True
@@ -965,9 +1137,16 @@ class ContinuousBatchingScheduler:
                           if s.seq > st.seq
                           and self.pool.allocated[s.slot] > 0),
                          key=lambda s: s.seq, default=None)
-            if victim is None:
+            if victim is not None:
+                if not self._swap_out(victim):
+                    self._preempt(victim)
+                continue
+            parked_victim = max(
+                (s for s in self.parked.values() if s.seq > st.seq),
+                key=lambda s: s.seq, default=None)
+            if parked_victim is None:
                 return False
-            self._preempt(victim)
+            self._preempt(parked_victim)
 
     def _plan_of(self, st: _ActiveState):
         return self.plans[st.plan_idx] if self.plans else None
@@ -1417,6 +1596,21 @@ class ContinuousBatchingScheduler:
             blocks_skipped=self.n_shared_blocks,
             pages_shared=self.pool.total_page_shares,
             cow_pages=self.pool.n_cow_pages,
+        )
+        return s
+
+    def tier_stats(self) -> Optional[dict]:
+        """Memory-tiering accounting (serve.py stats line + the
+        kv_tiering bench section); None when the host tier is off."""
+        if self.host_tier is None:
+            return None
+        s = self.host_tier.stats()
+        s.update(
+            swap_outs=self.n_swap_outs,
+            swap_ins=self.n_swap_ins,
+            pages_swapped_out=self.pool.total_pages_swapped_out,
+            pages_swapped_in=self.pool.total_pages_swapped_in,
+            parked=len(self.parked),
         )
         return s
 

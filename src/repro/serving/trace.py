@@ -50,8 +50,10 @@ line):
 Unknown keys are ignored (real traces carry extra metadata). Sample
 traces live at benchmarks/traces/sample_trace.jsonl, — for the
 overload fields — benchmarks/traces/sample_overload.jsonl, for
-prefix_group — benchmarks/traces/sample_shared_prefix.jsonl, and —
-generation-heavy, for --speculate — sample_speculate.jsonl.
+prefix_group — benchmarks/traces/sample_shared_prefix.jsonl, —
+generation-heavy, for --speculate — sample_speculate.jsonl, and —
+long decodes driving KV page pressure, for the memory tier
+(--swap-pages) — sample_longdecode.jsonl.
 """
 from __future__ import annotations
 

@@ -1,0 +1,288 @@
+"""Tiered KV memory (serving/kv_tier.HostKVTier + the scheduler swap
+path): host-tier bookkeeping, swap-instead-of-preempt bit-identity of
+greedy output (dense + MoE, with and without chaos), the preemption
+fallback when the host tier cannot hold a victim, prefix-sharing
+interaction (shared/cached pages are never swapped), cancel/abort of
+parked requests, exact cross-tier page accounting after drain, and the
+zero-recompilation invariant with swap traffic in the stream."""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_config
+from repro.models.registry import get_model
+from repro.nn.param import init_params
+from repro.serving import (ContinuousBatchingScheduler, FaultInjector,
+                           HostKVTier, PagedKVPool, Request)
+from repro.serving.runtime import make_runtime
+
+PAGE = 8                       # divides the reduced block size (32)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def paged_runtime(dense_setup):
+    cfg, params = dense_setup
+    return make_runtime(cfg.with_(kv_layout="paged", kv_page_size=PAGE),
+                        params)
+
+
+def make_prompts(cfg, lengths, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, int(n)).tolist() for n in lengths]
+
+
+def run_stream(runtime, prompts, max_new=40, n_pages=13, swap_pages=0,
+               faults=None, n_slots=4, cache_len=96, **kw):
+    sched = ContinuousBatchingScheduler(
+        runtime, n_slots=n_slots, cache_len=cache_len, page_size=PAGE,
+        n_pages=n_pages, swap_pages=swap_pages, faults=faults, **kw)
+    for rid, p in enumerate(prompts):
+        sched.submit(Request(rid=rid, prompt=p, max_new=max_new))
+    outs = sched.run()
+    return {r: o.tokens for r, o in outs.items()}, sched
+
+
+def assert_tiers_clean(sched):
+    """Drained-stream invariants across BOTH tiers: exact device
+    alloc/free parity, empty host tier with put/free parity, no parked
+    stragglers, and internal consistency."""
+    pool = sched.pool
+    assert not sched.parked
+    assert pool.total_page_allocs == pool.total_page_frees
+    assert pool.n_swapped_pages == 0
+    pool.check_consistency()
+    tier = sched.host_tier
+    if tier is not None:
+        assert tier.n_used == 0
+        assert tier.total_host_puts == tier.total_host_frees
+        tier.check_consistency()
+
+
+# ------------------------------------------------------ host tier unit
+
+
+def test_host_tier_bookkeeping():
+    tier = HostKVTier(capacity_pages=8)
+    assert tier.n_free == 8 and tier.can_hold(8)
+    h1 = tier.put([{"k": np.ones(3)}, {"k": np.zeros(3)}])
+    h2 = tier.put([{"k": np.full(3, 2.0)}] * 5)
+    assert tier.n_used == 7 and tier.n_free == 1
+    assert tier.pages_of(h1) == 2 and tier.pages_of(h2) == 5
+    assert not tier.can_hold(2)
+    with pytest.raises(Exception):
+        tier.put([{"k": np.zeros(3)}] * 2)          # overflow refused
+    got = tier.get(h1)
+    assert len(got) == 2 and float(got[0]["k"][0]) == 1.0
+    assert tier.free(h1) == 2
+    assert tier.n_used == 5 and tier.total_host_frees == 2
+    # fault-injection surface: stolen capacity shrinks n_free only
+    assert tier.steal_free_pages(2) == 2
+    assert tier.n_free == 1 and tier.n_used == 5
+    assert tier.steal_free_pages(9) == 1            # clamped to free
+    assert tier.n_free == 0
+    tier.restore_free_pages(3)
+    assert tier.n_free == 3
+    tier.check_consistency()
+    assert tier.free(h2) == 5
+    assert tier.n_used == 0
+    assert tier.total_host_puts == tier.total_host_frees == 7
+    assert tier.peak_used == 7
+    tier.check_consistency()
+
+
+# ------------------------------------------------- swap bit-identity
+
+
+def test_swap_instead_of_preempt_bit_identical_dense(dense_setup,
+                                                     paged_runtime):
+    """The headline contract: under the SAME tight heap, a host tier
+    turns preempt-and-recompute into swap-and-resume — zero
+    preemptions, >= 1 swap cycle — and greedy output stays
+    bit-identical to both the ample-heap and the preempting run."""
+    cfg, _ = dense_setup
+    prompts = make_prompts(cfg, [40, 36, 33, 20, 18])
+    ample, s0 = run_stream(paged_runtime, prompts, n_pages=None)
+    tight, s1 = run_stream(paged_runtime, prompts, n_pages=13)
+    swap, s2 = run_stream(paged_runtime, prompts, n_pages=13,
+                          swap_pages=64)
+    assert s0.n_preemptions == 0 and s0.n_swap_outs == 0
+    assert s1.n_preemptions >= 1           # the heap really was tight
+    assert s2.n_swap_outs >= 1 and s2.n_swap_ins == s2.n_swap_outs
+    assert s2.n_preemptions == 0           # swap replaced every preempt
+    assert ample == tight == swap
+    for s in (s1, s2):
+        assert_tiers_clean(s)
+    ts = s2.tier_stats()
+    assert ts["pages_swapped_out"] == ts["pages_swapped_in"] > 0
+    assert ts["peak_used"] > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b"])
+def test_swap_bit_identical_moe(arch):
+    """MoE: parked rows ride the batched decode as inactive self-copies
+    and the routed dispatch stays dispatch-group invariant, so swap
+    on/off is bit-identical there too."""
+    cfg = get_config(arch, reduced=True).with_(kv_layout="paged",
+                                               kv_page_size=PAGE)
+    params = init_params(get_model(cfg).specs(cfg), jax.random.key(0))
+    runtime = make_runtime(cfg, params)
+    prompts = make_prompts(cfg, [40, 36, 33, 20, 18])
+    tight, s1 = run_stream(runtime, prompts, n_pages=13)
+    swap, s2 = run_stream(runtime, prompts, n_pages=13, swap_pages=64)
+    assert s1.n_preemptions >= 1
+    assert s2.n_swap_outs >= 1
+    assert tight == swap
+    assert_tiers_clean(s2)
+
+
+def test_preempt_fallback_when_tier_too_small(dense_setup,
+                                              paged_runtime):
+    """A host tier too small for any victim's footprint falls back to
+    preemption — output still bit-identical, both tiers still exact."""
+    cfg, _ = dense_setup
+    prompts = make_prompts(cfg, [40, 36, 33, 20, 18])
+    tight, s1 = run_stream(paged_runtime, prompts, n_pages=13)
+    tiny, s2 = run_stream(paged_runtime, prompts, n_pages=13,
+                          swap_pages=1)
+    assert s2.n_preemptions >= 1           # fallback really fired
+    assert tight == tiny
+    assert_tiers_clean(s2)
+
+
+# --------------------------------------------------------------- chaos
+
+
+def test_swap_under_chaos_bit_identical(dense_setup, paged_runtime):
+    """Chaos (forced preempts + synthetic pressure on BOTH tiers) over
+    the swap-enabled stream: output bit-identical to the fault-free
+    run, every stolen resource returned, both tiers exact at drain."""
+    cfg, _ = dense_setup
+    prompts = make_prompts(cfg, [40, 36, 33, 20, 18])
+    clean, _ = run_stream(paged_runtime, prompts, n_pages=13,
+                          swap_pages=8)
+    inj = FaultInjector(seed=7, p_preempt=0.1, p_pressure=0.3,
+                        p_slow=0.0, pressure_frac=0.9)
+    chaos, s = run_stream(paged_runtime, prompts, n_pages=13,
+                          swap_pages=8, faults=inj)
+    assert inj.n_pressure_events >= 1      # the host tier was squeezed
+    assert chaos == clean
+    assert inj.stats()["outstanding_stolen"] == 0
+    assert_tiers_clean(s)
+
+
+def test_cancel_parked_request_frees_both_tiers(dense_setup,
+                                                paged_runtime):
+    """Cancelling a PARKED (swapped-out) request releases its device
+    pages AND its host payload — the cross-tier leak case a cancel
+    path that only knows `active` would miss."""
+    cfg, _ = dense_setup
+    prompts = make_prompts(cfg, [40, 36, 33, 20, 18])
+    sched = ContinuousBatchingScheduler(
+        paged_runtime, n_slots=4, cache_len=96, page_size=PAGE,
+        n_pages=13, swap_pages=64)
+    for rid, p in enumerate(prompts):
+        sched.submit(Request(rid=rid, prompt=p, max_new=40))
+    while not sched.parked and not sched.drained:
+        sched.tick()
+    assert sched.parked                     # pressure parked someone
+    rid = next(iter(sched.parked.values())).req.rid
+    assert sched.host_tier.n_used > 0
+    assert sched.cancel(rid, reason="client gone")
+    assert sched.host_tier.n_used == 0      # host payload freed now
+    sched.run()
+    assert sched.finished[rid].status == "cancelled"
+    assert len(sched.finished) == len(prompts)
+    assert_tiers_clean(sched)
+
+
+# ------------------------------------------------------ prefix sharing
+
+
+def test_shared_and_cached_pages_never_swapped(dense_setup,
+                                               paged_runtime):
+    """Pool-level exclusivity contract: swappable_pages() returns only
+    refcount-1 uncached pages — pages mapped by other readers or held
+    by the prefix index must be evicted/CoW'd, never swapped."""
+    pool = PagedKVPool.create(paged_runtime, n_pages=16, page_size=PAGE,
+                              n_slots=2, max_pages=8)
+    pool.attach_host_tier(HostKVTier(16))
+    s1, s2 = pool.acquire(), pool.acquire()
+    assert pool.ensure(s1, 4)
+    p0, p1, p2 = (int(pool.page_table[s1, j]) for j in range(3))
+    pool.mark_cached(p0)                   # published prefix pages...
+    pool.mark_cached(p1)
+    pool.share(s2, [p0, p1])               # ...mapped by a second reader
+    assert pool.ensure(s2, 4)              # + 2 exclusive pages
+    pool.mark_cached(p2)                   # cached but single-reader
+    js1 = [j for j, _ in pool.swappable_pages(s1)]
+    assert js1 == [3]          # shared (0,1) and cached (2) excluded
+    js2 = [j for j, _ in pool.swappable_pages(s2)]
+    assert js2 == [2, 3]       # only its exclusive tail
+    pool.uncache(p2)
+    assert [j for j, _ in pool.swappable_pages(s1)] == [2, 3]
+    pool.uncache(p0)
+    pool.uncache(p1)
+    # still mapped by BOTH slots: refcount alone keeps them unswappable
+    assert [j for j, _ in pool.swappable_pages(s1)] == [2, 3]
+    pool.release(s1)
+    pool.release(s2)
+    pool.check_consistency()
+
+
+def test_prefix_cache_with_swap_bit_identical(dense_setup,
+                                              paged_runtime):
+    """Prefix sharing + swap under pressure: consumers of a shared
+    prefix emit bit-identical tokens with the tier on, cached
+    refcount-0 pages leave via EVICTION (never via swap — swap traffic
+    carries only exclusive pages), and the drained heap is exact once
+    the index lets go."""
+    cfg, _ = dense_setup
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab, 32).tolist()
+    prompts = [prefix + rng.integers(0, cfg.vocab, t).tolist()
+               for t in (16, 8, 12, 4)]
+    kw = dict(max_new=32, n_pages=14, prefix_cache=True)
+    off, s0 = run_stream(paged_runtime, prompts, **kw)
+    on, s1 = run_stream(paged_runtime, prompts, swap_pages=64, **kw)
+    assert s1.prefix_stats()["hits"] >= 1   # sharing really engaged
+    assert off == on
+    for s in (s0, s1):
+        pool = s.pool
+        assert (pool.refcount == 0).all()
+        if s.prefix_index is not None:
+            s.prefix_index.clear()
+        assert pool.total_page_allocs == pool.total_page_frees
+        pool.check_consistency()
+    assert_tiers_clean(s1)
+
+
+# ------------------------------------------------------ no recompilation
+
+
+def test_no_recompilation_with_swap_traffic(dense_setup, paged_runtime):
+    """compile_counts stay flat across a stream with real swap-out /
+    swap-in traffic: the fixed-width read_pages / write_pages entries
+    (warmed at warmup) serve every swap width via padding."""
+    cfg, _ = dense_setup
+    sched = ContinuousBatchingScheduler(
+        paged_runtime, n_slots=4, cache_len=96, page_size=PAGE,
+        n_pages=13, swap_pages=64)
+    counts = sched.warmup()
+    # >= 1: the shared module runtime may carry entries from other
+    # pool SHAPES; flatness below is what the contract demands
+    assert counts["read_pages"] >= 1
+    assert counts["write_pages"] >= 1
+    prompts = make_prompts(cfg, [40, 36, 33, 20, 18])
+    for rid, p in enumerate(prompts):
+        sched.submit(Request(rid=rid, prompt=p, max_new=40))
+    sched.run()
+    assert sched.n_swap_outs >= 1 and sched.n_swap_ins >= 1
+    assert paged_runtime.compile_counts() == counts
+    assert_tiers_clean(sched)

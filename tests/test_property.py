@@ -286,6 +286,66 @@ def test_refcounted_churn_ends_consistent(prefix_cache, seed, ops):
     assert pool.total_page_allocs == pool.total_page_frees
 
 
+@given(seed=st.integers(min_value=0, max_value=1 << 16),
+       ops=st.lists(st.sampled_from(
+           ["tick", "tick", "tick", "advance", "cancel0", "cancel1",
+            "cancel2", "cancel3", "preempt", "swap"]),
+           min_size=4, max_size=24))
+@settings(max_examples=8, deadline=None)
+def test_swap_churn_never_leaks_either_tier(seed, ops):
+    """Memory tiering under ANY interleaving of ticks, cancels, clock
+    jumps, forced preemptions, and forced swap-outs on an undersized
+    heap with a host tier attached: the drained run leaves BOTH tiers
+    exactly accounted — device allocs == frees, host puts == frees,
+    empty host tier, nothing parked, zeroed tables."""
+    from repro.serving import ContinuousBatchingScheduler, Request
+    cfg, runtime = _churn_runtime("paged")
+    clk = [0.0]
+    sched = ContinuousBatchingScheduler(
+        runtime, n_slots=2, cache_len=96, prefill_batch=2, n_pages=16,
+        swap_pages=16, clock=lambda: clk[0],
+        sleep=lambda dt: clk.__setitem__(0, clk[0] + dt))
+    rng = np.random.default_rng(seed)
+    for i in range(5):
+        sched.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab,
+                                int(rng.integers(8, 80))).tolist(),
+            max_new=int(rng.integers(1, 5)),
+            eos_id=(3 if rng.random() < 0.3 else None),
+            deadline_ms=(float(rng.integers(50, 2000))
+                         if rng.random() < 0.4 else None)))
+    for op in ops:
+        if op == "tick" and not sched.drained:
+            sched.tick()
+        elif op == "advance":
+            clk[0] += 0.25
+        elif op.startswith("cancel"):
+            sched.cancel(int(op[-1]))
+        elif op == "preempt" and sched.active:
+            sched._preempt(max(sched.active.values(),
+                               key=lambda s: s.seq))
+        elif op == "swap" and sched.active:
+            # force a park (False when nothing is swappable: fine)
+            sched._swap_out(max(sched.active.values(),
+                                key=lambda s: s.seq))
+    sched.run()
+    pool = sched.pool
+    assert len(sched.finished) == 5
+    assert not sched.parked
+    assert pool.total_acquires == pool.total_releases
+    assert sorted(pool._free_slots) == [0, 1]
+    pool.check_consistency()
+    assert pool.n_swapped_pages == 0
+    assert (pool.page_table == 0).all()
+    assert pool.n_free_pages == pool.n_pages - 1
+    assert pool.total_page_allocs == pool.total_page_frees
+    tier = sched.host_tier
+    assert tier.n_used == 0 and tier._stolen == 0
+    assert tier.total_host_puts == tier.total_host_frees
+    tier.check_consistency()
+
+
 # --------------------------------------- speculative decode (acceptance)
 
 
